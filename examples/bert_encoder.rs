@@ -1,0 +1,87 @@
+//! BERT encoder case study (paper §VI, Fig. 17): express one encoder
+//! block's matmul chain in the 7D representation (R=S=Q=1, sequence on P),
+//! run whole-chain overlap optimization, and execute the FFN matmuls
+//! functionally through the PJRT artifacts.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example bert_encoder
+//! ```
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::{cycles, speedup, Table};
+use fastoverlapim::runtime::{artifacts_available, default_artifacts_dir, DeviceClient};
+use fastoverlapim::util::rng::SplitMix64;
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    let budget: usize = std::env::var("BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(150);
+    let arch = Arch::dram_pim();
+    let net = zoo::bert_encoder();
+    println!("BERT encoder chain:");
+    for l in &net.layers {
+        println!("  {:>13}: [P={}, C={}] -> K={}", l.name, l.p, l.c, l.k);
+    }
+
+    let cfg = MapperConfig { budget, seed: 11, refine_passes: 2, ..Default::default() };
+    let search = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward);
+    let (seq_plan, ov_plan, tr_plan) = search.run_all_metrics(&net);
+    let base = seq_plan.total_sequential;
+
+    let mut t = Table::new(
+        "BERT encoder block (paper Fig. 17 counterpart)",
+        &["algorithm", "cycles", "vs Best Original"],
+    );
+    for (name, v) in [
+        ("Best Original", base),
+        ("Best Overlap", ov_plan.total_overlapped),
+        ("Best Transform", tr_plan.total_transformed),
+    ] {
+        t.row(vec![name.into(), cycles(v), speedup(base, v)]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "per-layer (Best Transform plan)",
+        &["layer", "sequential", "transformed", "speedup"],
+    );
+    for l in &tr_plan.layers {
+        t.row(vec![
+            l.name.clone(),
+            cycles(l.sequential_contribution()),
+            cycles(l.transformed_contribution()),
+            speedup(l.sequential_contribution(), l.transformed_contribution()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Functional FFN: x[128,768] -> ffn1(relu) -> ffn2 through PJRT, checked
+    // against a straightforward Rust matmul.
+    if !artifacts_available() {
+        println!("(artifacts not built — skipping the functional FFN run)");
+        return;
+    }
+    let (dev, _) = DeviceClient::spawn(default_artifacts_dir()).expect("device");
+    let mut rng = SplitMix64::new(5);
+    let mut gen = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| (rng.f64() as f32 - 0.5) * s).collect()
+    };
+    let x = gen(128 * 768, 1.0);
+    let w1 = gen(768 * 3072, 0.05);
+    let w2 = gen(3072 * 768, 0.05);
+    let h = dev.execute_f32("bert_ffn1", vec![x.clone(), w1.clone()]).expect("ffn1");
+    let y = dev.execute_f32("bert_ffn2", vec![h.clone(), w2.clone()]).expect("ffn2");
+
+    // Spot-check a few rows against a Rust reference.
+    let mut max_err = 0.0f32;
+    for row in [0usize, 17, 127] {
+        for col in [0usize, 100, 767] {
+            let mut acc = 0.0f64;
+            for k in 0..3072 {
+                acc += h[row * 3072 + k] as f64 * w2[k * 768 + col] as f64;
+            }
+            max_err = max_err.max((y[row * 768 + col] - acc as f32).abs());
+        }
+    }
+    println!("functional FFN through PJRT: y shape 128x768, spot-check max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-2, "FFN numerics drifted");
+}

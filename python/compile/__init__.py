@@ -1,0 +1,7 @@
+"""Build-time Python package: Layer-2 JAX model + Layer-1 Pallas kernels.
+
+Everything under ``python/`` runs exactly once, at ``make artifacts`` time,
+to AOT-lower the compute graph to HLO text under ``artifacts/``. The Rust
+coordinator loads those artifacts via PJRT; Python is never on the request
+path.
+"""

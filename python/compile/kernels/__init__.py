@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+The mapping framework decomposes every DNN layer into bank-level operation
+tiles; the kernels here compute exactly one such tile. On a TPU-shaped
+machine the paper's DRAM-row allocation becomes a BlockSpec HBM->VMEM
+schedule and the bit-serial column MACs become MXU dot products -- see
+DESIGN.md "Hardware adaptation".
+
+All kernels run under ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+the Rust runtime loads and runs.
+"""
+
+from .conv_tile import conv_tile
+from .matmul_tile import matmul_tile
+
+__all__ = ["conv_tile", "matmul_tile"]

@@ -1,0 +1,117 @@
+"""Pallas direct-convolution tile kernel.
+
+Computes one bank-level operation tile of a 2D convolution:
+
+    y[k, p, q] = act( sum_{c,r,s} x[c, p + r, q + s] * w[k, c, r, s] )
+
+Inputs arrive pre-padded (the halo is part of ``x``), mirroring how the
+PIM mapping materializes each bank's input data space: the Rust execution
+engine slices the padded feature map exactly like the mapping's input data
+spaces do.
+
+TPU adaptation of the paper's bit-serial PIM loop (DESIGN.md
+"Hardware adaptation"):
+
+* the bank's column lanes -> the MXU lanes of a ``[K_blk, C] @ [C, P*Q]``
+  dot per filter tap; the reduction that DRAM PIM does with serial
+  majority-adds is a single systolic pass;
+* the K dimension is gridded with a BlockSpec so each grid step stages one
+  ``K_blk`` slice of the weights into VMEM while the input tile stays
+  resident — the HBM<->VMEM schedule standing in for the paper's row
+  allocation;
+* accumulation is f32; ``K_BLOCK`` keeps the per-step VMEM footprint under
+  control (see ``vmem_bytes``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default K-block: multiple of 8 keeps the MXU sublane dimension aligned.
+K_BLOCK = 8
+
+
+def _kernel(x_ref, w_ref, o_ref, *, taps, relu):
+    """One grid step: a K-block of filters against the whole input tile.
+
+    ``x_ref``: [C, Hin, Win] (full tile, resident across grid steps)
+    ``w_ref``: [K_blk, C, R, S] (this grid step's filter block)
+    ``o_ref``: [K_blk, P, Q]
+    """
+    kb, _, p, q = w_ref.shape[0], w_ref.shape[1], o_ref.shape[1], o_ref.shape[2]
+    acc = jnp.zeros((kb, p * q), dtype=jnp.float32)
+    # Unrolled filter taps: each tap is one MXU-shaped dot
+    # [K_blk, C] @ [C, P*Q].
+    for r, s in taps:
+        patch = x_ref[:, r : r + p, s : s + q].reshape(x_ref.shape[0], p * q)
+        tap_w = w_ref[:, :, r, s]
+        acc += jnp.dot(
+            tap_w.astype(jnp.float32), patch.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    out = acc.reshape(kb, p, q)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("out_p", "out_q", "relu", "k_block")
+)
+def conv_tile(x, w, *, out_p, out_q, relu=True, k_block=K_BLOCK):
+    """Convolve a pre-padded input tile with a filter block.
+
+    Args:
+      x: [C, Hin, Win] pre-padded input tile, ``Hin >= out_p + R - 1``.
+      w: [K, C, R, S] filters.
+      out_p, out_q: output tile height/width.
+      relu: apply ReLU activation.
+      k_block: K-grid block size (clamped to K).
+
+    Returns:
+      [K, out_p, out_q] float32 output tile.
+    """
+    k, c, r, s = w.shape
+    assert x.shape[0] == c, f"channel mismatch: x{x.shape} w{w.shape}"
+    assert x.shape[1] >= out_p + r - 1 and x.shape[2] >= out_q + s - 1, (
+        f"input tile {x.shape} too small for {out_p}x{out_q} output with "
+        f"{r}x{s} filter"
+    )
+    kb = min(k_block, k)
+    assert k % kb == 0, f"K={k} not divisible by k_block={kb}"
+    taps = tuple((i, j) for i in range(r) for j in range(s))
+    kernel = functools.partial(_kernel, taps=taps, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // kb,),
+        in_specs=[
+            # The input tile is resident for every grid step.
+            pl.BlockSpec(x.shape, lambda i: (0, 0, 0)),
+            # Each grid step stages one K-block of filters into VMEM.
+            pl.BlockSpec((kb, c, r, s), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((kb, out_p, out_q), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, out_p, out_q), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def vmem_bytes(c, hin, win, k_block, r, s, out_p, out_q, itemsize=4):
+    """Estimated VMEM footprint of one grid step (perf model input for
+    DESIGN.md / EXPERIMENTS.md — interpret-mode wallclock is *not* a TPU
+    proxy, so the structural estimate is what we optimize)."""
+    x_bytes = c * hin * win * itemsize
+    w_bytes = k_block * c * r * s * itemsize
+    o_bytes = k_block * out_p * out_q * itemsize
+    acc_bytes = k_block * out_p * out_q * 4
+    return x_bytes + w_bytes + o_bytes + acc_bytes
+
+
+def mxu_utilization(c, k_block, out_p, out_q):
+    """Fraction of the 128x128 MXU a tap-dot occupies (structure metric)."""
+    m = min(k_block, 128) / 128.0
+    n = min(out_p * out_q, 128) / 128.0
+    k_dim = min(c, 128) / 128.0
+    return m * n * k_dim

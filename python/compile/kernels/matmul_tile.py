@@ -1,0 +1,57 @@
+"""Pallas blocked-matmul tile kernel (FC layers and the BERT case study).
+
+Computes ``y = act(x @ w)`` for one mapping tile with a 2D grid over
+(M-blocks, N-blocks); the contraction dimension stays whole per block —
+PIM banks hold the full reduction for one output column, and on the MXU a
+whole-K dot is one systolic pass per (bm, bn) block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLOCK = 128
+N_BLOCK = 128
+
+
+def _kernel(x_ref, w_ref, o_ref, *, relu):
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "m_block", "n_block"))
+def matmul_tile(x, w, *, relu=False, m_block=M_BLOCK, n_block=N_BLOCK):
+    """Blocked matmul: x [M, K] @ w [K, N] -> [M, N] float32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm = min(m_block, m)
+    bn = min(n_block, n)
+    assert m % bm == 0 and n % bn == 0, (
+        f"shape ({m},{n}) not divisible by blocks ({bm},{bn})"
+    )
+    kernel = functools.partial(_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def vmem_bytes(m_block, n_block, k, itemsize=4):
+    """Per-grid-step VMEM footprint estimate."""
+    return (m_block * k + k * n_block + 2 * m_block * n_block) * itemsize

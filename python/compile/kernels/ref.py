@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel output is checked against these at build time (pytest) —
+the core numerics signal of the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_tile_ref(x, w, *, out_p, out_q, relu=True):
+    """Reference for ``conv_tile``: lax conv on the pre-padded tile.
+
+    x: [C, Hin, Win]; w: [K, C, R, S] -> [K, out_p, out_q].
+    """
+    lhs = x[None].astype(jnp.float32)  # [1, C, Hin, Win]
+    rhs = w.astype(jnp.float32)  # [K, C, R, S]
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    out = out[:, :out_p, :out_q]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def matmul_tile_ref(x, w, *, relu=False):
+    """Reference for ``matmul_tile``."""
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def maxpool2x2_ref(x):
+    """2x2 max-pool on [K, P, Q] (P, Q even)."""
+    k, p, q = x.shape
+    return x.reshape(k, p // 2, 2, q // 2, 2).max(axis=(2, 4))
+
+
+def tiny_cnn_ref(image, w1, w2, w3, wfc):
+    """Pure-jnp forward of the tiny CNN used by the end-to-end driver.
+
+    image: [8, 16, 16]; convs pad=1 (SAME); maxpool 2x2 after conv2;
+    flatten K-major; fc -> [10] logits (no activation).
+    """
+
+    def conv_same(x, w):
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+        return conv_tile_ref(xp, w, out_p=x.shape[1], out_q=x.shape[2], relu=True)
+
+    h = conv_same(image, w1)  # [16, 16, 16]
+    h = conv_same(h, w2)  # [16, 16, 16]
+    h = maxpool2x2_ref(h)  # [16, 8, 8]
+    h = conv_same(h, w3)  # [32, 8, 8]
+    flat = h.reshape(1, -1)  # K-major flatten, [1, 2048]
+    return matmul_tile_ref(flat, wfc, relu=False)[0]  # [10]

@@ -1,0 +1,59 @@
+"""Layer-2 JAX model: the compute graphs the Rust coordinator executes.
+
+Each entry point composes the Layer-1 Pallas kernels into a layer- or
+tile-level function with *static* shapes; ``aot.py`` lowers them once to
+HLO text under ``artifacts/``. Shapes match the bank-level operation tiles
+the Rust mapper pins via ``MappingConstraint::interior_tile`` for the
+end-to-end driver.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import conv_tile, matmul_tile
+from .kernels.ref import maxpool2x2_ref
+
+# ---------------------------------------------------------------------------
+# Tile-level entry points (dispatched per bank-step by rust/src/exec).
+# ---------------------------------------------------------------------------
+
+
+def conv_tile_fwd(x, w, *, out_p, out_q, relu=True):
+    """One conv operation tile on a pre-padded input slice."""
+    return (conv_tile(x, w, out_p=out_p, out_q=out_q, relu=relu),)
+
+
+def fc_tile_fwd(x, w):
+    """One FC partial tile: x [1, Ct] @ w [Ct, K] (partial sums are
+    accumulated across C-steps by the Rust engine)."""
+    return (matmul_tile(x, w, relu=False),)
+
+
+def matmul_fwd(x, w, *, relu=False):
+    """A full matmul layer (BERT case study / quickstart)."""
+    return (matmul_tile(x, w, relu=relu),)
+
+
+# ---------------------------------------------------------------------------
+# Whole tiny-CNN forward (cross-check artifact: the Rust engine's
+# tile-composed output must match this monolithic lowering bit-for-bit up
+# to float tolerance).
+# ---------------------------------------------------------------------------
+
+
+def tiny_cnn_fwd(image, w1, w2, w3, wfc):
+    """Tiny-CNN forward composed from the Pallas kernels.
+
+    image [8,16,16] -> conv1 [16,16,16] -> conv2 [16,16,16]
+    -> maxpool [16,8,8] -> conv3 [32,8,8] -> flatten -> fc [10].
+    """
+
+    def conv_same(x, w):
+        xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)))
+        return conv_tile(xp, w, out_p=x.shape[1], out_q=x.shape[2], relu=True)
+
+    h = conv_same(image, w1)
+    h = conv_same(h, w2)
+    h = maxpool2x2_ref(h)
+    h = conv_same(h, w3)
+    flat = h.reshape(1, -1)
+    return (matmul_tile(flat, wfc, relu=False)[0],)

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles — the core compile-path signal.
+
+Hypothesis sweeps shapes; every kernel output must match its reference to
+float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_tile, matmul_tile
+from compile.kernels.ref import (
+    conv_tile_ref,
+    matmul_tile_ref,
+    maxpool2x2_ref,
+    tiny_cnn_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# conv_tile
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.sampled_from([1, 3, 8, 16]),
+    k=st.sampled_from([1, 4, 8, 16]),
+    out_p=st.integers(1, 6),
+    out_q=st.integers(1, 6),
+    r=st.sampled_from([1, 3]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_tile_matches_ref(c, k, out_p, out_q, r, relu, seed):
+    s = r
+    kx, kw = keys(seed, 2)
+    x = rand(kx, c, out_p + r - 1, out_q + s - 1)
+    w = rand(kw, k, c, r, s)
+    got = conv_tile(x, w, out_p=out_p, out_q=out_q, relu=relu)
+    want = conv_tile_ref(x, w, out_p=out_p, out_q=out_q, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_tile_oversized_input_slices():
+    # Input larger than the receptive extent: kernel uses the top-left.
+    kx, kw = keys(0, 2)
+    x = rand(kx, 4, 10, 10)
+    w = rand(kw, 8, 4, 3, 3)
+    got = conv_tile(x, w, out_p=4, out_q=4)
+    want = conv_tile_ref(x, w, out_p=4, out_q=4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_tile_k_block_gridding_invariant():
+    # Different K block sizes must not change the numbers.
+    kx, kw = keys(1, 2)
+    x = rand(kx, 8, 6, 6)
+    w = rand(kw, 16, 8, 3, 3)
+    a = conv_tile(x, w, out_p=4, out_q=4, k_block=4)
+    b = conv_tile(x, w, out_p=4, out_q=4, k_block=16)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_conv_tile_rejects_bad_shapes():
+    kx, kw = keys(2, 2)
+    x = rand(kx, 4, 4, 4)
+    w = rand(kw, 8, 4, 3, 3)
+    with pytest.raises(AssertionError):
+        conv_tile(x, w, out_p=4, out_q=4)  # input too small
+    with pytest.raises(AssertionError):
+        conv_tile(rand(kx, 5, 6, 6), w, out_p=4, out_q=4)  # C mismatch
+
+
+def test_conv_tile_relu_clamps():
+    kx, kw = keys(3, 2)
+    x = rand(kx, 4, 6, 6)
+    w = rand(kw, 4, 4, 3, 3)
+    out = conv_tile(x, w, out_p=4, out_q=4, relu=True)
+    assert float(out.min()) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# matmul_tile
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 8, 128, 256]),
+    k=st.sampled_from([1, 16, 256, 768]),
+    n=st.sampled_from([1, 10, 128, 256]),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tile_matches_ref(m, k, n, relu, seed):
+    kx, kw = keys(seed, 2)
+    x = rand(kx, m, k)
+    w = rand(kw, k, n)
+    got = matmul_tile(x, w, relu=relu)
+    want = matmul_tile_ref(x, w, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_block_sizes_invariant():
+    kx, kw = keys(4, 2)
+    x = rand(kx, 256, 64)
+    w = rand(kw, 64, 256)
+    a = matmul_tile(x, w, m_block=128, n_block=128)
+    b = matmul_tile(x, w, m_block=64, n_block=256)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_mismatch():
+    kx, kw = keys(5, 2)
+    with pytest.raises(AssertionError):
+        matmul_tile(rand(kx, 4, 8), rand(kw, 9, 4))
+
+
+# ---------------------------------------------------------------------------
+# tiny CNN composition
+# ---------------------------------------------------------------------------
+
+
+def tiny_params(seed=7):
+    k1, k2, k3, k4, k5 = keys(seed, 5)
+    return (
+        rand(k1, 8, 16, 16),
+        rand(k2, 16, 8, 3, 3) * 0.2,
+        rand(k3, 16, 16, 3, 3) * 0.2,
+        rand(k4, 32, 16, 3, 3) * 0.2,
+        rand(k5, 2048, 10) * 0.1,
+    )
+
+
+def test_tiny_cnn_model_matches_ref():
+    from compile import model
+
+    image, w1, w2, w3, wfc = tiny_params()
+    (got,) = model.tiny_cnn_fwd(image, w1, w2, w3, wfc)
+    want = tiny_cnn_ref(image, w1, w2, w3, wfc)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_maxpool_ref_shape_and_values():
+    x = jnp.arange(2 * 4 * 4, dtype=jnp.float32).reshape(2, 4, 4)
+    y = maxpool2x2_ref(x)
+    assert y.shape == (2, 2, 2)
+    assert float(y[0, 0, 0]) == 5.0  # max of [[0,1],[4,5]]

@@ -1,0 +1,71 @@
+"""Structural checks on the kernels: VMEM/MXU estimators and blocking
+invariants that DESIGN.md's hardware-adaptation targets rely on."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+# NB: the package re-exports the kernel *functions* under the module
+# names, so fetch the modules through importlib.
+import importlib
+
+ct = importlib.import_module("compile.kernels.conv_tile")
+mt = importlib.import_module("compile.kernels.matmul_tile")
+
+VMEM_BUDGET = 4 * 1024 * 1024  # 4 MiB target from DESIGN.md
+
+
+def test_conv_tile_vmem_within_budget_for_resnet_class_tiles():
+    # A 64-channel 56x56-class layer tile: C=64, 8x32 outputs, K block 8.
+    b = ct.vmem_bytes(c=64, hin=10, win=34, k_block=8, r=3, s=3, out_p=8, out_q=32)
+    assert b <= VMEM_BUDGET, f"conv tile VMEM {b} exceeds budget"
+
+
+def test_tiny_cnn_tiles_are_small():
+    for c in (8, 16):
+        b = ct.vmem_bytes(c=c, hin=6, win=6, k_block=4, r=3, s=3, out_p=4, out_q=4)
+        assert b < 64 * 1024
+
+
+def test_matmul_vmem_at_bert_shapes():
+    # bert_ffn2 is the largest contraction (K=3072).
+    b = mt.vmem_bytes(m_block=128, n_block=128, k=3072)
+    assert b <= VMEM_BUDGET
+
+
+def test_mxu_utilization_monotone_in_channels():
+    lo = ct.mxu_utilization(c=8, k_block=8, out_p=4, out_q=4)
+    hi = ct.mxu_utilization(c=64, k_block=8, out_p=8, out_q=16)
+    assert 0.0 < lo < hi <= 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 128, 256]),
+    k=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grid_covers_all_blocks(m, n, k, seed):
+    # Every output block must be written: compare against the oracle for a
+    # gridded (multi-block) shape.
+    from compile.kernels.ref import matmul_tile_ref
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), dtype="float32")
+    w = jax.random.normal(kw, (k, n), dtype="float32")
+    got = mt.matmul_tile(x, w, m_block=64, n_block=64)
+    want = matmul_tile_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_conv_kernel_taps_unrolled_match_single_tap():
+    # R=S=1 degenerates to a pointwise conv == matmul over channels.
+    from compile.kernels.ref import conv_tile_ref
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (16, 4, 4), dtype="float32")
+    w = jax.random.normal(kw, (8, 16, 1, 1), dtype="float32")
+    got = ct.conv_tile(x, w, out_p=4, out_q=4, relu=False)
+    want = conv_tile_ref(x, w, out_p=4, out_q=4, relu=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,107 @@
+//! Shared bench harness for the figure benches (the image has no
+//! criterion; each bench is a `harness = false` binary using this module).
+//!
+//! Environment knobs (all optional):
+//!
+//! * `FOPIM_BUDGET`   — valid mappings per layer (default per bench)
+//! * `FOPIM_SEED`     — search seed (default 7)
+//! * `FOPIM_REFINE`   — refinement passes (default 1)
+//! * `FOPIM_CSV`      — also print CSV blocks when set
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Table;
+use fastoverlapim::search::algorithm_total;
+use std::time::{Duration, Instant};
+
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn budget(default: u64) -> usize {
+    env_u64("FOPIM_BUDGET", default) as usize
+}
+
+pub fn seed() -> u64 {
+    env_u64("FOPIM_SEED", 7)
+}
+
+pub fn refine() -> usize {
+    env_u64("FOPIM_REFINE", 1) as usize
+}
+
+pub fn maybe_csv(t: &Table) {
+    if std::env::var("FOPIM_CSV").is_ok() {
+        print!("{}", t.to_csv());
+    }
+}
+
+/// Median-of-k wall-clock measurement.
+pub fn time_median<F: FnMut()>(k: usize, mut f: F) -> Duration {
+    let mut samples: Vec<Duration> = (0..k.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// The six paper algorithm totals for one (arch, net) under a strategy.
+#[derive(Debug, Clone)]
+pub struct AlgTotals {
+    pub totals: Vec<(Algorithm, u64)>,
+    pub seq_plan: NetworkPlan,
+    pub ov_plan: NetworkPlan,
+    pub tr_plan: NetworkPlan,
+}
+
+impl AlgTotals {
+    pub fn get(&self, alg: Algorithm) -> u64 {
+        self.totals.iter().find(|(a, _)| *a == alg).unwrap().1
+    }
+
+    pub fn best_original(&self) -> u64 {
+        self.get(Algorithm::BestOriginal)
+    }
+}
+
+/// Run the full baseline matrix (three searches, six reported totals).
+pub fn run_algorithms(
+    arch: &Arch,
+    net: &Network,
+    budget: usize,
+    seed: u64,
+    refine_passes: usize,
+    strategy: SearchStrategy,
+) -> AlgTotals {
+    let cfg = MapperConfig { budget, seed, refine_passes, ..Default::default() };
+    let search = NetworkSearch::new(arch, cfg, strategy);
+    let (seq_plan, ov_plan, tr_plan) = search.run_all_metrics(net);
+    let totals = Algorithm::ALL
+        .iter()
+        .map(|&a| (a, algorithm_total(a, &seq_plan, &ov_plan, &tr_plan)))
+        .collect();
+    AlgTotals { totals, seq_plan, ov_plan, tr_plan }
+}
+
+/// Standard "overall comparison" table for one network.
+pub fn overall_table(title: &str, t: &AlgTotals) -> Table {
+    let base = t.best_original();
+    let mut table = Table::new(title, &["algorithm", "cycles", "vs Best Original"]);
+    for (alg, v) in &t.totals {
+        table.row(vec![
+            alg.name().to_string(),
+            fastoverlapim::report::cycles(*v),
+            fastoverlapim::report::speedup(base, *v),
+        ]);
+    }
+    table
+}
+
+pub fn header(fig: &str, what: &str) {
+    println!("================================================================");
+    println!("{fig}: {what}");
+    println!("================================================================");
+}

@@ -1,0 +1,47 @@
+//! Fig. 10: overall performance comparison of the six algorithm variants
+//! on ResNet-18, VGG-16 and ResNet-50.
+//!
+//! Expected shape (paper): Best Overlap beats Best Original modestly
+//! (1.17x–1.6x); Best Transform wins big (4.6x–18.1x, growing with network
+//! size); Original/Overlap Transform (post-hoc transformation of mappings
+//! searched with the wrong metric) underperform Best Transform and can
+//! even lose to Best Original.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::speedup;
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 10", "overall comparison over algorithm variants");
+    let arch = Arch::dram_pim();
+    for (net, budget) in [
+        (zoo::resnet18(), common::budget(100)),
+        (zoo::vgg16(), common::budget(100)),
+        (zoo::resnet50(), common::budget(60)),
+    ] {
+        let t0 = std::time::Instant::now();
+        let totals = common::run_algorithms(
+            &arch,
+            &net,
+            budget,
+            common::seed(),
+            common::refine(),
+            SearchStrategy::Forward,
+        );
+        let table = common::overall_table(
+            &format!("{} (budget {budget}/layer, {:.1?})", net.name, t0.elapsed()),
+            &totals,
+        );
+        println!("{}", table.render());
+        common::maybe_csv(&table);
+        println!(
+            "{}: Best Transform vs Best Original = {}  (paper: 4.6x/5.0x/18.1x)\n",
+            net.name,
+            speedup(totals.best_original(), totals.get(Algorithm::BestTransform)),
+        );
+    }
+    println!("fig10 OK");
+}

@@ -1,0 +1,62 @@
+//! Fig. 12: per-layer performance of Best Overlap and Best Transform,
+//! normalized to Best Original (log-scale in the paper).
+//!
+//! Expected shape: Best Transform improves nearly every layer (paper:
+//! 2.3x–474x on ResNet-18, 4.8x–369x on ResNet-50, 3.8x–74.7x on VGG-16);
+//! Best Overlap helps only the layers whose production order happens to
+//! align.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Table;
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 12", "per-layer breakdown normalized to Best Original");
+    let arch = Arch::dram_pim();
+    for (net, budget) in [
+        (zoo::resnet18(), common::budget(100)),
+        (zoo::vgg16(), common::budget(100)),
+        (zoo::resnet50(), common::budget(60)),
+    ] {
+        let totals = common::run_algorithms(
+            &arch,
+            &net,
+            budget,
+            common::seed(),
+            common::refine(),
+            SearchStrategy::Forward,
+        );
+        let mut t = Table::new(
+            &format!("{} — per-layer speedup over Best Original", net.name),
+            &["layer", "Best Original", "Best Overlap", "Best Transform"],
+        );
+        let mut max_tr: f64 = 0.0;
+        let mut min_tr: f64 = f64::INFINITY;
+        for (i, base) in totals.seq_plan.layers.iter().enumerate() {
+            let b = base.sequential_contribution().max(1);
+            let ov = totals.ov_plan.layers[i].overlapped_contribution().max(1);
+            let tr = totals.tr_plan.layers[i].transformed_contribution().max(1);
+            let (sov, str_) = (b as f64 / ov as f64, b as f64 / tr as f64);
+            if i > 0 {
+                max_tr = max_tr.max(str_);
+                min_tr = min_tr.min(str_);
+            }
+            t.row(vec![
+                base.name.clone(),
+                "1.00x".into(),
+                format!("{sov:.2}x"),
+                format!("{str_:.2}x"),
+            ]);
+        }
+        println!("{}", t.render());
+        println!(
+            "{}: Best Transform per-layer range {min_tr:.1}x .. {max_tr:.1}x over Best Original\n",
+            net.name
+        );
+        common::maybe_csv(&t);
+    }
+    println!("fig12 OK");
+}

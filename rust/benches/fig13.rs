@@ -1,0 +1,63 @@
+//! Fig. 13: memory-capacity sensitivity — the same optimization run with
+//! 1, 2 and 4 HBM channels allocated per layer, all results normalized to
+//! the 1-channel Best Original.
+//!
+//! Expected shape (paper): transformation wins at every capacity; the
+//! 1-channel setting benefits most from Best Transform on ResNet-18 and
+//! VGG-16, while ResNet-50 peaks at 2–4 channels.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Table;
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 13", "memory-capacity sensitivity (1/2/4 channels per layer)");
+    let base_arch = Arch::dram_pim();
+    for (net, budget) in [
+        (zoo::resnet18(), common::budget(70)),
+        (zoo::vgg16(), common::budget(70)),
+        (zoo::resnet50(), common::budget(40)),
+    ] {
+        // Normalization base: 1-channel Best Original (like the paper).
+        let mut t = Table::new(
+            &format!("{} — normalized to 1-channel Best Original", net.name),
+            &[
+                "channels",
+                "Original Transform",
+                "Overlap Transform",
+                "Best Transform",
+                "Best Transform speedup",
+            ],
+        );
+        let mut base_1ch: Option<u64> = None;
+        for ch in [1u64, 2, 4] {
+            let arch = base_arch.with_channels_per_layer(ch);
+            let totals = common::run_algorithms(
+                &arch,
+                &net,
+                budget,
+                common::seed(),
+                common::refine(),
+                SearchStrategy::Forward,
+            );
+            let base = *base_1ch.get_or_insert(totals.best_original());
+            let norm = |v: u64| format!("{:.3}", v as f64 / base as f64);
+            t.row(vec![
+                ch.to_string(),
+                norm(totals.get(Algorithm::OriginalTransform)),
+                norm(totals.get(Algorithm::OverlapTransform)),
+                norm(totals.get(Algorithm::BestTransform)),
+                format!(
+                    "{:.1}x vs same-capacity Best Original",
+                    totals.best_original() as f64 / totals.get(Algorithm::BestTransform) as f64
+                ),
+            ]);
+        }
+        println!("{}", t.render());
+        common::maybe_csv(&t);
+    }
+    println!("fig13 OK");
+}

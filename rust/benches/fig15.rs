@@ -1,0 +1,75 @@
+//! Fig. 15: search-method comparison — Forward / Backward / Middle(PQK) /
+//! Middle(PQCK) on ResNet-18, VGG-16 and ResNet-50, normalized (paper) to
+//! "Best Original with the Backward method".
+//!
+//! Expected shape (paper): Backward loses without transformation but wins
+//! with it on ResNet-18/VGG-16 (1.1x/2.3x over Forward); ResNet-50 favors
+//! Middle with transformation and Forward without; chosen middle layers
+//! differ per heuristic.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Table;
+use fastoverlapim::search::NetworkSearch;
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 15", "search-method comparison");
+    let arch = Arch::dram_pim();
+    let strategies = [
+        SearchStrategy::Forward,
+        SearchStrategy::Backward,
+        SearchStrategy::Middle(MiddleHeuristic::LargestOutput),
+        SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
+    ];
+    for (net, budget) in [
+        (zoo::resnet18(), common::budget(60)),
+        (zoo::vgg16(), common::budget(60)),
+        (zoo::resnet50(), common::budget(40)),
+    ] {
+        // Report the paper's chosen-start-layer insight.
+        let chain = net.chain();
+        let m1 = NetworkSearch::middle_start(&net, &chain, MiddleHeuristic::LargestOutput);
+        let m2 = NetworkSearch::middle_start(&net, &chain, MiddleHeuristic::LargestOverall);
+        println!(
+            "{}: Middle starts at `{}` (PQK) / `{}` (PQCK)",
+            net.name, net.layers[chain[m1]].name, net.layers[chain[m2]].name
+        );
+
+        let mut t = Table::new(
+            &format!("{} — totals normalized to Backward Best Original", net.name),
+            &["method", "Best Original", "Best Overlap", "Best Transform"],
+        );
+        let mut base: Option<u64> = None;
+        let mut rows = Vec::new();
+        for strat in strategies {
+            let totals = common::run_algorithms(
+                &arch,
+                &net,
+                budget,
+                common::seed(),
+                common::refine(),
+                strat,
+            );
+            if strat == SearchStrategy::Backward {
+                base = Some(totals.best_original());
+            }
+            rows.push((strat, totals));
+        }
+        let base = base.unwrap() as f64;
+        for (strat, totals) in rows {
+            let norm = |v: u64| format!("{:.3}", v as f64 / base);
+            t.row(vec![
+                strat.name().to_string(),
+                norm(totals.get(Algorithm::BestOriginal)),
+                norm(totals.get(Algorithm::BestOverlap)),
+                norm(totals.get(Algorithm::BestTransform)),
+            ]);
+        }
+        println!("{}", t.render());
+        common::maybe_csv(&t);
+    }
+    println!("fig15 OK");
+}

@@ -1,0 +1,48 @@
+//! Fig. 16: architectural applicability — ResNet-18 on the FloatPIM-style
+//! ReRAM configuration, per-layer comparison.
+//!
+//! Expected shape (paper): the same machinery transfers; overall 1.16x for
+//! Best Overlap and 2.42x for Best Transform on ReRAM.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::{speedup, Table};
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 16", "ResNet-18 on ReRAM (FloatPIM) PIM");
+    let arch = Arch::reram_pim();
+    let net = zoo::resnet18();
+    let totals = common::run_algorithms(
+        &arch,
+        &net,
+        common::budget(80),
+        common::seed(),
+        common::refine(),
+        SearchStrategy::Forward,
+    );
+    let mut t = Table::new(
+        "per-layer speedup over Best Original (ReRAM)",
+        &["layer", "Best Overlap", "Best Transform"],
+    );
+    for (i, base) in totals.seq_plan.layers.iter().enumerate() {
+        let b = base.sequential_contribution().max(1);
+        let ov = totals.ov_plan.layers[i].overlapped_contribution().max(1);
+        let tr = totals.tr_plan.layers[i].transformed_contribution().max(1);
+        t.row(vec![
+            base.name.clone(),
+            format!("{:.2}x", b as f64 / ov as f64),
+            format!("{:.2}x", b as f64 / tr as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    common::maybe_csv(&t);
+    println!(
+        "overall: Best Overlap {} / Best Transform {} over Best Original (paper: 1.16x / 2.42x)",
+        speedup(totals.best_original(), totals.get(Algorithm::BestOverlap)),
+        speedup(totals.best_original(), totals.get(Algorithm::BestTransform)),
+    );
+    println!("fig16 OK");
+}

@@ -1,0 +1,50 @@
+//! Fig. 17: self-attention case study — one BERT-base encoder block
+//! expressed as a matmul chain (§VI: R=S=Q=1, sequence length on P).
+//!
+//! Expected shape (paper): 1.3x–12.0x per layer over Best Original, with
+//! the transformation adding little beyond plain overlap (shallow matmul
+//! nests already expose the parallelism).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::{speedup, Table};
+use fastoverlapim::workload::zoo;
+
+fn main() {
+    common::header("Fig. 17", "BERT encoder block per-layer comparison");
+    let arch = Arch::dram_pim();
+    let net = zoo::bert_encoder();
+    let totals = common::run_algorithms(
+        &arch,
+        &net,
+        common::budget(150),
+        common::seed(),
+        common::refine(),
+        SearchStrategy::Forward,
+    );
+    let mut t = Table::new(
+        "per-layer speedup over Best Original (BERT encoder)",
+        &["layer", "Best Overlap", "Best Transform"],
+    );
+    for (i, base) in totals.seq_plan.layers.iter().enumerate() {
+        let b = base.sequential_contribution().max(1);
+        let ov = totals.ov_plan.layers[i].overlapped_contribution().max(1);
+        let tr = totals.tr_plan.layers[i].transformed_contribution().max(1);
+        t.row(vec![
+            base.name.clone(),
+            format!("{:.2}x", b as f64 / ov as f64),
+            format!("{:.2}x", b as f64 / tr as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    common::maybe_csv(&t);
+    println!(
+        "overall: Best Overlap {} / Best Transform {} over Best Original \
+         (paper: per-layer 1.3x–12.0x; transform ≈ overlap on shallow matmul nests)",
+        speedup(totals.best_original(), totals.get(Algorithm::BestOverlap)),
+        speedup(totals.best_original(), totals.get(Algorithm::BestTransform)),
+    );
+    println!("fig17 OK");
+}

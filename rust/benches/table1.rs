@@ -1,0 +1,62 @@
+//! Table I: architectural parameters for Fast-OverlaPIM.
+//!
+//! Regenerates the paper's parameter table from the built-in presets and
+//! checks the derived bit-serial op costs against the paper's model
+//! (4n+1 AAPs per n-bit addition; a multiplication = n additions).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Table;
+
+fn main() {
+    common::header("Table I", "architectural parameters");
+    let arch = Arch::dram_pim();
+
+    let mut t = Table::new("HBM organization (per-layer slice)", &["parameter", "value", "paper"]);
+    t.row(vec!["channels/die".into(), "32 (machine) / 2 (slice)".into(), "32".into()]);
+    t.row(vec!["banks/channel".into(), "8".into(), "8".into()]);
+    t.row(vec!["bank size".into(), "32 MiB".into(), "32 MB".into()]);
+    println!("{}", t.render());
+
+    let ti = &arch.timing;
+    let mut t = Table::new("HBM timing (ns)", &["parameter", "value", "paper"]);
+    for (name, v, paper) in [
+        ("tRC", ti.t_rc, 45.0),
+        ("tRCD", ti.t_rcd, 16.0),
+        ("tRAS", ti.t_ras, 29.0),
+        ("tCL", ti.t_cl, 16.0),
+        ("tRRD", ti.t_rrd, 2.0),
+        ("tWR", ti.t_wr, 16.0),
+        ("tCCD_S", ti.t_ccd_s, 2.0),
+        ("tCCD_L", ti.t_ccd_l, 4.0),
+    ] {
+        assert_eq!(v, paper, "{name} diverges from Table I");
+        t.row(vec![name.into(), format!("{v}"), format!("{paper}")]);
+    }
+    println!("{}", t.render());
+
+    let e = &arch.energy;
+    let mut t = Table::new("HBM energy (pJ)", &["parameter", "value", "paper"]);
+    for (name, v, paper) in [
+        ("eACT", e.e_act, 909.0),
+        ("ePre-GSA", e.e_pre_gsa, 1.51),
+        ("ePost-GSA", e.e_post_gsa, 1.17),
+        ("eI/O", e.e_io, 0.80),
+    ] {
+        assert_eq!(v, paper, "{name} diverges from Table I");
+        t.row(vec![name.into(), format!("{v}"), format!("{paper}")]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new("derived bit-serial costs (16-bit)", &["quantity", "cycles"]);
+    t.row(vec!["AAP (tRC @ 1GHz)".into(), arch.aap_cycles().to_string()]);
+    t.row(vec!["full addition (4n+1 AAPs)".into(), arch.add_cycles(16).to_string()]);
+    t.row(vec!["multiplication (n additions)".into(), arch.mul_cycles(16).to_string()]);
+    t.row(vec!["configured add (Fig. 6)".into(), arch.op_cycles("add").to_string()]);
+    t.row(vec!["configured mul (Fig. 6)".into(), arch.op_cycles("mul").to_string()]);
+    println!("{}", t.render());
+    common::maybe_csv(&t);
+    println!("table1 OK");
+}

@@ -1,0 +1,200 @@
+//! YAML-subset (de)serialization of [`Arch`] — the paper's user-customized
+//! architecture configuration files (Figs. 6–7).
+
+use super::{Arch, ArchError, Energy, Level, PimOp, Timing};
+use crate::util::yaml::{self, Value};
+use std::fmt::Write as _;
+
+/// Parse an architecture from YAML-subset text. The format mirrors the
+/// paper's configuration structure; see `configs/dram_pim.yaml`.
+pub fn arch_from_yaml(source: &str) -> Result<Arch, ArchError> {
+    let doc = yaml::parse(source)?;
+    let name = req_str(&doc, "name")?;
+    let technology = req_str(&doc, "technology")?;
+    let clock_ns = doc.get("clock_ns").and_then(Value::as_f64).unwrap_or(1.0);
+    let host_bus =
+        doc.get("host_bus_bytes_per_cycle").and_then(Value::as_u64).unwrap_or(256);
+
+    let timing = match doc.get("timing") {
+        Some(t) => Timing {
+            t_rc: f(t, "t_rc", 45.0),
+            t_rcd: f(t, "t_rcd", 16.0),
+            t_ras: f(t, "t_ras", 29.0),
+            t_cl: f(t, "t_cl", 16.0),
+            t_rrd: f(t, "t_rrd", 2.0),
+            t_wr: f(t, "t_wr", 16.0),
+            t_ccd_s: f(t, "t_ccd_s", 2.0),
+            t_ccd_l: f(t, "t_ccd_l", 4.0),
+        },
+        None => Timing::default(),
+    };
+    let energy = match doc.get("energy") {
+        Some(e) => Energy {
+            e_act: f(e, "e_act", 909.0),
+            e_pre_gsa: f(e, "e_pre_gsa", 1.51),
+            e_post_gsa: f(e, "e_post_gsa", 1.17),
+            e_io: f(e, "e_io", 0.80),
+        },
+        None => Energy::default(),
+    };
+
+    let levels_val = doc
+        .get("levels")
+        .and_then(Value::as_list)
+        .ok_or_else(|| ArchError::Invalid("missing `levels` list".into()))?;
+    let mut levels = Vec::with_capacity(levels_val.len());
+    for lv in levels_val {
+        let mut pim_ops = Vec::new();
+        if let Some(ops) = lv.get("pim_ops").and_then(Value::as_list) {
+            for op in ops {
+                pim_ops.push(PimOp {
+                    name: req_str(op, "name")?,
+                    latency: req_u64(op, "latency")?,
+                    word_bits: req_u64(op, "word_bits")? as u32,
+                });
+            }
+        }
+        levels.push(Level {
+            name: req_str(lv, "name")?,
+            instances: req_u64(lv, "instances")?,
+            word_bits: lv.get("word_bits").and_then(Value::as_u64).unwrap_or(16) as u32,
+            read_bandwidth: lv.get("read_bandwidth").and_then(Value::as_u64).unwrap_or(0),
+            write_bandwidth: lv.get("write_bandwidth").and_then(Value::as_u64).unwrap_or(0),
+            entry_bits: lv.get("entry_bits").and_then(Value::as_u64).unwrap_or(0),
+            pim_ops,
+        });
+    }
+
+    let arch = Arch {
+        name,
+        technology,
+        levels,
+        timing,
+        energy,
+        host_bus_bytes_per_cycle: host_bus,
+        clock_ns,
+    };
+    arch.validate()?;
+    Ok(arch)
+}
+
+/// Emit an [`Arch`] back to the YAML-subset format (round-trips through
+/// [`arch_from_yaml`]). Used by `repro arch --dump` and the Table I bench.
+pub fn arch_to_yaml(arch: &Arch) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "name: {}", arch.name);
+    let _ = writeln!(s, "technology: {}", arch.technology);
+    let _ = writeln!(s, "clock_ns: {}", fmt_f64(arch.clock_ns));
+    let _ = writeln!(s, "host_bus_bytes_per_cycle: {}", arch.host_bus_bytes_per_cycle);
+    let _ = writeln!(s, "timing:");
+    let t = &arch.timing;
+    for (k, v) in [
+        ("t_rc", t.t_rc),
+        ("t_rcd", t.t_rcd),
+        ("t_ras", t.t_ras),
+        ("t_cl", t.t_cl),
+        ("t_rrd", t.t_rrd),
+        ("t_wr", t.t_wr),
+        ("t_ccd_s", t.t_ccd_s),
+        ("t_ccd_l", t.t_ccd_l),
+    ] {
+        let _ = writeln!(s, "  {k}: {}", fmt_f64(v));
+    }
+    let _ = writeln!(s, "energy:");
+    let e = &arch.energy;
+    for (k, v) in [
+        ("e_act", e.e_act),
+        ("e_pre_gsa", e.e_pre_gsa),
+        ("e_post_gsa", e.e_post_gsa),
+        ("e_io", e.e_io),
+    ] {
+        let _ = writeln!(s, "  {k}: {}", fmt_f64(v));
+    }
+    let _ = writeln!(s, "levels:");
+    for l in &arch.levels {
+        let _ = writeln!(s, "  - name: {}", l.name);
+        let _ = writeln!(s, "    instances: {}", l.instances);
+        let _ = writeln!(s, "    word_bits: {}", l.word_bits);
+        let _ = writeln!(s, "    read_bandwidth: {}", l.read_bandwidth);
+        let _ = writeln!(s, "    write_bandwidth: {}", l.write_bandwidth);
+        let _ = writeln!(s, "    entry_bits: {}", l.entry_bits);
+        if !l.pim_ops.is_empty() {
+            let _ = writeln!(s, "    pim_ops:");
+            for op in &l.pim_ops {
+                let _ = writeln!(s, "      - name: {}", op.name);
+                let _ = writeln!(s, "        latency: {}", op.latency);
+                let _ = writeln!(s, "        word_bits: {}", op.word_bits);
+            }
+        }
+    }
+    s
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String, ArchError> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ArchError::Invalid(format!("missing string key `{key}`")))
+}
+
+fn req_u64(v: &Value, key: &str) -> Result<u64, ArchError> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| ArchError::Invalid(format!("missing integer key `{key}`")))
+}
+
+fn f(v: &Value, key: &str, default: f64) -> f64 {
+    v.get(key).and_then(Value::as_f64).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn roundtrip_dram_preset() {
+        let a = presets::dram_pim();
+        let text = arch_to_yaml(&a);
+        let b = arch_from_yaml(&text).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_reram_preset() {
+        let a = presets::reram_pim();
+        let b = arch_from_yaml(&arch_to_yaml(&a)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_levels_rejected() {
+        assert!(arch_from_yaml("name: x\ntechnology: DRAM\n").is_err());
+    }
+
+    #[test]
+    fn defaults_fill_timing() {
+        let doc = "\
+name: minimal
+technology: DRAM
+levels:
+  - name: Bank
+    instances: 4
+    pim_ops:
+      - name: add
+        latency: 100
+        word_bits: 16
+";
+        let a = arch_from_yaml(doc).unwrap();
+        assert_eq!(a.timing, Timing::default());
+        assert_eq!(a.op_cycles("add"), 100);
+    }
+}

@@ -1,0 +1,336 @@
+//! PIM architecture descriptions (paper §IV-B, Figs. 6–7, Table I).
+//!
+//! An [`Arch`] is a hierarchical tree of storage [`Level`]s (e.g.
+//! DRAM → Channel → Bank → Column for the HBM2-PIM baseline, or
+//! ReRAM → Block → Column for FloatPIM). Each level carries the number of
+//! instances, word width, read/write bandwidth of its intra-memory link and
+//! — for the compute level — the supported PIM operations with their
+//! latencies, exactly mirroring the paper's user-customized configuration
+//! files. Configs can be built programmatically or parsed from the
+//! YAML-subset files in `configs/`.
+
+mod config;
+pub mod presets;
+
+pub use config::{arch_from_yaml, arch_to_yaml};
+
+use crate::util::yaml;
+
+/// A PIM operation supported at a level (`pim-ops` in the paper's configs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PimOp {
+    /// Operation name, e.g. `add` or `mul`.
+    pub name: String,
+    /// Latency of one bit-serial row-parallel operation across all columns,
+    /// in cycles of the architecture clock.
+    pub latency: u64,
+    /// Operand width the latency refers to.
+    pub word_bits: u32,
+}
+
+/// One storage level of the hierarchy, outermost (whole memory) first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Level {
+    /// Level name (`DRAM`, `Channel`, `Bank`, `Column`, ...).
+    pub name: String,
+    /// Total number of instances of this level across the machine
+    /// (the paper's configs use machine-wide totals, e.g. Bank: 131072).
+    pub instances: u64,
+    /// Word width stored at this level, bits.
+    pub word_bits: u32,
+    /// Read bandwidth of the link into this level, bytes/cycle
+    /// (0 = movement handled by the parent level, as in the paper's
+    /// Column example).
+    pub read_bandwidth: u64,
+    /// Write bandwidth, bytes/cycle.
+    pub write_bandwidth: u64,
+    /// Storage capacity per instance in bits (0 = unconstrained).
+    pub entry_bits: u64,
+    /// PIM operations supported when this level computes.
+    pub pim_ops: Vec<PimOp>,
+}
+
+impl Level {
+    /// Latency of the named PIM op, if supported here.
+    pub fn op_latency(&self, name: &str) -> Option<u64> {
+        self.pim_ops.iter().find(|o| o.name == name).map(|o| o.latency)
+    }
+}
+
+/// HBM timing parameters in nanoseconds (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    pub t_rc: f64,
+    pub t_rcd: f64,
+    pub t_ras: f64,
+    pub t_cl: f64,
+    pub t_rrd: f64,
+    pub t_wr: f64,
+    pub t_ccd_s: f64,
+    pub t_ccd_l: f64,
+}
+
+impl Default for Timing {
+    /// Table I HBM2 values.
+    fn default() -> Self {
+        Self {
+            t_rc: 45.0,
+            t_rcd: 16.0,
+            t_ras: 29.0,
+            t_cl: 16.0,
+            t_rrd: 2.0,
+            t_wr: 16.0,
+            t_ccd_s: 2.0,
+            t_ccd_l: 4.0,
+        }
+    }
+}
+
+/// Per-command energies in picojoules (paper Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Energy {
+    pub e_act: f64,
+    pub e_pre_gsa: f64,
+    pub e_post_gsa: f64,
+    pub e_io: f64,
+}
+
+impl Default for Energy {
+    /// Table I HBM2 values.
+    fn default() -> Self {
+        Self { e_act: 909.0, e_pre_gsa: 1.51, e_post_gsa: 1.17, e_io: 0.80 }
+    }
+}
+
+/// A complete PIM architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    /// Technology tag, e.g. `DRAM` or `ReRAM` (informational; behaviour is
+    /// fully determined by the level parameters).
+    pub technology: String,
+    /// Storage hierarchy, outermost first. The *compute level* is the level
+    /// whose `pim_ops` is non-empty closest to the leaves' parent (Bank for
+    /// DRAM-PIM, Block for FloatPIM); overlap analysis happens there
+    /// (paper §IV-H).
+    pub levels: Vec<Level>,
+    /// Table I timing (used to derive AAP latency when a config does not
+    /// override op latencies).
+    pub timing: Timing,
+    /// Table I energies.
+    pub energy: Energy,
+    /// Host bus bandwidth between stacks, bytes/cycle equivalent.
+    pub host_bus_bytes_per_cycle: u64,
+    /// Architecture clock in nanoseconds per cycle (1.0 = 1 GHz).
+    pub clock_ns: f64,
+}
+
+/// Errors raised by architecture validation / parsing.
+#[derive(Debug)]
+pub enum ArchError {
+    Parse(yaml::ParseError),
+    Invalid(String),
+}
+
+impl std::fmt::Display for ArchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArchError::Parse(e) => write!(f, "{e}"),
+            ArchError::Invalid(m) => write!(f, "invalid architecture: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ArchError {}
+
+impl From<yaml::ParseError> for ArchError {
+    fn from(e: yaml::ParseError) -> Self {
+        ArchError::Parse(e)
+    }
+}
+
+impl Arch {
+    /// Index of the compute level: the innermost level that supports PIM ops.
+    pub fn compute_level(&self) -> usize {
+        self.levels
+            .iter()
+            .rposition(|l| !l.pim_ops.is_empty())
+            .expect("validated arch has a compute level")
+    }
+
+    /// Fan-out of level `i`: instances of level `i` per instance of its
+    /// parent (level `i-1`). Level 0 fan-out is its instance count.
+    pub fn fanout(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.levels[0].instances
+        } else {
+            self.levels[i].instances / self.levels[i - 1].instances
+        }
+    }
+
+    /// Number of column lanes under one compute-level instance — the
+    /// row-parallel width of a bank (all columns compute in lock-step,
+    /// §III-A).
+    pub fn lanes_per_compute_instance(&self) -> u64 {
+        let c = self.compute_level();
+        if c + 1 < self.levels.len() {
+            self.levels[self.levels.len() - 1].instances / self.levels[c].instances
+        } else {
+            1
+        }
+    }
+
+    /// Total compute-level instances machine-wide.
+    pub fn compute_instances(&self) -> u64 {
+        self.levels[self.compute_level()].instances
+    }
+
+    /// Latency in cycles of one AAP (activate-activate-precharge) command
+    /// derived from Table I timing: an AAP occupies tRAS + (tRC − tRAS)
+    /// = tRC of the bank (paper §III-A, [33]).
+    pub fn aap_cycles(&self) -> u64 {
+        (self.timing.t_rc / self.clock_ns).ceil() as u64
+    }
+
+    /// Cycles for one n-bit bit-serial full addition: `4n + 1` AAPs
+    /// (paper §IV-C).
+    pub fn add_cycles(&self, word_bits: u32) -> u64 {
+        (4 * word_bits as u64 + 1) * self.aap_cycles()
+    }
+
+    /// Cycles for one n-bit bit-serial multiplication: n sequential
+    /// shifted additions (paper §IV-C: "each multiplication consists of
+    /// sequential full additions").
+    pub fn mul_cycles(&self, word_bits: u32) -> u64 {
+        word_bits as u64 * self.add_cycles(word_bits)
+    }
+
+    /// Effective latency of the named op at the compute level: explicit
+    /// config value if present, otherwise derived from Table I timing.
+    pub fn op_cycles(&self, name: &str) -> u64 {
+        let level = &self.levels[self.compute_level()];
+        if let Some(l) = level.op_latency(name) {
+            return l;
+        }
+        let bits = level.word_bits.max(1);
+        match name {
+            "add" => self.add_cycles(bits),
+            "mul" => self.mul_cycles(bits),
+            other => panic!("unknown pim op `{other}`"),
+        }
+    }
+
+    /// Validate structural invariants. Called by the parser and available
+    /// for programmatically-built configs.
+    pub fn validate(&self) -> Result<(), ArchError> {
+        if self.levels.is_empty() {
+            return Err(ArchError::Invalid("no levels".into()));
+        }
+        for (i, l) in self.levels.iter().enumerate() {
+            if l.instances == 0 {
+                return Err(ArchError::Invalid(format!("level `{}` has 0 instances", l.name)));
+            }
+            if i > 0 && l.instances % self.levels[i - 1].instances != 0 {
+                return Err(ArchError::Invalid(format!(
+                    "level `{}` instances ({}) not a multiple of parent `{}` ({})",
+                    l.name,
+                    l.instances,
+                    self.levels[i - 1].name,
+                    self.levels[i - 1].instances
+                )));
+            }
+        }
+        if !self.levels.iter().any(|l| !l.pim_ops.is_empty()) {
+            return Err(ArchError::Invalid("no level supports pim ops".into()));
+        }
+        if self.clock_ns <= 0.0 {
+            return Err(ArchError::Invalid("clock_ns must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Scale the number of channels allocated to a layer: returns a copy of
+    /// the architecture whose per-layer slice has `channels` channels
+    /// (used by the Fig. 13 memory-capacity sensitivity study).
+    pub fn with_channels_per_layer(&self, channels: u64) -> Arch {
+        let mut arch = self.clone();
+        // Find the channel level by name, fall back to level 1.
+        let ci = arch
+            .levels
+            .iter()
+            .position(|l| l.name.eq_ignore_ascii_case("channel"))
+            .unwrap_or(1.min(arch.levels.len() - 1));
+        let old_channels = arch.levels[ci].instances;
+        assert!(channels > 0, "need at least one channel");
+        for l in arch.levels.iter_mut().skip(ci) {
+            let per_channel = l.instances / old_channels;
+            l.instances = per_channel * channels;
+        }
+        arch.name = format!("{}-{}ch", arch.name, channels);
+        arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_preset_is_valid() {
+        let a = presets::dram_pim();
+        a.validate().unwrap();
+        assert_eq!(a.levels[a.compute_level()].name, "Bank");
+        assert!(a.lanes_per_compute_instance() > 1);
+    }
+
+    #[test]
+    fn reram_preset_is_valid() {
+        let a = presets::reram_pim();
+        a.validate().unwrap();
+        assert_eq!(a.levels[a.compute_level()].name, "Block");
+    }
+
+    #[test]
+    fn aap_and_add_cycles_from_table1() {
+        let a = presets::dram_pim();
+        // tRC = 45ns at 1ns clock -> 45 cycles per AAP.
+        assert_eq!(a.aap_cycles(), 45);
+        // 16-bit add = 4*16+1 = 65 AAPs.
+        assert_eq!(a.add_cycles(16), 65 * 45);
+        assert_eq!(a.mul_cycles(16), 16 * 65 * 45);
+    }
+
+    #[test]
+    fn config_op_latency_overrides_derivation() {
+        let a = presets::dram_pim();
+        // The preset carries the paper's Fig. 6 example latencies.
+        assert_eq!(a.op_cycles("add"), 196);
+        assert_eq!(a.op_cycles("mul"), 980);
+    }
+
+    #[test]
+    fn channel_scaling_preserves_hierarchy() {
+        let a = presets::dram_pim();
+        for ch in [1u64, 2, 4] {
+            let s = a.with_channels_per_layer(ch);
+            s.validate().unwrap();
+            let ci = s.levels.iter().position(|l| l.name == "Channel").unwrap();
+            assert_eq!(s.levels[ci].instances, ch);
+        }
+    }
+
+    #[test]
+    fn invalid_arch_rejected() {
+        let mut a = presets::dram_pim();
+        a.levels[1].instances = 3; // not a multiple of DRAM instances? 3 % 1 == 0, so break deeper
+        a.levels[2].instances = 7; // 7 % 3 != 0
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn fanout_products_equal_leaf_instances() {
+        let a = presets::dram_pim();
+        let prod: u64 = (0..a.levels.len()).map(|i| a.fanout(i)).product();
+        assert_eq!(prod, a.levels.last().unwrap().instances);
+    }
+}

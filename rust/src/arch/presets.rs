@@ -1,0 +1,185 @@
+//! Built-in architecture presets mirroring the paper's configurations.
+//!
+//! The paper allocates a *fixed slice* of the machine (a number of HBM
+//! channels) to each layer and searches the mapping of every layer within
+//! its slice (§V-A3). The presets therefore describe one layer's slice;
+//! [`crate::arch::Arch::with_channels_per_layer`] rescales the slice for the
+//! Fig. 13 sensitivity study.
+
+use super::{Arch, Energy, Level, PimOp, Timing};
+
+/// Columns per HBM2 bank row (1 KiB row, bit-serial vertical layout).
+pub const DRAM_COLUMNS_PER_BANK: u64 = 8192;
+/// Rows per 32 MiB bank with 1 KiB rows.
+pub const DRAM_ROWS_PER_BANK: u64 = 32 * 1024 * 1024 / 1024;
+
+/// The paper's HBM2-PIM baseline (Fig. 6 / Table I): a 2-channel per-layer
+/// slice, 8 × 32 MiB banks per channel, bit-serial row-parallel compute in
+/// the banks with the Fig. 6 example op latencies (add 196, mul 980 cycles
+/// for 16-bit operands).
+pub fn dram_pim() -> Arch {
+    let channels = 2;
+    let banks = channels * 8;
+    let arch = Arch {
+        name: "hbm2-pim".into(),
+        technology: "DRAM".into(),
+        levels: vec![
+            Level {
+                name: "DRAM".into(),
+                instances: 1,
+                word_bits: 16,
+                read_bandwidth: 16,
+                write_bandwidth: 16,
+                entry_bits: 0,
+                pim_ops: vec![],
+            },
+            Level {
+                name: "Channel".into(),
+                instances: channels,
+                word_bits: 16,
+                read_bandwidth: 16,
+                write_bandwidth: 16,
+                entry_bits: 0,
+                pim_ops: vec![],
+            },
+            Level {
+                name: "Bank".into(),
+                instances: banks,
+                word_bits: 1,
+                read_bandwidth: 16,
+                write_bandwidth: 16,
+                entry_bits: 32 * 1024 * 1024 * 8,
+                pim_ops: vec![
+                    PimOp { name: "add".into(), latency: 196, word_bits: 16 },
+                    PimOp { name: "mul".into(), latency: 980, word_bits: 16 },
+                ],
+            },
+            Level {
+                name: "Column".into(),
+                instances: banks * DRAM_COLUMNS_PER_BANK,
+                word_bits: 1,
+                read_bandwidth: 0,
+                write_bandwidth: 0,
+                entry_bits: DRAM_ROWS_PER_BANK,
+                pim_ops: vec![],
+            },
+        ],
+        timing: Timing::default(),
+        energy: Energy::default(),
+        host_bus_bytes_per_cycle: 256,
+        clock_ns: 1.0,
+    };
+    arch.validate().expect("preset must be valid");
+    arch
+}
+
+/// FloatPIM-style ReRAM digital PIM (Fig. 7): 32 tiles, 256 blocks/tile,
+/// 64 columns/block, 1024 entries/column; block-level bit-serial compute
+/// with the Fig. 7 op latencies (add 442, mul 696).
+pub fn reram_pim() -> Arch {
+    let tiles = 32;
+    let blocks = tiles * 256;
+    let arch = Arch {
+        name: "floatpim-reram".into(),
+        technology: "ReRAM".into(),
+        levels: vec![
+            Level {
+                name: "ReRAM".into(),
+                instances: 1,
+                word_bits: 16,
+                read_bandwidth: 1024,
+                write_bandwidth: 1024,
+                entry_bits: 0,
+                pim_ops: vec![],
+            },
+            Level {
+                name: "Tile".into(),
+                instances: tiles,
+                word_bits: 16,
+                read_bandwidth: 16,
+                write_bandwidth: 16,
+                entry_bits: 0,
+                pim_ops: vec![],
+            },
+            Level {
+                name: "Block".into(),
+                instances: blocks,
+                word_bits: 1,
+                read_bandwidth: 16,
+                write_bandwidth: 16,
+                entry_bits: 64 * 1024 * 8,
+                pim_ops: vec![
+                    PimOp { name: "add".into(), latency: 442, word_bits: 16 },
+                    PimOp { name: "mul".into(), latency: 696, word_bits: 16 },
+                ],
+            },
+            Level {
+                name: "Column".into(),
+                instances: blocks * 64,
+                word_bits: 1,
+                read_bandwidth: 0,
+                write_bandwidth: 0,
+                entry_bits: 1024,
+                pim_ops: vec![],
+            },
+        ],
+        timing: Timing::default(),
+        energy: Energy::default(),
+        host_bus_bytes_per_cycle: 256,
+        clock_ns: 1.0,
+    };
+    arch.validate().expect("preset must be valid");
+    arch
+}
+
+impl Arch {
+    /// The Fig. 6 HBM2-PIM per-layer slice (2 channels × 8 banks).
+    pub fn dram_pim() -> Arch {
+        dram_pim()
+    }
+
+    /// The Fig. 7 FloatPIM ReRAM configuration.
+    pub fn reram_pim() -> Arch {
+        reram_pim()
+    }
+
+    /// A deliberately small DRAM-PIM slice (1 channel, 4 banks, 64 columns
+    /// per bank) for unit tests, examples and the functional execution
+    /// engine, where bank count = worker-thread count.
+    pub fn dram_pim_small() -> Arch {
+        let mut arch = dram_pim();
+        arch.name = "hbm2-pim-small".into();
+        arch.levels[1].instances = 1; // channels
+        arch.levels[2].instances = 4; // banks
+        arch.levels[3].instances = 4 * 64; // columns
+        arch.levels[3].entry_bits = 4096;
+        arch.validate().expect("small preset must be valid");
+        arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_pim_shape() {
+        let a = dram_pim();
+        assert_eq!(a.compute_instances(), 16);
+        assert_eq!(a.lanes_per_compute_instance(), DRAM_COLUMNS_PER_BANK);
+    }
+
+    #[test]
+    fn reram_pim_shape() {
+        let a = reram_pim();
+        assert_eq!(a.compute_instances(), 32 * 256);
+        assert_eq!(a.lanes_per_compute_instance(), 64);
+    }
+
+    #[test]
+    fn small_preset_shape() {
+        let a = Arch::dram_pim_small();
+        assert_eq!(a.compute_instances(), 4);
+        assert_eq!(a.lanes_per_compute_instance(), 64);
+    }
+}

@@ -1,0 +1,616 @@
+//! Fine-grained data-space generation (paper §IV-E/F, Fig. 8).
+//!
+//! A *data space* is the region of tensor coordinates one compute instance
+//! (bank) processes at one temporal step. Overlap analysis needs **all** of
+//! them — for every bank and every step — which Timeloop never materializes
+//! (its recursive tile analysis only touches representative tiles). The
+//! paper contributes a lightweight analytical generator built on the
+//! observation that data-space sizes are constant per hardware level and
+//! their coordinates advance periodically with the loop indices (Eqs. 1–2).
+//!
+//! Two implementations live here:
+//!
+//! * [`ReferenceGen`] — the Timeloop-style recursive generator, used as the
+//!   correctness oracle and as the "previous work" baseline in runtime
+//!   benchmarks;
+//! * [`AnalyticalGen`] — the paper's closed-form generator: a
+//!   [`LoopTable`] precomputes, for every hierarchy loop, its temporal
+//!   stride `G(n) = ∏ num_j` (Eq. 1) and its per-dimension data stride
+//!   `D`, after which any `(bank, step)` data space is decoded in
+//!   O(#loops) with no recursion (Eq. 2).
+
+use crate::mapping::{Dim, DimMap, Mapping};
+use std::fmt;
+
+/// Half-open coordinate interval `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Range {
+    pub fn new(lo: u64, hi: u64) -> Range {
+        debug_assert!(lo <= hi);
+        Range { lo, hi }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.hi - self.lo
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo >= self.hi
+    }
+
+    /// Do two ranges share any coordinate?
+    #[inline]
+    pub fn intersects(&self, other: &Range) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+
+    /// Clamp to `[0, bound)`; `None` if nothing remains (padding region).
+    pub fn clamp(&self, bound: u64) -> Option<Range> {
+        let lo = self.lo.min(bound);
+        let hi = self.hi.min(bound);
+        if lo < hi {
+            Some(Range { lo, hi })
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for Range {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {})", self.lo, self.hi)
+    }
+}
+
+/// One bank-level data space: the 6D coordinate block `(K, C, P, Q, R, S)`
+/// a bank touches at one temporal step (batch N is 1 for every evaluated
+/// network; the paper likewise drops it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DataSpace {
+    /// Spatial instance (bank) index in `0..banks_used`.
+    pub bank: u64,
+    /// Temporal step index in `0..temporal_steps`.
+    pub step: u64,
+    pub k: Range,
+    pub c: Range,
+    pub p: Range,
+    pub q: Range,
+    pub r: Range,
+    pub s: Range,
+}
+
+impl DataSpace {
+    /// The produced output block `[K, P, Q]` of this step.
+    pub fn output_ranges(&self) -> (Range, Range, Range) {
+        (self.k, self.p, self.q)
+    }
+
+    /// Does this space's *output* block intersect the given `[K, P, Q]`
+    /// region?
+    pub fn output_intersects(&self, k: &Range, p: &Range, q: &Range) -> bool {
+        self.k.intersects(k) && self.p.intersects(p) && self.q.intersects(q)
+    }
+
+    /// The input rows consumed by this step along P: receptive field of
+    /// the `p`/`r` ranges under `stride`, before padding shift.
+    pub fn input_y(&self, stride: u64) -> Range {
+        Range::new(self.p.lo * stride + self.r.lo, (self.p.hi - 1) * stride + self.r.hi)
+    }
+
+    /// The input columns consumed along Q.
+    pub fn input_x(&self, stride: u64) -> Range {
+        Range::new(self.q.lo * stride + self.s.lo, (self.q.hi - 1) * stride + self.s.hi)
+    }
+}
+
+/// Per-loop decoding record of the analytical generator.
+#[derive(Debug, Clone, Copy)]
+struct LoopInfo {
+    dim: Dim,
+    bound: u64,
+    /// Temporal stride `G(n)` (Eq. 1) for temporal loops, or the spatial
+    /// instance stride for spatial loops.
+    index_stride: u64,
+    /// Data-coordinate stride `D`: the extent of this dim inner to the
+    /// loop (down to and including the interior tile).
+    data_stride: u64,
+}
+
+/// Precomputed decode tables for one mapping — the analytical generator's
+/// state (Eqs. 1–2).
+#[derive(Debug, Clone)]
+pub struct LoopTable {
+    temporal: Vec<LoopInfo>,
+    spatial: Vec<LoopInfo>,
+    /// Interior (per-step) tile extents.
+    tiles: DimMap<u64>,
+    pub total_steps: u64,
+    pub total_banks: u64,
+}
+
+impl LoopTable {
+    pub fn new(mapping: &Mapping) -> LoopTable {
+        let mut tiles = DimMap::<u64>([1; 7]);
+        for d in Dim::ALL {
+            tiles[d] = mapping.tile(d);
+        }
+        // Collect hierarchy loops outer→inner with their positions.
+        let loops: Vec<(usize, usize, crate::mapping::Loop)> = mapping.nests
+            [..mapping.interior_idx()]
+            .iter()
+            .enumerate()
+            .flat_map(|(li, nest)| nest.iter().enumerate().map(move |(ji, l)| (li, ji, *l)))
+            .collect();
+
+        let mut temporal = Vec::new();
+        let mut spatial = Vec::new();
+        for &(li, ji, l) in &loops {
+            let data_stride = mapping.inner_extent(l.dim, li, ji);
+            let info = LoopInfo { dim: l.dim, bound: l.bound, index_stride: 1, data_stride };
+            if l.is_spatial() {
+                spatial.push(info);
+            } else {
+                temporal.push(info);
+            }
+        }
+        // Index strides: G(n) = product of bounds of *inner* loops of the
+        // same kind (Eq. 1); computed by a reverse sweep.
+        let mut acc = 1u64;
+        for info in temporal.iter_mut().rev() {
+            info.index_stride = acc;
+            acc *= info.bound;
+        }
+        let total_steps = acc;
+        let mut acc = 1u64;
+        for info in spatial.iter_mut().rev() {
+            info.index_stride = acc;
+            acc *= info.bound;
+        }
+        let total_banks = acc;
+        LoopTable { temporal, spatial, tiles, total_steps, total_banks }
+    }
+
+    /// Decode the data space of `(bank, step)` in O(#loops) — Eq. 2.
+    pub fn space_at(&self, bank: u64, step: u64) -> DataSpace {
+        debug_assert!(step < self.total_steps && bank < self.total_banks);
+        let mut lo = DimMap::<u64>([0; 7]);
+        for info in &self.temporal {
+            let digit = (step / info.index_stride) % info.bound;
+            lo[info.dim] += digit * info.data_stride;
+        }
+        for info in &self.spatial {
+            let digit = (bank / info.index_stride) % info.bound;
+            lo[info.dim] += digit * info.data_stride;
+        }
+        let r = |d: Dim| Range::new(lo[d], lo[d] + self.tiles[d]);
+        DataSpace {
+            bank,
+            step,
+            k: r(Dim::K),
+            c: r(Dim::C),
+            p: r(Dim::P),
+            q: r(Dim::Q),
+            r: r(Dim::R),
+            s: r(Dim::S),
+        }
+    }
+
+    /// Temporal loops over reduction dims: the extra `(bound−1)·G` term
+    /// that pushes an output's *completion* to its final reduction visit
+    /// (§IV-H: the R/S/C loop sizes are added to the temporal index).
+    pub fn reduction_completion_offset(&self) -> u64 {
+        self.temporal
+            .iter()
+            .filter(|i| i.dim.is_reduction())
+            .map(|i| (i.bound - 1) * i.index_stride)
+            .sum()
+    }
+
+    /// The *finish step* of the output coordinate `(k, p, q)`: the last
+    /// temporal step whose data space covers it, accounting for reduction
+    /// revisits. This is the analytical core reused by overlap analysis
+    /// (Eqs. 5–6 walk loops exactly like this).
+    pub fn finish_step_of_output(&self, k: u64, p: u64, q: u64) -> u64 {
+        let mut t = 0u64;
+        for info in &self.temporal {
+            match info.dim {
+                Dim::K => t += ((k / info.data_stride) % info.bound) * info.index_stride,
+                Dim::P => t += ((p / info.data_stride) % info.bound) * info.index_stride,
+                Dim::Q => t += ((q / info.data_stride) % info.bound) * info.index_stride,
+                // The output is only complete after the *last* visit of
+                // every reduction loop.
+                d if d.is_reduction() => t += (info.bound - 1) * info.index_stride,
+                _ => {}
+            }
+        }
+        t
+    }
+
+    /// The latest finish step over a whole output *box* `[k, p, q)` — the
+    /// ready-time query of overlap analysis (Eqs. 3–6).
+    ///
+    /// Finish time is **not** simply the box's max corner: when a spatial
+    /// loop sits outer to a temporal loop of the same dimension, a larger
+    /// coordinate can land on a different bank at an *earlier* temporal
+    /// digit. Because the total step index is a sum of independent
+    /// per-dimension digit contributions, the maximum over a box is the
+    /// sum of per-dimension maxima, each computed by a digit walk over
+    /// that dimension's loop radices (tight lower/upper bound states, like
+    /// any digit DP) — still O(#loops) per query.
+    pub fn max_finish_step_over_box(&self, k: Range, p: Range, q: Range) -> u64 {
+        debug_assert!(!k.is_empty() && !p.is_empty() && !q.is_empty());
+        let mut t = self.reduction_completion_offset();
+        t += self.max_dim_contribution(Dim::K, k);
+        t += self.max_dim_contribution(Dim::P, p);
+        t += self.max_dim_contribution(Dim::Q, q);
+        t
+    }
+
+    /// Max over `d ∈ [r.lo, r.hi)` of Σ (temporal digit · G) for the
+    /// loops decomposing `dim`.
+    fn max_dim_contribution(&self, dim: Dim, r: Range) -> u64 {
+        // Positional system: this dim's hierarchy loops outer→inner with
+        // strides = inner extents; the innermost stride is the interior
+        // tile, whose remainder carries no digit information.
+        let tile = self.tiles[dim].max(1);
+        let lo = r.lo / tile;
+        let hi = (r.hi - 1) / tile;
+        // Gather (bound, weight) outer→inner; spatial loops participate in
+        // the radix but contribute weight 0 to the step index.
+        let mut digits_lo = Vec::new();
+        let mut digits_hi = Vec::new();
+        let mut radix = Vec::new(); // (bound, weight)
+        // Loops of `dim` in outer→inner order appear in both lists in
+        // original nest order; merge by descending data_stride.
+        let mut loops: Vec<(u64, u64, u64)> = self
+            .temporal
+            .iter()
+            .filter(|i| i.dim == dim)
+            .map(|i| (i.data_stride, i.bound, i.index_stride))
+            .chain(
+                self.spatial
+                    .iter()
+                    .filter(|i| i.dim == dim)
+                    .map(|i| (i.data_stride, i.bound, 0)),
+            )
+            .collect();
+        loops.sort_by(|a, b| b.0.cmp(&a.0));
+        for (stride, bound, weight) in loops {
+            let s = stride / tile; // positional stride in tile units
+            digits_lo.push((lo / s) % bound);
+            digits_hi.push((hi / s) % bound);
+            radix.push((bound, weight));
+        }
+        // Digit DP over (tight_lo, tight_hi) states.
+        max_digit_value(&radix, &digits_lo, &digits_hi, 0, true, true)
+    }
+
+    /// Representative bank indices covering every *distinct* combination
+    /// of spatial digits over the given dimensions (digits of all other
+    /// spatial loops pinned to 0). Used by overlap analysis: consumer
+    /// banks differing only in output-channel (K/N) spatial digits consume
+    /// identical input regions, so iterating representatives over
+    /// {P, Q, C, R, S} is exact and collapses K-parallel fleets (8192
+    /// ReRAM blocks -> a handful of queries).
+    pub fn representative_banks(&self, dims: &[Dim]) -> Vec<u64> {
+        let relevant: Vec<&LoopInfo> =
+            self.spatial.iter().filter(|i| dims.contains(&i.dim)).collect();
+        let count: u64 = relevant.iter().map(|i| i.bound).product();
+        let mut out = Vec::with_capacity(count.min(1 << 20) as usize);
+        for n in 0..count {
+            let mut bank = 0;
+            let mut rem = n;
+            for info in &relevant {
+                let digit = rem % info.bound;
+                rem /= info.bound;
+                bank += digit * info.index_stride;
+            }
+            out.push(bank);
+        }
+        out
+    }
+
+    /// The spatial instance that produces output coordinate `(k, p, q)`
+    /// (Eq. 5's `S` accumulation).
+    pub fn bank_of_output(&self, k: u64, p: u64, q: u64) -> u64 {
+        let mut b = 0u64;
+        for info in &self.spatial {
+            match info.dim {
+                Dim::K => b += ((k / info.data_stride) % info.bound) * info.index_stride,
+                Dim::P => b += ((p / info.data_stride) % info.bound) * info.index_stride,
+                Dim::Q => b += ((q / info.data_stride) % info.bound) * info.index_stride,
+                // Reduction-spatial loops replicate the output across
+                // banks; the canonical producer is instance 0 of the group.
+                _ => {}
+            }
+        }
+        b
+    }
+}
+
+/// Maximize Σ digit_i · weight_i over digit vectors bounded
+/// lexicographically by `digits_lo`/`digits_hi` (inclusive), with tight
+/// lower/upper tracking — the classic bounded-digit DP.
+fn max_digit_value(
+    radix: &[(u64, u64)],
+    digits_lo: &[u64],
+    digits_hi: &[u64],
+    pos: usize,
+    tight_lo: bool,
+    tight_hi: bool,
+) -> u64 {
+    if pos == radix.len() {
+        return 0;
+    }
+    let (bound, weight) = radix[pos];
+    let lo = if tight_lo { digits_lo[pos] } else { 0 };
+    let hi = if tight_hi { digits_hi[pos] } else { bound - 1 };
+    let mut best = 0;
+    // Candidate digits that can be optimal: the extremes and, if the
+    // interval is open on either side, the max-weight free digit. Checking
+    // lo, hi, and hi-1/lo+1 (the largest digit that releases tightness)
+    // covers all cases because the suffix value is maximized when the
+    // remaining digits are free.
+    let mut candidates = [lo, hi, 0, 0];
+    let mut n = 2;
+    if hi > lo {
+        candidates[n] = hi - 1; // releases tight_hi (if it was tight)
+        n += 1;
+        candidates[n] = lo + 1; // releases tight_lo
+        n += 1;
+    }
+    for &d in &candidates[..n] {
+        if d < lo || d > hi {
+            continue;
+        }
+        let nlo = tight_lo && d == digits_lo[pos];
+        let nhi = tight_hi && d == digits_hi[pos];
+        let v = d * weight + max_digit_value(radix, digits_lo, digits_hi, pos + 1, nlo, nhi);
+        best = best.max(v);
+    }
+    best
+}
+
+/// The paper's analytical generator: materializes all data spaces in
+/// O(n · #loops) with no recursion (§IV-F).
+pub struct AnalyticalGen;
+
+impl AnalyticalGen {
+    /// Generate every `(bank, step)` data space, banks-major.
+    pub fn generate(mapping: &Mapping) -> Vec<DataSpace> {
+        let table = LoopTable::new(mapping);
+        let mut out = Vec::with_capacity((table.total_banks * table.total_steps) as usize);
+        for bank in 0..table.total_banks {
+            for step in 0..table.total_steps {
+                out.push(table.space_at(bank, step));
+            }
+        }
+        out
+    }
+}
+
+/// Timeloop-style recursive generator (the "previous works avoid
+/// generating fine-grained data spaces" baseline, §IV-F). Kept for oracle
+/// testing and runtime comparison; allocates a range context per tree node
+/// exactly like a recursive tiling walk would.
+pub struct ReferenceGen;
+
+impl ReferenceGen {
+    pub fn generate(mapping: &Mapping) -> Vec<DataSpace> {
+        let loops: Vec<(usize, usize, crate::mapping::Loop)> = mapping.nests
+            [..mapping.interior_idx()]
+            .iter()
+            .enumerate()
+            .flat_map(|(li, nest)| nest.iter().enumerate().map(move |(ji, l)| (li, ji, *l)))
+            .collect();
+        let mut tiles = DimMap::<u64>([1; 7]);
+        for d in Dim::ALL {
+            tiles[d] = mapping.tile(d);
+        }
+        let mut out = Vec::new();
+        let mut lo = DimMap::<u64>([0; 7]);
+        Self::rec(mapping, &loops, 0, 0, 0, &mut lo, &tiles, &mut out);
+        // The recursion emits depth-first in loop order; normalize to
+        // banks-major like the analytical generator.
+        out.sort_by_key(|ds| (ds.bank, ds.step));
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn rec(
+        mapping: &Mapping,
+        loops: &[(usize, usize, crate::mapping::Loop)],
+        depth: usize,
+        bank: u64,
+        step: u64,
+        lo: &mut DimMap<u64>,
+        tiles: &DimMap<u64>,
+        out: &mut Vec<DataSpace>,
+    ) {
+        if depth == loops.len() {
+            let r = |d: Dim| Range::new(lo[d], lo[d] + tiles[d]);
+            out.push(DataSpace {
+                bank,
+                step,
+                k: r(Dim::K),
+                c: r(Dim::C),
+                p: r(Dim::P),
+                q: r(Dim::Q),
+                r: r(Dim::R),
+                s: r(Dim::S),
+            });
+            return;
+        }
+        let (li, ji, l) = loops[depth];
+        let ext = mapping.inner_extent(l.dim, li, ji);
+        for i in 0..l.bound {
+            let saved = lo[l.dim];
+            lo[l.dim] = saved + i * ext;
+            let (b2, s2) = if l.is_spatial() {
+                (bank * l.bound + i, step)
+            } else {
+                (bank, step * l.bound + i)
+            };
+            Self::rec(mapping, loops, depth + 1, b2, s2, lo, tiles, out);
+            lo[l.dim] = saved;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{Loop, Mapping};
+
+    fn demo_mapping() -> Mapping {
+        Mapping::new(vec![
+            vec![Loop::temporal(Dim::K, 2)],
+            vec![Loop::spatial(Dim::P, 4)],
+            vec![Loop::temporal(Dim::P, 2), Loop::temporal(Dim::Q, 4)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::Q, 2),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ])
+    }
+
+    #[test]
+    fn range_basics() {
+        let a = Range::new(2, 5);
+        let b = Range::new(4, 8);
+        let c = Range::new(5, 9);
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.clamp(4), Some(Range::new(2, 4)));
+        assert_eq!(Range::new(6, 9).clamp(5), None);
+    }
+
+    #[test]
+    fn analytical_matches_reference_demo() {
+        let m = demo_mapping();
+        let a = AnalyticalGen::generate(&m);
+        let r = ReferenceGen::generate(&m);
+        assert_eq!(a.len(), r.len());
+        assert_eq!(a, r);
+    }
+
+    #[test]
+    fn counts_match_mapping_shape() {
+        let m = demo_mapping();
+        let t = LoopTable::new(&m);
+        assert_eq!(t.total_steps, m.temporal_steps());
+        assert_eq!(t.total_banks, m.spatial_instances());
+        let spaces = AnalyticalGen::generate(&m);
+        assert_eq!(spaces.len() as u64, t.total_steps * t.total_banks);
+    }
+
+    #[test]
+    fn spaces_tile_the_output_exactly() {
+        // Union of all output blocks must cover [0,16)x[0,8)x[0,8) with
+        // each (k,p,q) covered exactly once (C is interior here, so no
+        // reduction revisits).
+        let m = demo_mapping();
+        let spaces = AnalyticalGen::generate(&m);
+        let mut hits = vec![0u32; 16 * 8 * 8];
+        for ds in &spaces {
+            for k in ds.k.lo..ds.k.hi {
+                for p in ds.p.lo..ds.p.hi {
+                    for q in ds.q.lo..ds.q.hi {
+                        hits[(k * 64 + p * 8 + q) as usize] += 1;
+                    }
+                }
+            }
+        }
+        assert!(hits.iter().all(|&h| h == 1), "coverage: {:?}", &hits[..8]);
+    }
+
+    #[test]
+    fn finish_step_is_last_covering_step() {
+        let m = demo_mapping();
+        let t = LoopTable::new(&m);
+        let spaces = AnalyticalGen::generate(&m);
+        for (k, p, q) in [(0, 0, 0), (3, 2, 7), (15, 7, 7), (8, 3, 4)] {
+            let expect = spaces
+                .iter()
+                .filter(|ds| {
+                    ds.k.lo <= k
+                        && k < ds.k.hi
+                        && ds.p.lo <= p
+                        && p < ds.p.hi
+                        && ds.q.lo <= q
+                        && q < ds.q.hi
+                })
+                .map(|ds| ds.step)
+                .max()
+                .unwrap();
+            assert_eq!(t.finish_step_of_output(k, p, q), expect, "({k},{p},{q})");
+        }
+    }
+
+    #[test]
+    fn bank_of_output_matches_spaces() {
+        let m = demo_mapping();
+        let t = LoopTable::new(&m);
+        let spaces = AnalyticalGen::generate(&m);
+        for (k, p, q) in [(0, 0, 0), (5, 6, 3), (15, 7, 7)] {
+            let expect = spaces
+                .iter()
+                .find(|ds| {
+                    ds.k.lo <= k
+                        && k < ds.k.hi
+                        && ds.p.lo <= p
+                        && p < ds.p.hi
+                        && ds.q.lo <= q
+                        && q < ds.q.hi
+                })
+                .map(|ds| ds.bank)
+                .unwrap();
+            assert_eq!(t.bank_of_output(k, p, q), expect, "({k},{p},{q})");
+        }
+    }
+
+    #[test]
+    fn reduction_completion_offset_counts_hierarchy_reduction_loops() {
+        // Move C above the bank: steps gain a C dimension, and outputs
+        // complete only at the last C visit.
+        let m = Mapping::new(vec![
+            vec![Loop::temporal(Dim::C, 4)],
+            vec![Loop::spatial(Dim::P, 4)],
+            vec![Loop::temporal(Dim::Q, 8)],
+            vec![
+                Loop::spatial(Dim::K, 16),
+                Loop::spatial(Dim::P, 2),
+                Loop::temporal(Dim::C, 2),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let t = LoopTable::new(&m);
+        // C hierarchy loop: bound 4, G = 8 (inner Q loop) -> offset 24.
+        assert_eq!(t.reduction_completion_offset(), 3 * 8);
+        // finish step of any output must include the offset.
+        assert_eq!(t.finish_step_of_output(0, 0, 0), 24);
+        assert_eq!(t.finish_step_of_output(0, 0, 7), 24 + 7);
+    }
+
+    #[test]
+    fn input_receptive_fields() {
+        let m = demo_mapping();
+        let spaces = AnalyticalGen::generate(&m);
+        let ds = &spaces[0];
+        // p tile = 1, r tile = 3 (interior temporal) so y covers 3 rows.
+        let y = ds.input_y(1);
+        assert_eq!(y.len(), ds.p.len() - 1 + ds.r.len());
+    }
+}

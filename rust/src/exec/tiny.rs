@@ -1,0 +1,651 @@
+//! End-to-end tiny-CNN driver: search mappings, build the overlap
+//! schedule, execute every bank-level tile through the PJRT artifacts, and
+//! verify the logits against the monolithic `tiny_cnn_full` lowering.
+//!
+//! Network (see `workload::zoo::tiny_cnn` and `python/compile/aot.py`):
+//!
+//! ```text
+//! image[8,16,16] -> conv1[16,16,16] -> conv2[16,16,16] -(maxpool 2x2)->
+//!   pooled[16,8,8] -> conv3[32,8,8] -(flatten K-major)-> fc -> logits[10]
+//! ```
+//!
+//! Interior tiles are pinned so every bank-level job matches an AOT
+//! artifact's static shape: conv tiles are `K_t x 4 x 4` from a `(C,6,6)`
+//! pre-padded input slice; fc jobs consume 256-wide C slices.
+
+use super::{BankClock, LayerBuffer, LayerExec, SchedulePolicy, TileJob, WorkItem, WorkerPool};
+use crate::arch::Arch;
+use crate::dataspace::Range;
+use crate::mapping::Dim;
+use crate::mapspace::MappingConstraint;
+use crate::runtime::DeviceClient;
+use crate::search::{Mapper, MapperConfig, Metric, NeighborRole, PairContext};
+use crate::util::rng::SplitMix64;
+use crate::workload::{zoo, Network};
+use anyhow::{anyhow, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Deterministic model parameters + input image.
+pub struct TinyParams {
+    pub image: Vec<f32>,     // [8,16,16]
+    pub w1: Vec<f32>,        // [16,8,3,3]
+    pub w2: Vec<f32>,        // [16,16,3,3]
+    pub w3: Vec<f32>,        // [32,16,3,3]
+    pub wfc: Vec<f32>,       // [2048,10]
+}
+
+impl TinyParams {
+    pub fn generate(seed: u64) -> TinyParams {
+        let mut rng = SplitMix64::new(seed);
+        let mut gen = |n: usize, scale: f32| -> Vec<f32> {
+            (0..n).map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale).collect()
+        };
+        TinyParams {
+            image: gen(8 * 16 * 16, 1.0),
+            w1: gen(16 * 8 * 3 * 3, 0.2),
+            w2: gen(16 * 16 * 3 * 3, 0.2),
+            w3: gen(32 * 16 * 3 * 3, 0.2),
+            wfc: gen(2048 * 10, 0.1),
+        }
+    }
+}
+
+/// Result of one engine run.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub policy: SchedulePolicy,
+    pub logits: Vec<f32>,
+    /// Simulated overlapped makespan (cycles).
+    pub sim_cycles: u64,
+    /// Simulated strictly-sequential latency (Σ layer latencies).
+    pub sequential_cycles: u64,
+    pub tiles_executed: usize,
+    pub wallclock: Duration,
+    /// Max |Δ| of logits vs. the monolithic `tiny_cnn_full` artifact.
+    pub max_abs_err_vs_full: f32,
+}
+
+/// Per-layer mapping constraints matching the AOT tile shapes.
+fn layer_constraints() -> Vec<MappingConstraint> {
+    let conv = |k_t: u64, c: u64| MappingConstraint {
+        interior_tile: vec![
+            (Dim::K, k_t),
+            (Dim::P, 4),
+            (Dim::Q, 4),
+            (Dim::C, c),
+            (Dim::R, 3),
+            (Dim::S, 3),
+        ],
+        no_pad: Dim::ALL.to_vec(),
+        max_instances: None,
+    };
+    vec![
+        conv(4, 8),   // conv1
+        conv(4, 16),  // conv2
+        conv(4, 16),  // conv3 (K tile 4: 4*4*4 = 64 output lanes/bank)
+        MappingConstraint {
+            interior_tile: vec![(Dim::K, 10), (Dim::C, 256)],
+            no_pad: Dim::ALL.to_vec(),
+            max_instances: None,
+        }, // fc
+    ]
+}
+
+/// Artifact name per chain layer.
+fn artifact_names() -> [&'static str; 4] {
+    ["conv1_tile", "conv2_tile", "conv3_tile", "fc_tile"]
+}
+
+/// Search per-layer mappings (forward sweep with the given metric),
+/// honoring the pinned tile constraints.
+pub fn plan_layers(
+    arch: &Arch,
+    net: &Network,
+    budget: usize,
+    seed: u64,
+    metric: Metric,
+) -> Result<Vec<LayerExec>> {
+    let constraints = layer_constraints();
+    let chain = net.chain();
+    anyhow::ensure!(chain.len() == 4, "tiny-cnn chain must have 4 layers");
+    let mut out: Vec<LayerExec> = Vec::with_capacity(4);
+    for (pos, &li) in chain.iter().enumerate() {
+        let layer = &net.layers[li];
+        let config = MapperConfig {
+            budget,
+            seed: seed.wrapping_add(pos as u64),
+            constraint: constraints[pos].clone(),
+            ..Default::default()
+        };
+        let mut mapper = Mapper::new(arch, config);
+        let prev = pos.checked_sub(1).map(|p| (&net.layers[chain[p]], &out[p]));
+        let ctxs: Vec<PairContext> = prev
+            .map(|(pl, pe)| PairContext {
+                role: NeighborRole::Producer,
+                layer: pl,
+                mapping: &pe.mapping,
+                stats: &pe.stats,
+            })
+            .into_iter()
+            .collect();
+        let best = mapper
+            .search_layer_with(metric, layer, &ctxs)
+            .ok_or_else(|| anyhow!("no valid mapping for {}", layer.name))?;
+        out.push(LayerExec::new(best.mapping, best.stats));
+    }
+    Ok(out)
+}
+
+/// Buffer shapes per producer slot: conv1, conv2, pooled, conv3 (fc output
+/// is the logits accumulator).
+struct Buffers {
+    conv1: LayerBuffer,
+    conv2: LayerBuffer,
+    pooled: LayerBuffer,
+    conv3: LayerBuffer,
+    logits: Vec<f32>,
+    logit_parts_done: usize,
+    logits_finish: u64,
+}
+
+impl Buffers {
+    fn new() -> Buffers {
+        Buffers {
+            conv1: LayerBuffer::new(16, 16, 16),
+            conv2: LayerBuffer::new(16, 16, 16),
+            pooled: LayerBuffer::new(16, 8, 8),
+            conv3: LayerBuffer::new(32, 8, 8),
+            logits: vec![0.0; 10],
+            logit_parts_done: 0,
+            logits_finish: 0,
+        }
+    }
+
+    /// Refresh pooled cells whose four conv2 sources are all written.
+    fn update_pooled(&mut self) {
+        for c in 0..16usize {
+            for y in 0..8usize {
+                for x in 0..8usize {
+                    let dst = self.pooled.idx(c, y, x);
+                    if self.pooled.written[dst] {
+                        continue;
+                    }
+                    let srcs = [
+                        self.conv2.idx(c, 2 * y, 2 * x),
+                        self.conv2.idx(c, 2 * y, 2 * x + 1),
+                        self.conv2.idx(c, 2 * y + 1, 2 * x),
+                        self.conv2.idx(c, 2 * y + 1, 2 * x + 1),
+                    ];
+                    if srcs.iter().all(|&s| self.conv2.written[s]) {
+                        let v = srcs.iter().map(|&s| self.conv2.data[s]).fold(f32::MIN, f32::max);
+                        let t = srcs.iter().map(|&s| self.conv2.finish_cycles[s]).max().unwrap();
+                        self.pooled.data[dst] = v;
+                        self.pooled.written[dst] = true;
+                        self.pooled.finish_cycles[dst] = t;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The engine itself.
+pub struct TinyCnnEngine {
+    pub arch: Arch,
+    pub net: Network,
+    pub device: DeviceClient,
+    pub layers: Vec<LayerExec>,
+    pub params: TinyParams,
+}
+
+impl TinyCnnEngine {
+    /// Build an engine: load artifacts, search the schedule.
+    pub fn new(
+        artifacts_dir: impl AsRef<std::path::Path>,
+        budget: usize,
+        seed: u64,
+        metric: Metric,
+    ) -> Result<TinyCnnEngine> {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let (device, names) = DeviceClient::spawn(artifacts_dir).context("starting device")?;
+        for needed in artifact_names().iter().chain(["tiny_cnn_full"].iter()) {
+            anyhow::ensure!(
+                names.iter().any(|n| n == needed),
+                "artifact `{needed}` missing — rebuild with `make artifacts`"
+            );
+        }
+        let layers = plan_layers(&arch, &net, budget, seed, metric)?;
+        Ok(TinyCnnEngine { arch, net, device, layers, params: TinyParams::generate(seed) })
+    }
+
+    /// Slice a pre-padded `[C, 6, 6]` input tile for a conv job from
+    /// `src` (None = the input image).
+    fn conv_input_tile(&self, src: Option<&LayerBuffer>, c: usize, job: &TileJob) -> Vec<f32> {
+        let (ch, h, w) = match src {
+            Some(b) => (b.k, b.p, b.q),
+            None => (8usize, 16usize, 16usize),
+        };
+        debug_assert_eq!(ch, c);
+        let p0 = job.p.lo as i64 - 1;
+        let q0 = job.q.lo as i64 - 1;
+        let (tp, tq) = (job.p.len() as usize + 2, job.q.len() as usize + 2);
+        let mut out = vec![0.0f32; c * tp * tq];
+        for ci in 0..c {
+            for yi in 0..tp {
+                let y = p0 + yi as i64;
+                if y < 0 || y >= h as i64 {
+                    continue;
+                }
+                for xi in 0..tq {
+                    let x = q0 + xi as i64;
+                    if x < 0 || x >= w as i64 {
+                        continue;
+                    }
+                    let v = match src {
+                        Some(b) => b.data[b.idx(ci, y as usize, x as usize)],
+                        None => self.params.image[(ci * 16 + y as usize) * 16 + x as usize],
+                    };
+                    out[(ci * tp + yi) * tq + xi] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Weight slice `[K_t, C, 3, 3]` for a conv job.
+    fn conv_weight_slice(&self, layer: usize, job: &TileJob) -> Vec<f32> {
+        let (w, c) = match layer {
+            0 => (&self.params.w1, 8usize),
+            1 => (&self.params.w2, 16),
+            2 => (&self.params.w3, 16),
+            _ => unreachable!(),
+        };
+        let per_k = c * 9;
+        let mut out = Vec::with_capacity(job.k.len() as usize * per_k);
+        for k in job.k.lo..job.k.hi {
+            let base = k as usize * per_k;
+            out.extend_from_slice(&w[base..base + per_k]);
+        }
+        out
+    }
+
+    /// Mask-only readiness used by the execution dispatcher: can this
+    /// job's inputs be sliced yet?
+    fn inputs_written(&self, bufs: &Buffers, job: &TileJob) -> bool {
+        let halo = |b: &LayerBuffer, job: &TileJob| -> bool {
+            let pr = Range::new(job.p.lo.saturating_sub(1), (job.p.hi + 1).min(b.p as u64));
+            let qr = Range::new(job.q.lo.saturating_sub(1), (job.q.hi + 1).min(b.q as u64));
+            b.region_written(Range::new(0, b.k as u64), pr, qr)
+        };
+        match job.layer {
+            0 => true,
+            1 => halo(&bufs.conv1, job),
+            2 => halo(&bufs.pooled, job),
+            3 => {
+                let plane = 64u64;
+                (job.c.lo..job.c.hi).all(|flat| {
+                    let k = (flat / plane) as usize;
+                    let rem = (flat % plane) as usize;
+                    bufs.conv3.written[bufs.conv3.idx(k, rem / 8, rem % 8)]
+                })
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Phase 1: execute every tile through PJRT with causality checking.
+    /// Dispatch follows the mapping's production order per bank (any
+    /// causal order yields the same numerics; the per-policy timing is a
+    /// pure function computed afterwards).
+    fn execute_tiles(&self, jobs: &[TileJob], workers: usize) -> Result<Buffers> {
+        let mut bufs = Buffers::new();
+        let pool = WorkerPool::spawn(self.device.clone(), workers.max(1));
+        use std::collections::HashMap;
+        let mut next_step: HashMap<(usize, u64), u64> = HashMap::new();
+        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        let mut inflight = 0usize;
+        let mut done = 0usize;
+        while done < jobs.len() {
+            let mut dispatched = Vec::new();
+            for &id in &pending {
+                let job = &jobs[id];
+                let ns = next_step.entry((job.layer, job.bank)).or_insert(0);
+                if job.step != *ns {
+                    continue;
+                }
+                if !self.inputs_written(&bufs, job) {
+                    continue;
+                }
+                *ns += 1;
+                let inputs = self.resolve_inputs(&bufs, job);
+                pool.submit(WorkItem {
+                    job_id: id,
+                    artifact: artifact_names()[job.layer].to_string(),
+                    inputs,
+                });
+                inflight += 1;
+                dispatched.push(id);
+            }
+            pending.retain(|id| !dispatched.contains(id));
+            anyhow::ensure!(
+                inflight > 0,
+                "deadlock: {} pending jobs, nothing dispatchable",
+                pending.len()
+            );
+            let d = pool.recv();
+            inflight -= 1;
+            done += 1;
+            // Finish cycle 1 marks "written"; real timing is simulated in
+            // phase 2.
+            self.commit_output(&mut bufs, &jobs[d.job_id], &d.output, 1);
+        }
+        pool.shutdown();
+        anyhow::ensure!(bufs.conv1.complete(), "conv1 incomplete");
+        anyhow::ensure!(bufs.conv2.complete(), "conv2 incomplete");
+        anyhow::ensure!(bufs.conv3.complete(), "conv3 incomplete");
+        anyhow::ensure!(bufs.logit_parts_done == 8, "fc incomplete");
+        Ok(bufs)
+    }
+
+    /// Phase 2: pure simulated schedule for a policy. Layer by layer:
+    /// job ready = max producer-cell finish (+ per-step transfer);
+    /// InOrder runs each bank's queue in production order, Transformed
+    /// sorts jobs by ready time and list-schedules on the earliest-free
+    /// bank (§IV-I).
+    pub fn simulate(&self, jobs: &[TileJob], policy: SchedulePolicy) -> u64 {
+        // Per-layer per-cell finish times (conv1, conv2, pooled, conv3).
+        let mut finish: Vec<Vec<u64>> = vec![
+            vec![0; 16 * 16 * 16],
+            vec![0; 16 * 16 * 16],
+            vec![0; 16 * 8 * 8],
+            vec![0; 32 * 8 * 8],
+        ];
+        let idx3 = |k: u64, p: u64, q: u64, pp: u64, qq: u64| ((k * pp + p) * qq + q) as usize;
+        let mut makespan = 0u64;
+        for layer in 0..4usize {
+            let mut lj: Vec<&TileJob> = jobs.iter().filter(|j| j.layer == layer).collect();
+            // Ready time per job.
+            let ready: Vec<u64> = lj
+                .iter()
+                .map(|j| {
+                    let mv = self.producer_move(layer);
+                    match layer {
+                        0 => 0,
+                        1 | 2 => {
+                            // conv consumer: halo region over producer
+                            // buffer (conv1 for layer1, pooled for layer2).
+                            let (src, kk, pp, qq) = if layer == 1 {
+                                (&finish[0], 16u64, 16u64, 16u64)
+                            } else {
+                                (&finish[2], 16, 8, 8)
+                            };
+                            let pr = (j.p.lo.saturating_sub(1), (j.p.hi + 1).min(pp));
+                            let qr = (j.q.lo.saturating_sub(1), (j.q.hi + 1).min(qq));
+                            let mut r = 0;
+                            for k in 0..kk {
+                                for p in pr.0..pr.1 {
+                                    for q in qr.0..qr.1 {
+                                        r = r.max(src[idx3(k, p, q, pp, qq)]);
+                                    }
+                                }
+                            }
+                            r + mv
+                        }
+                        3 => {
+                            let mut r = 0;
+                            for flat in j.c.lo..j.c.hi {
+                                let k = flat / 64;
+                                let rem = flat % 64;
+                                r = r.max(finish[3][idx3(k, rem / 8, rem % 8, 8, 8)]);
+                            }
+                            r + mv
+                        }
+                        _ => unreachable!(),
+                    }
+                })
+                .collect();
+            // Schedule.
+            let banks =
+                crate::dataspace::LoopTable::new(&self.layers[layer].mapping).total_banks;
+            let mut clock = BankClock::new(banks as usize);
+            let dur = self.layers[layer].stats.step_cycles;
+            let mut job_finish: Vec<(usize, u64)> = Vec::with_capacity(lj.len());
+            match policy {
+                SchedulePolicy::InOrder => {
+                    // Per-bank queues in step order; banks advance
+                    // independently (lock-step steps would be even more
+                    // conservative; per-bank queues match the overlap
+                    // evaluator's per-step gating closely enough and are
+                    // what real per-bank command queues do).
+                    let mut order: Vec<usize> = (0..lj.len()).collect();
+                    order.sort_by_key(|&i| (lj[i].step, lj[i].bank));
+                    for i in order {
+                        let (_, f) = clock.schedule(lj[i].bank as usize, ready[i], dur);
+                        job_finish.push((i, f));
+                    }
+                }
+                SchedulePolicy::Transformed => {
+                    // Stable sort by ready time; ties keep production
+                    // order (step-major) — the paper's round-robin
+                    // tie-break over same-ready data spaces.
+                    let mut order: Vec<usize> = (0..lj.len()).collect();
+                    order.sort_by_key(|&i| (ready[i], lj[i].step, lj[i].bank));
+                    for i in order {
+                        let bank = clock.earliest_free();
+                        let (_, f) = clock.schedule(bank, ready[i], dur);
+                        job_finish.push((i, f));
+                    }
+                }
+            }
+            // Commit finish times to the layer's cells.
+            for (i, f) in job_finish {
+                makespan = makespan.max(f);
+                let j = lj[i];
+                match layer {
+                    0 | 1 => {
+                        let buf = if layer == 0 { &mut finish[0] } else { &mut finish[1] };
+                        for k in j.k.lo..j.k.hi.min(16) {
+                            for p in j.p.lo..j.p.hi.min(16) {
+                                for q in j.q.lo..j.q.hi.min(16) {
+                                    buf[idx3(k, p, q, 16, 16)] = f;
+                                }
+                            }
+                        }
+                    }
+                    2 => {
+                        for k in j.k.lo..j.k.hi.min(32) {
+                            for p in j.p.lo..j.p.hi.min(8) {
+                                for q in j.q.lo..j.q.hi.min(8) {
+                                    finish[3][idx3(k, p, q, 8, 8)] = f;
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // After conv2: derive pooled-cell finishes.
+            if layer == 1 {
+                for c in 0..16u64 {
+                    for y in 0..8u64 {
+                        for x in 0..8u64 {
+                            let m = [
+                                finish[1][idx3(c, 2 * y, 2 * x, 16, 16)],
+                                finish[1][idx3(c, 2 * y, 2 * x + 1, 16, 16)],
+                                finish[1][idx3(c, 2 * y + 1, 2 * x, 16, 16)],
+                                finish[1][idx3(c, 2 * y + 1, 2 * x + 1, 16, 16)],
+                            ];
+                            finish[2][idx3(c, y, x, 8, 8)] = *m.iter().max().unwrap();
+                        }
+                    }
+                }
+            }
+            lj.clear();
+        }
+        makespan + self.layers[3].stats.movement_cycles
+    }
+
+    /// Execute + simulate one policy.
+    pub fn run(&self, policy: SchedulePolicy, workers: usize) -> Result<ExecOutcome> {
+        self.run_policies(&[policy], workers).map(|mut v| v.pop().unwrap())
+    }
+
+    /// Execute the tiles once, then evaluate each policy's simulated
+    /// schedule on the measured dependency structure.
+    pub fn run_policies(
+        &self,
+        policies: &[SchedulePolicy],
+        workers: usize,
+    ) -> Result<Vec<ExecOutcome>> {
+        let t0 = Instant::now();
+        let mut jobs: Vec<TileJob> = Vec::new();
+        for (li, le) in self.layers.iter().enumerate() {
+            jobs.extend(le.jobs(li));
+        }
+        let bufs = self.execute_tiles(&jobs, workers)?;
+        let wallclock = t0.elapsed();
+
+        // Verify against the monolithic artifact.
+        let full = self.device.execute_f32(
+            "tiny_cnn_full",
+            vec![
+                self.params.image.clone(),
+                self.params.w1.clone(),
+                self.params.w2.clone(),
+                self.params.w3.clone(),
+                self.params.wfc.clone(),
+            ],
+        )?;
+        let max_abs_err_vs_full = bufs
+            .logits
+            .iter()
+            .zip(&full)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+
+        let sequential_cycles: u64 =
+            self.layers.iter().map(|l| l.stats.latency_cycles).sum();
+        Ok(policies
+            .iter()
+            .map(|&policy| ExecOutcome {
+                policy,
+                logits: bufs.logits.clone(),
+                sim_cycles: self.simulate(&jobs, policy),
+                sequential_cycles,
+                tiles_executed: jobs.len(),
+                wallclock,
+                max_abs_err_vs_full,
+            })
+            .collect())
+    }
+
+    fn producer_move(&self, layer: usize) -> u64 {
+        if layer == 0 {
+            0
+        } else {
+            self.layers[layer - 1].per_step_move
+        }
+    }
+
+    fn resolve_inputs(&self, bufs: &Buffers, job: &TileJob) -> Vec<Vec<f32>> {
+        match job.layer {
+            0 => vec![self.conv_input_tile(None, 8, job), self.conv_weight_slice(0, job)],
+            1 => vec![
+                self.conv_input_tile(Some(&bufs.conv1), 16, job),
+                self.conv_weight_slice(1, job),
+            ],
+            2 => vec![
+                self.conv_input_tile(Some(&bufs.pooled), 16, job),
+                self.conv_weight_slice(2, job),
+            ],
+            3 => {
+                let cr = job.c;
+                let plane = 64u64;
+                let mut x = Vec::with_capacity(cr.len() as usize);
+                for flat in cr.lo..cr.hi {
+                    let k = (flat / plane) as usize;
+                    let rem = (flat % plane) as usize;
+                    x.push(bufs.conv3.data[bufs.conv3.idx(k, rem / 8, rem % 8)]);
+                }
+                // Weight slice [256, 10] rows cr.
+                let mut w = Vec::with_capacity(cr.len() as usize * 10);
+                for c in cr.lo..cr.hi {
+                    let base = c as usize * 10;
+                    w.extend_from_slice(&self.params.wfc[base..base + 10]);
+                }
+                vec![x, w]
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    fn commit_output(&self, bufs: &mut Buffers, job: &TileJob, out: &[f32], finish: u64) {
+        match job.layer {
+            0 => {
+                bufs.conv1.write_block(job.k, job.p, job.q, out, finish);
+            }
+            1 => {
+                bufs.conv2.write_block(job.k, job.p, job.q, out, finish);
+                bufs.update_pooled();
+            }
+            2 => {
+                bufs.conv3.write_block(job.k, job.p, job.q, out, finish);
+            }
+            3 => {
+                for (i, v) in out.iter().enumerate() {
+                    bufs.logits[i] += v;
+                }
+                bufs.logit_parts_done += 1;
+                bufs.logits_finish = bufs.logits_finish.max(finish);
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_are_deterministic() {
+        let a = TinyParams::generate(7);
+        let b = TinyParams::generate(7);
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.wfc, b.wfc);
+        let c = TinyParams::generate(8);
+        assert_ne!(a.image, c.image);
+    }
+
+    #[test]
+    fn constraints_match_artifact_shapes() {
+        let cs = layer_constraints();
+        assert_eq!(cs.len(), 4);
+        // conv tiles are K_t x 4 x 4.
+        for (i, k_t) in [(0usize, 4u64), (1, 4), (2, 4)] {
+            let tile: std::collections::HashMap<_, _> =
+                cs[i].interior_tile.iter().cloned().collect();
+            assert_eq!(tile[&Dim::K], k_t);
+            assert_eq!(tile[&Dim::P], 4);
+            assert_eq!(tile[&Dim::Q], 4);
+        }
+    }
+
+    #[test]
+    fn plan_layers_respects_tiles() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let layers = plan_layers(&arch, &net, 20, 1, Metric::Sequential).unwrap();
+        assert_eq!(layers.len(), 4);
+        assert_eq!(layers[0].mapping.tile(Dim::K), 4);
+        assert_eq!(layers[2].mapping.tile(Dim::K), 4);
+        assert_eq!(layers[3].mapping.tile(Dim::C), 256);
+        // conv1 has 64 jobs (16/4 * 16/4 * 16/4).
+        assert_eq!(layers[0].jobs(0).len(), 64);
+        assert_eq!(layers[3].jobs(3).len(), 8);
+    }
+
+    // Full engine runs live in rust/tests/runtime_exec.rs (they need the
+    // artifacts to have been built).
+}

@@ -1,0 +1,307 @@
+//! `repro` — the Fast-OverlaPIM command-line driver.
+//!
+//! Subcommands:
+//!
+//! * `search`    — whole-network mapping optimization (the paper's flow)
+//! * `analyze`   — overlap analysis of one consecutive-layer pair
+//! * `arch`      — dump/validate architecture configurations
+//! * `export`    — write a zoo network as a workload description file
+//! * `exec`      — run the tiny-CNN end-to-end engine over PJRT artifacts
+//! * `list`      — list zoo networks and their layers
+//!
+//! Run `repro help` for usage.
+
+use fastoverlapim::arch::{arch_from_yaml, arch_to_yaml};
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::{cycles, speedup, Table};
+use fastoverlapim::util::cli::Args;
+use fastoverlapim::workload::{parser, zoo};
+use std::time::Duration;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("search") => cmd_search(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("arch") => cmd_arch(&args),
+        Some("export") => cmd_export(&args),
+        Some("exec") => cmd_exec(&args),
+        Some("list") => cmd_list(),
+        Some("help") | None => usage(),
+        Some(other) => {
+            eprintln!("unknown subcommand `{other}`");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "\
+repro — Fast-OverlaPIM reproduction driver
+
+USAGE: repro <subcommand> [options]
+
+SUBCOMMANDS
+  search   --net <zoo|file.yaml> [--arch dram|reram|small|file.yaml]
+           [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
+           [--metric seq|overlap|transform] [--engine analytical|exhaustive]
+           [--deadline-ms T] [--refine N] [--per-layer] [--csv]
+  analyze  --net <zoo> --pair I [--budget N] [--seed S]
+  arch     [--config dram|reram|small|file.yaml] [--dump]
+  export   --net <zoo> [--out file.yaml]
+  exec     [--policy inorder|transformed|both] [--budget N] [--seed S]
+           [--workers N] [--artifacts DIR]
+  list
+"
+    );
+}
+
+fn load_arch(args: &Args) -> Arch {
+    let name = args.get_or("arch", args.get_or("config", "dram"));
+    match name {
+        "dram" => Arch::dram_pim(),
+        "reram" => Arch::reram_pim(),
+        "small" => Arch::dram_pim_small(),
+        path => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("reading arch config {path}: {e}"));
+            arch_from_yaml(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"))
+        }
+    }
+}
+
+fn load_net(args: &Args) -> Network {
+    let name = args.get("net").unwrap_or("resnet18");
+    if let Some(net) = zoo::by_name(name) {
+        return net;
+    }
+    let text = std::fs::read_to_string(name)
+        .unwrap_or_else(|e| panic!("reading network file {name}: {e}"));
+    parser::network_from_yaml(&text).unwrap_or_else(|e| panic!("parsing {name}: {e}"))
+}
+
+fn mapper_config(args: &Args) -> MapperConfig {
+    let mut cfg = MapperConfig {
+        budget: args.get_u64("budget", 100) as usize,
+        seed: args.get_u64("seed", 0xFA57),
+        ..Default::default()
+    };
+    if let Some(ms) = args.get("deadline-ms") {
+        cfg.deadline = Some(Duration::from_millis(ms.parse().expect("--deadline-ms integer")));
+    }
+    cfg.refine_passes = args.get_u64("refine", 1) as usize;
+    cfg.engine = match args.get_or("engine", "analytical") {
+        "analytical" => AnalysisEngine::Analytical,
+        "exhaustive" => AnalysisEngine::Exhaustive,
+        other => panic!("unknown engine `{other}`"),
+    };
+    cfg
+}
+
+fn strategy(args: &Args) -> SearchStrategy {
+    match args.get_or("strategy", "forward") {
+        "forward" => SearchStrategy::Forward,
+        "backward" => SearchStrategy::Backward,
+        "middle" => SearchStrategy::Middle(MiddleHeuristic::LargestOutput),
+        "middle2" => SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
+        other => panic!("unknown strategy `{other}`"),
+    }
+}
+
+fn cmd_search(args: &Args) {
+    let arch = load_arch(args);
+    let net = load_net(args);
+    let cfg = mapper_config(args);
+    let strat = strategy(args);
+    let metric = match args.get_or("metric", "transform") {
+        "seq" | "sequential" => Metric::Sequential,
+        "overlap" => Metric::Overlap,
+        "transform" => Metric::Transform,
+        other => panic!("unknown metric `{other}`"),
+    };
+    eprintln!(
+        "searching {} on {} (budget {}, {:?}, {:?}, {:?} engine)...",
+        net.name, arch.name, cfg.budget, strat, metric, cfg.engine
+    );
+    let search = NetworkSearch::new(&arch, cfg, strat);
+    let plan = search.run(&net, metric);
+
+    let mut t = Table::new(
+        &format!("{} / {} / {:?}", net.name, arch.name, metric),
+        &["total", "cycles", "vs sequential"],
+    );
+    t.row(vec!["sequential".into(), cycles(plan.total_sequential), "1.0x".into()]);
+    t.row(vec![
+        "overlapped".into(),
+        cycles(plan.total_overlapped),
+        speedup(plan.total_sequential, plan.total_overlapped),
+    ]);
+    t.row(vec![
+        "transformed".into(),
+        cycles(plan.total_transformed),
+        speedup(plan.total_sequential, plan.total_transformed),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "search: {} mappings evaluated in {:.2?}",
+        plan.mappings_evaluated, plan.wallclock
+    );
+
+    if args.has_flag("per-layer") {
+        let mut t = Table::new(
+            "per-layer contributions (cycles)",
+            &["layer", "sequential", "overlapped", "transformed", "overlap frac"],
+        );
+        for l in &plan.layers {
+            t.row(vec![
+                l.name.clone(),
+                cycles(l.sequential_contribution()),
+                cycles(l.overlapped_contribution()),
+                cycles(l.transformed_contribution()),
+                format!("{:.2}", l.overlap.map_or(0.0, |o| o.overlap_fraction)),
+            ]);
+        }
+        if args.has_flag("csv") {
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+}
+
+fn cmd_analyze(args: &Args) {
+    let arch = load_arch(args);
+    let net = load_net(args);
+    let chain = net.chain();
+    let i = args.get_u64("pair", 0) as usize;
+    assert!(i + 1 < chain.len(), "--pair {i} out of range (chain len {})", chain.len());
+    let cfg = mapper_config(args);
+    let mut mapper = Mapper::new(&arch, cfg);
+    let (la, lb) = (&net.layers[chain[i]], &net.layers[chain[i + 1]]);
+    let ea = mapper.search_layer(la, &[]).expect("mapping for producer");
+    let eb = mapper.search_layer(lb, &[]).expect("mapping for consumer");
+    let pair = LayerPair::new((la, &ea.mapping, &ea.stats), (lb, &eb.mapping, &eb.stats));
+    let ready = AnalyticalOverlap::default().ready_times(&pair);
+    let ov = overlapped_latency(&ea.stats, &eb.stats, &ready);
+    let tr = transform_schedule(&pair, &TransformConfig::default());
+    println!("pair {} -> {}", la.name, lb.name);
+    println!("  producer mapping:\n{}", indent(&ea.mapping.render(&arch)));
+    println!("  consumer mapping:\n{}", indent(&eb.mapping.render(&arch)));
+    println!("  sequential end : {}", cycles(ea.stats.latency_cycles + eb.stats.latency_cycles));
+    println!(
+        "  overlapped end : {} (saving {}, frac {:.2})",
+        cycles(ov.overlapped_end),
+        cycles(ov.saving),
+        ov.overlap_fraction
+    );
+    println!(
+        "  transformed end: {} (moved {:.0}%, penalty {})",
+        cycles(tr.transformed_end),
+        tr.moved_fraction * 100.0,
+        cycles(tr.penalty_cycles)
+    );
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}")).collect::<Vec<_>>().join("\n")
+}
+
+fn cmd_arch(args: &Args) {
+    let arch = load_arch(args);
+    arch.validate().expect("architecture must validate");
+    if args.has_flag("dump") {
+        print!("{}", arch_to_yaml(&arch));
+        return;
+    }
+    println!("architecture `{}` ({})", arch.name, arch.technology);
+    let mut t = Table::new(
+        "levels",
+        &["level", "instances", "word bits", "rd bw", "wr bw", "pim ops"],
+    );
+    for l in &arch.levels {
+        t.row(vec![
+            l.name.clone(),
+            l.instances.to_string(),
+            l.word_bits.to_string(),
+            l.read_bandwidth.to_string(),
+            l.write_bandwidth.to_string(),
+            l.pim_ops
+                .iter()
+                .map(|o| format!("{}:{}", o.name, o.latency))
+                .collect::<Vec<_>>()
+                .join(" "),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("aap = {} cycles; 16-bit add = {} cycles; mul = {} cycles",
+        arch.aap_cycles(), arch.op_cycles("add"), arch.op_cycles("mul"));
+}
+
+fn cmd_export(args: &Args) {
+    let net = load_net(args);
+    let text = parser::network_to_yaml(&net);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).expect("writing network file");
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+}
+
+fn cmd_exec(args: &Args) {
+    use fastoverlapim::exec::tiny::TinyCnnEngine;
+    use fastoverlapim::exec::SchedulePolicy;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(fastoverlapim::runtime::default_artifacts_dir);
+    if !dir.join("manifest.yaml").exists() {
+        eprintln!("artifacts not built: run `make artifacts` first (looked in {})", dir.display());
+        std::process::exit(1);
+    }
+    let budget = args.get_u64("budget", 60) as usize;
+    let seed = args.get_u64("seed", 7);
+    let workers = args.get_u64("workers", 4) as usize;
+    let engine = TinyCnnEngine::new(&dir, budget, seed, Metric::Transform)
+        .expect("engine construction");
+    println!("runtime platform: {}", engine.device.platform().expect("device"));
+    let policies: Vec<SchedulePolicy> = match args.get_or("policy", "both") {
+        "inorder" => vec![SchedulePolicy::InOrder],
+        "transformed" => vec![SchedulePolicy::Transformed],
+        "both" => vec![SchedulePolicy::InOrder, SchedulePolicy::Transformed],
+        other => panic!("unknown policy `{other}`"),
+    };
+    let mut t = Table::new(
+        "tiny-cnn end-to-end over PJRT tiles",
+        &["policy", "sim cycles", "vs sequential", "tiles", "wallclock", "max |err| vs full"],
+    );
+    let outcomes = engine.run_policies(&policies, workers).expect("engine run");
+    for out in outcomes {
+        assert!(out.max_abs_err_vs_full < 1e-2, "numerics drifted: {out:?}");
+        t.row(vec![
+            format!("{:?}", out.policy),
+            cycles(out.sim_cycles),
+            speedup(out.sequential_cycles, out.sim_cycles),
+            out.tiles_executed.to_string(),
+            format!("{:.2?}", out.wallclock),
+            format!("{:.2e}", out.max_abs_err_vs_full),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_list() {
+    let mut t = Table::new("model zoo", &["name", "layers", "chain", "GMACs"]);
+    for (name, net) in zoo::all() {
+        t.row(vec![
+            name.to_string(),
+            net.layers.len().to_string(),
+            net.chain().len().to_string(),
+            format!("{:.2}", net.total_macs() as f64 / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,504 @@
+//! Loop-nest mapping representation (paper §IV-E, Fig. 8).
+//!
+//! A [`Mapping`] describes how one layer's 7D iteration space is decomposed
+//! over the storage hierarchy, Timeloop-style: each architecture level
+//! carries an ordered sub-nest of loops, each loop splitting one problem
+//! dimension either **spatially** (`parallel_for` — across the child
+//! instances of that level) or **temporally** (`for` — across sequential
+//! steps). The innermost ("interior") nest describes the per-step tile a
+//! compute instance (bank) processes: its spatial loops spread output
+//! elements across the bank's column lanes, its temporal loops serialize
+//! the reduction inside each lane.
+//!
+//! Everything the framework derives — data spaces, temporal steps, overlap
+//! ready-times, PIM latency — is a pure function of (layer, arch, mapping).
+
+use crate::arch::Arch;
+use crate::workload::Layer;
+use std::fmt;
+
+/// The seven problem dimensions of the paper's representation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Batch.
+    N,
+    /// Output channels.
+    K,
+    /// Input channels (reduction).
+    C,
+    /// Output height.
+    P,
+    /// Output width.
+    Q,
+    /// Weight height (reduction).
+    R,
+    /// Weight width (reduction).
+    S,
+}
+
+impl Dim {
+    /// All dimensions, canonical order.
+    pub const ALL: [Dim; 7] = [Dim::N, Dim::K, Dim::C, Dim::P, Dim::Q, Dim::R, Dim::S];
+
+    /// Output-space dimensions (define the produced data space).
+    pub const OUTPUT: [Dim; 4] = [Dim::N, Dim::K, Dim::P, Dim::Q];
+
+    /// Reduction dimensions (consumed, never produced).
+    pub const REDUCTION: [Dim; 3] = [Dim::C, Dim::R, Dim::S];
+
+    /// Dense index for table lookups.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::K => 1,
+            Dim::C => 2,
+            Dim::P => 3,
+            Dim::Q => 4,
+            Dim::R => 5,
+            Dim::S => 6,
+        }
+    }
+
+    /// Is this a reduction dimension?
+    #[inline]
+    pub fn is_reduction(self) -> bool {
+        matches!(self, Dim::C | Dim::R | Dim::S)
+    }
+
+    pub fn parse(s: &str) -> Option<Dim> {
+        match s {
+            "N" | "n" => Some(Dim::N),
+            "K" | "k" => Some(Dim::K),
+            "C" | "c" => Some(Dim::C),
+            "P" | "p" => Some(Dim::P),
+            "Q" | "q" => Some(Dim::Q),
+            "R" | "r" => Some(Dim::R),
+            "S" | "s" => Some(Dim::S),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// A dense per-dimension table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimMap<T>(pub [T; 7]);
+
+impl<T: Copy + Default> Default for DimMap<T> {
+    fn default() -> Self {
+        DimMap([T::default(); 7])
+    }
+}
+
+impl<T> std::ops::Index<Dim> for DimMap<T> {
+    type Output = T;
+    fn index(&self, d: Dim) -> &T {
+        &self.0[d.index()]
+    }
+}
+
+impl<T> std::ops::IndexMut<Dim> for DimMap<T> {
+    fn index_mut(&mut self, d: Dim) -> &mut T {
+        &mut self.0[d.index()]
+    }
+}
+
+/// Spatial (`parallel_for`) or temporal (`for`) loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopKind {
+    Spatial,
+    Temporal,
+}
+
+/// One loop of the nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Loop {
+    pub dim: Dim,
+    pub bound: u64,
+    pub kind: LoopKind,
+}
+
+impl Loop {
+    pub fn spatial(dim: Dim, bound: u64) -> Loop {
+        Loop { dim, bound, kind: LoopKind::Spatial }
+    }
+
+    pub fn temporal(dim: Dim, bound: u64) -> Loop {
+        Loop { dim, bound, kind: LoopKind::Temporal }
+    }
+
+    #[inline]
+    pub fn is_spatial(&self) -> bool {
+        self.kind == LoopKind::Spatial
+    }
+}
+
+/// A complete mapping of one layer onto the hierarchy.
+///
+/// `nests[i]` for `i <= compute_level` is the sub-nest of architecture
+/// level `i` (outer→inner). `nests[compute_level + 1]` is the bank-interior
+/// nest defining the per-step tile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    pub nests: Vec<Vec<Loop>>,
+    /// Padded problem bounds: for each dim, the product of all loop bounds.
+    /// Always >= the layer's true bounds; the excess is padding waste that
+    /// the performance model charges for.
+    pub bounds: DimMap<u64>,
+}
+
+impl Mapping {
+    /// Build from nests, computing padded bounds. Loops with bound 1 are
+    /// dropped (they are no-ops and only slow analysis down).
+    pub fn new(nests: Vec<Vec<Loop>>) -> Mapping {
+        let mut nests: Vec<Vec<Loop>> = nests
+            .into_iter()
+            .map(|nest| nest.into_iter().filter(|l| l.bound > 1).collect())
+            .collect();
+        // Keep at least the interior nest materialized.
+        if nests.is_empty() {
+            nests.push(Vec::new());
+        }
+        let mut bounds = DimMap::<u64>([1; 7]);
+        for nest in &nests {
+            for l in nest {
+                bounds[l.dim] *= l.bound;
+            }
+        }
+        Mapping { nests, bounds }
+    }
+
+    /// Index of the interior nest.
+    #[inline]
+    pub fn interior_idx(&self) -> usize {
+        self.nests.len() - 1
+    }
+
+    /// The interior (within-step) tile extent of a dimension.
+    pub fn tile(&self, d: Dim) -> u64 {
+        self.nests[self.interior_idx()]
+            .iter()
+            .filter(|l| l.dim == d)
+            .map(|l| l.bound)
+            .product()
+    }
+
+    /// Output elements computed per temporal step by one compute instance.
+    pub fn outputs_per_step(&self) -> u64 {
+        self.tile(Dim::N) * self.tile(Dim::K) * self.tile(Dim::P) * self.tile(Dim::Q)
+    }
+
+    /// Serial MACs per output element within one step.
+    pub fn macs_per_output(&self) -> u64 {
+        // Reduction extent inside the step: interior temporal loops over
+        // reduction dims (spatial reduction loops produce partial sums in
+        // different lanes instead and are charged reduction-movement cost).
+        self.nests[self.interior_idx()]
+            .iter()
+            .filter(|l| l.dim.is_reduction() && !l.is_spatial())
+            .map(|l| l.bound)
+            .product()
+    }
+
+    /// Reduction lanes: interior *spatial* loops over reduction dims.
+    /// Partial sums land in different columns and must be reduced with
+    /// extra data movement (paper §IV-C step 2–3).
+    pub fn reduction_lanes(&self) -> u64 {
+        self.nests[self.interior_idx()]
+            .iter()
+            .filter(|l| l.dim.is_reduction() && l.is_spatial())
+            .map(|l| l.bound)
+            .product()
+    }
+
+    /// All hierarchy loops (levels 0..=compute), outer→inner, with their
+    /// level index.
+    pub fn hierarchy_loops(&self) -> impl Iterator<Item = (usize, &Loop)> {
+        self.nests[..self.interior_idx()]
+            .iter()
+            .enumerate()
+            .flat_map(|(i, nest)| nest.iter().map(move |l| (i, l)))
+    }
+
+    /// Total temporal steps a compute instance executes
+    /// (product of hierarchy temporal bounds).
+    pub fn temporal_steps(&self) -> u64 {
+        self.hierarchy_loops()
+            .filter(|(_, l)| !l.is_spatial())
+            .map(|(_, l)| l.bound)
+            .product()
+    }
+
+    /// Compute instances used (product of hierarchy spatial bounds).
+    pub fn spatial_instances(&self) -> u64 {
+        self.hierarchy_loops()
+            .filter(|(_, l)| l.is_spatial())
+            .map(|(_, l)| l.bound)
+            .product()
+    }
+
+    /// Per-step data-space extent of `d` seen at hierarchy position:
+    /// the product of bounds of `d`-loops strictly inner to hierarchy
+    /// position `(level, loop index)`, including the interior tile.
+    /// This is the paper's `D(d)` before any outer loop splits it.
+    pub fn inner_extent(&self, d: Dim, level: usize, idx_in_level: usize) -> u64 {
+        let mut ext = self.tile(d);
+        for (li, nest) in self.nests[..self.interior_idx()].iter().enumerate() {
+            for (ji, l) in nest.iter().enumerate() {
+                if l.dim == d && (li > level || (li == level && ji > idx_in_level)) {
+                    ext *= l.bound;
+                }
+            }
+        }
+        ext
+    }
+
+    /// Validate against an architecture + layer:
+    /// * padded bounds cover the layer's true bounds,
+    /// * spatial bounds at each hierarchy level fit the child fan-out,
+    /// * interior spatial lanes fit the column count,
+    /// * interior output-dim loops are spatial (an output element belongs
+    ///   to exactly one column lane),
+    /// * per-bank footprint fits the bank capacity.
+    pub fn validate(&self, arch: &Arch, layer: &Layer) -> Result<(), MappingError> {
+        let compute = arch.compute_level();
+        if self.nests.len() != compute + 2 {
+            return Err(MappingError(format!(
+                "expected {} nests (hierarchy 0..={} + interior), got {}",
+                compute + 2,
+                compute,
+                self.nests.len()
+            )));
+        }
+        for d in Dim::ALL {
+            if self.bounds[d] < layer.dim(d) {
+                return Err(MappingError(format!(
+                    "dim {d}: padded bound {} < layer bound {}",
+                    self.bounds[d],
+                    layer.dim(d)
+                )));
+            }
+            // Guard against absurd over-padding (>2x waste).
+            if self.bounds[d] > layer.dim(d).saturating_mul(2) && layer.dim(d) > 1 {
+                return Err(MappingError(format!(
+                    "dim {d}: padded bound {} over-pads layer bound {}",
+                    self.bounds[d],
+                    layer.dim(d)
+                )));
+            }
+        }
+        for (i, nest) in self.nests[..=compute].iter().enumerate() {
+            let spatial: u64 = nest.iter().filter(|l| l.is_spatial()).map(|l| l.bound).product();
+            let cap = if i < compute { arch.fanout(i + 1) } else { 1 };
+            // The compute level's own nest has no child instances to
+            // spread over; its spatial loops are illegal.
+            if i == compute && spatial > 1 {
+                return Err(MappingError(
+                    "compute-level nest cannot hold spatial loops (use the interior nest for lanes)"
+                        .into(),
+                ));
+            }
+            if i < compute && spatial > cap {
+                return Err(MappingError(format!(
+                    "level {} ({}): spatial product {} exceeds fan-out {}",
+                    i, arch.levels[i].name, spatial, cap
+                )));
+            }
+        }
+        let interior = &self.nests[self.interior_idx()];
+        let lanes: u64 = interior.iter().filter(|l| l.is_spatial()).map(|l| l.bound).product();
+        if lanes > arch.lanes_per_compute_instance() {
+            return Err(MappingError(format!(
+                "interior spatial product {} exceeds {} column lanes",
+                lanes,
+                arch.lanes_per_compute_instance()
+            )));
+        }
+        for l in interior {
+            if !l.dim.is_reduction() && !l.is_spatial() && l.dim != Dim::N {
+                return Err(MappingError(format!(
+                    "interior temporal loop over output dim {} (one output element per lane)",
+                    l.dim
+                )));
+            }
+        }
+        // Per-bank footprint: the layer slice assigned to one bank across
+        // all its steps must fit the bank.
+        let bank = &arch.levels[compute];
+        if bank.entry_bits > 0 {
+            let banks = self.spatial_instances().max(1);
+            let wb = u64::from(arch.levels[0].word_bits.max(1));
+            let footprint_bits = (layer.input_size() + layer.output_size() + layer.weight_size())
+                * wb
+                / banks.max(1);
+            if footprint_bits > bank.entry_bits {
+                return Err(MappingError(format!(
+                    "per-bank footprint {} bits exceeds bank capacity {} bits",
+                    footprint_bits, bank.entry_bits
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Padding waste factor: padded iteration volume / true volume (>= 1).
+    pub fn padding_waste(&self, layer: &Layer) -> f64 {
+        let padded: f64 = Dim::ALL.iter().map(|&d| self.bounds[d] as f64).product();
+        let real: f64 = Dim::ALL.iter().map(|&d| layer.dim(d) as f64).product();
+        padded / real
+    }
+
+    /// Timeloop-style textual rendering (for logs and the CLI).
+    pub fn render(&self, arch: &Arch) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let compute = arch.compute_level();
+        for (i, nest) in self.nests.iter().enumerate() {
+            let name = if i <= compute {
+                arch.levels[i].name.as_str()
+            } else {
+                "interior"
+            };
+            let _ = writeln!(s, "{name}:");
+            for l in nest {
+                let kw = if l.is_spatial() { "parallel_for" } else { "for" };
+                let _ = writeln!(s, "  {kw} {} in 0..{}", l.dim, l.bound);
+            }
+        }
+        s
+    }
+}
+
+/// Mapping validation error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MappingError(pub String);
+
+impl fmt::Display for MappingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid mapping: {}", self.0)
+    }
+}
+
+impl std::error::Error for MappingError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+
+    fn demo_layer() -> Layer {
+        Layer::conv("demo", 1, 16, 8, 8, 8, 3, 3, 1, 1)
+    }
+
+    /// A hand-built valid mapping for the small arch:
+    /// DRAM: for k in 0..2 | Channel: parallel_for k in 0..? ...
+    fn demo_mapping() -> Mapping {
+        Mapping::new(vec![
+            // DRAM nest: split K temporally in 2.
+            vec![Loop::temporal(Dim::K, 2)],
+            // Channel nest: spread P across 4 banks.
+            vec![Loop::spatial(Dim::P, 4)],
+            // Bank nest: steps over Q and P-residue.
+            vec![Loop::temporal(Dim::P, 2), Loop::temporal(Dim::Q, 4)],
+            // Interior: one (K=8, Q=2) tile per step across lanes, C/R/S serial.
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::Q, 2),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ])
+    }
+
+    #[test]
+    fn bounds_are_products() {
+        let m = demo_mapping();
+        assert_eq!(m.bounds[Dim::K], 16);
+        assert_eq!(m.bounds[Dim::P], 8);
+        assert_eq!(m.bounds[Dim::Q], 8);
+        assert_eq!(m.bounds[Dim::C], 8);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let m = demo_mapping();
+        assert_eq!(m.temporal_steps(), 2 * 2 * 4);
+        assert_eq!(m.spatial_instances(), 4);
+        assert_eq!(m.outputs_per_step(), 8 * 2);
+        assert_eq!(m.macs_per_output(), 8 * 3 * 3);
+        assert_eq!(m.reduction_lanes(), 1);
+    }
+
+    #[test]
+    fn validates_on_small_arch() {
+        let arch = Arch::dram_pim_small();
+        let m = demo_mapping();
+        m.validate(&arch, &demo_layer()).unwrap();
+    }
+
+    #[test]
+    fn spatial_overflow_rejected() {
+        let arch = Arch::dram_pim_small(); // 4 banks
+        let mut m = demo_mapping();
+        m.nests[1] = vec![Loop::spatial(Dim::P, 8)];
+        m.bounds[Dim::P] = 16; // keep bounds consistent-ish
+        assert!(m.validate(&arch, &demo_layer()).is_err());
+    }
+
+    #[test]
+    fn interior_temporal_output_dim_rejected() {
+        let arch = Arch::dram_pim_small();
+        let mut nests = demo_mapping().nests;
+        nests[3].push(Loop::temporal(Dim::K, 1)); // bound-1 dropped, ok
+        let m = Mapping::new(nests);
+        m.validate(&arch, &demo_layer()).unwrap();
+
+        let mut nests = demo_mapping().nests;
+        // Make K smaller upstream so adding temporal interior K keeps bounds sane.
+        nests[0] = vec![];
+        nests[3].push(Loop::temporal(Dim::K, 2));
+        let m = Mapping::new(nests);
+        assert!(m.validate(&arch, &demo_layer()).is_err());
+    }
+
+    #[test]
+    fn underfactored_dim_rejected() {
+        let arch = Arch::dram_pim_small();
+        let mut nests = demo_mapping().nests;
+        nests[0] = vec![]; // K now 8 < 16
+        let m = Mapping::new(nests);
+        assert!(m.validate(&arch, &demo_layer()).is_err());
+    }
+
+    #[test]
+    fn inner_extent_matches_manual() {
+        let m = demo_mapping();
+        // For Dim::P: loops are Channel spatial 4 (level 1, idx 0), then
+        // Bank temporal 2 (level 2 idx 0); interior tile P = 1.
+        assert_eq!(m.inner_extent(Dim::P, 1, 0), 2); // below channel loop: bank's 2
+        assert_eq!(m.inner_extent(Dim::P, 2, 0), 1);
+        // For Dim::K: DRAM temporal 2 at (0,0); inner = interior spatial 8.
+        assert_eq!(m.inner_extent(Dim::K, 0, 0), 8);
+    }
+
+    #[test]
+    fn render_contains_parallel_for() {
+        let arch = Arch::dram_pim_small();
+        let text = demo_mapping().render(&arch);
+        assert!(text.contains("parallel_for P in 0..4"));
+        assert!(text.contains("Bank:"));
+    }
+
+    #[test]
+    fn padding_waste_unity_for_exact() {
+        let m = demo_mapping();
+        assert!((m.padding_waste(&demo_layer()) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,479 @@
+//! Map-space construction and exploration (paper §IV-J).
+//!
+//! For a (layer, architecture) pair the map space is the set of valid
+//! [`Mapping`]s: per-dimension index factorizations across hierarchy
+//! positions, spatial/temporal designation, and intra-level loop
+//! permutations. The mapper explores it with deterministic seeded sampling
+//! (the paper's framework, like Timeloop, terminates after a fixed number
+//! of *valid* mappings — §IV-J) and exposes exhaustive enumeration for the
+//! small problems used in tests.
+
+use crate::arch::Arch;
+use crate::mapping::{Dim, DimMap, Loop, LoopKind, Mapping};
+use crate::util::factor::divisors;
+use crate::util::rng::SplitMix64;
+use crate::workload::Layer;
+
+/// User-defined per-layer mapping constraints (paper §IV-B: "the new
+/// interface takes the description of per-layer mapping constraints as
+/// inputs to assist with the mapping search").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MappingConstraint {
+    /// Pin the interior (per-step) tile extent of a dimension. Used by the
+    /// functional execution engine to make bank tiles match the AOT
+    /// executables' static shapes.
+    pub interior_tile: Vec<(Dim, u64)>,
+    /// Forbid padding a dimension (its factorization must be exact).
+    pub no_pad: Vec<Dim>,
+    /// Cap on the number of compute instances (banks) the mapping may use.
+    pub max_instances: Option<u64>,
+}
+
+/// Map-space tuning knobs.
+#[derive(Debug, Clone)]
+pub struct MapSpaceConfig {
+    /// Allow spatial loops over the C dimension in the interior nest
+    /// (partial sums across column lanes, charged reduction movement).
+    pub allow_lane_reduction: bool,
+    /// Candidate padded bounds per dimension (how many padding options to
+    /// consider beyond the exact bound).
+    pub pad_candidates: usize,
+    /// Resampling attempts before `sample` gives up.
+    pub max_attempts: usize,
+}
+
+impl Default for MapSpaceConfig {
+    fn default() -> Self {
+        Self { allow_lane_reduction: true, pad_candidates: 3, max_attempts: 64 }
+    }
+}
+
+/// The map space of one layer on one architecture.
+pub struct MapSpace<'a> {
+    pub arch: &'a Arch,
+    pub layer: &'a Layer,
+    pub constraint: MappingConstraint,
+    pub config: MapSpaceConfig,
+    /// Padded-bound candidates per dim (ascending, first = exact).
+    pad_options: DimMap<Vec<u64>>,
+}
+
+/// Hierarchy positions a dimension's factors are split across:
+/// for each level `i` in `0..=compute` a (spatial, temporal) pair, then
+/// (interior-spatial, interior-temporal).
+#[derive(Debug, Clone)]
+struct Split {
+    /// `per_level[i] = (spatial, temporal)` factors at hierarchy level i.
+    per_level: Vec<(u64, u64)>,
+    interior_spatial: u64,
+    interior_temporal: u64,
+}
+
+impl Split {
+    fn product(&self) -> u64 {
+        self.per_level.iter().map(|(s, t)| s * t).product::<u64>()
+            * self.interior_spatial
+            * self.interior_temporal
+    }
+}
+
+impl<'a> MapSpace<'a> {
+    pub fn new(
+        arch: &'a Arch,
+        layer: &'a Layer,
+        constraint: MappingConstraint,
+        config: MapSpaceConfig,
+    ) -> Self {
+        let mut pad_options: DimMap<Vec<u64>> = DimMap(std::array::from_fn(|_| Vec::new()));
+        for d in Dim::ALL {
+            pad_options[d] = pad_candidates(
+                layer.dim(d),
+                if constraint.no_pad.contains(&d) { 1 } else { config.pad_candidates },
+            );
+        }
+        Self { arch, layer, constraint, config, pad_options }
+    }
+
+    /// Convenience constructor with defaults.
+    pub fn with_defaults(arch: &'a Arch, layer: &'a Layer) -> Self {
+        Self::new(arch, layer, MappingConstraint::default(), MapSpaceConfig::default())
+    }
+
+    /// Sample one valid mapping, or `None` if `max_attempts` draws all
+    /// failed validation (tiny layers on big machines can be awkward).
+    pub fn sample(&self, rng: &mut SplitMix64) -> Option<Mapping> {
+        for _ in 0..self.config.max_attempts {
+            if let Some(m) = self.try_sample(rng) {
+                if m.validate(self.arch, self.layer).is_ok() {
+                    return Some(m);
+                }
+            }
+        }
+        None
+    }
+
+    fn try_sample(&self, rng: &mut SplitMix64) -> Option<Mapping> {
+        let compute = self.arch.compute_level();
+        let levels = compute + 1;
+        let max_banks = self
+            .constraint
+            .max_instances
+            .unwrap_or(u64::MAX)
+            .min(self.arch.compute_instances());
+
+        // Overlap-friendly bias (half of the samples): confine hierarchy
+        // reduction loops to the compute level and order them innermost.
+        // Reduction loops outer in the nest delay *every* output's
+        // completion to the layer's end (their revisit offset is
+        // (bound-1)·G), which forbids overlap; mappings with reduction
+        // innermost stream outputs as they finalize. Both halves stay in
+        // the map space — the metric decides.
+        let reduction_inner = rng.below(2) == 0;
+        // Streaming bias (a third of the reduction-inner samples): output
+        // channels packed into the lanes, rows (P) iterated temporally
+        // outermost — producer and consumer both stream row-major, the
+        // alignment that lets a consumer row start as soon as its halo
+        // rows land (Fig. 3's overlap-friendly execution).
+        let stream = reduction_inner && rng.below(3) == 0;
+
+        // Shared capacity budgets, consumed as dimensions draw factors so
+        // samples are valid-by-construction w.r.t. fan-outs and lanes.
+        let mut lanes_budget = self.arch.lanes_per_compute_instance();
+        let mut spatial_budget: Vec<u64> =
+            (0..levels).map(|i| if i < compute { self.arch.fanout(i + 1) } else { 1 }).collect();
+        // Additionally cap total banks.
+        let mut banks_budget = max_banks;
+
+        // 1. Choose padded bounds and split each dim across positions,
+        //    in shuffled order so no dimension hogs the budgets.
+        let mut splits: DimMap<Split> = DimMap(std::array::from_fn(|_| Split {
+            per_level: vec![(1, 1); levels],
+            interior_spatial: 1,
+            interior_temporal: 1,
+        }));
+        let mut order = Dim::ALL;
+        if stream {
+            // K draws its lane budget first (packed), then Q, P.
+            order = [Dim::K, Dim::Q, Dim::P, Dim::N, Dim::C, Dim::R, Dim::S];
+        } else {
+            rng.shuffle(&mut order);
+        }
+        for d in order {
+            let padded = *rng.choose(&self.pad_options[d]);
+            let split = self.sample_split(
+                d,
+                padded,
+                levels,
+                reduction_inner,
+                stream,
+                &mut lanes_budget,
+                &mut spatial_budget,
+                &mut banks_budget,
+                rng,
+            )?;
+            debug_assert_eq!(split.product(), padded);
+            splits[d] = split;
+        }
+
+        // 3. Materialize nests with a sampled intra-level permutation.
+        let mut nests: Vec<Vec<Loop>> = Vec::with_capacity(levels + 1);
+        for i in 0..levels {
+            let mut nest = Vec::new();
+            for d in Dim::ALL {
+                let (s, t) = splits[d].per_level[i];
+                if s > 1 {
+                    nest.push(Loop { dim: d, bound: s, kind: LoopKind::Spatial });
+                }
+                if t > 1 {
+                    nest.push(Loop { dim: d, bound: t, kind: LoopKind::Temporal });
+                }
+            }
+            rng.shuffle(&mut nest);
+            if reduction_inner && i == levels - 1 {
+                // Stable-partition: output-dim loops first (outer),
+                // reduction loops last (inner) in the compute-level nest.
+                nest.sort_by_key(|l| l.dim.is_reduction());
+            }
+            if stream {
+                // Row-major temporal order: P outer, then Q, then K,
+                // reduction innermost — at every level.
+                nest.sort_by_key(|l| match l.dim {
+                    Dim::P => 0,
+                    Dim::Q => 1,
+                    Dim::N => 2,
+                    Dim::K => 3,
+                    _ => 4,
+                });
+            }
+            nests.push(nest);
+        }
+        let mut interior = Vec::new();
+        for d in Dim::ALL {
+            if splits[d].interior_spatial > 1 {
+                interior.push(Loop {
+                    dim: d,
+                    bound: splits[d].interior_spatial,
+                    kind: LoopKind::Spatial,
+                });
+            }
+            if splits[d].interior_temporal > 1 {
+                interior.push(Loop {
+                    dim: d,
+                    bound: splits[d].interior_temporal,
+                    kind: LoopKind::Temporal,
+                });
+            }
+        }
+        nests.push(interior);
+        Some(Mapping::new(nests))
+    }
+
+    /// Split one dimension's padded bound across hierarchy positions,
+    /// drawing spatial factors from the shared capacity budgets so the
+    /// result respects fan-outs and lane counts by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_split(
+        &self,
+        d: Dim,
+        padded: u64,
+        levels: usize,
+        reduction_inner: bool,
+        stream: bool,
+        lanes_budget: &mut u64,
+        spatial_budget: &mut [u64],
+        banks_budget: &mut u64,
+        rng: &mut SplitMix64,
+    ) -> Option<Split> {
+        let pinned_tile = self
+            .constraint
+            .interior_tile
+            .iter()
+            .find(|(pd, _)| *pd == d)
+            .map(|&(_, v)| v);
+
+        // Interior tile first (possibly pinned), then the remainder across
+        // hierarchy levels. Output dims occupy lanes spatially; reduction
+        // dims run temporally in a lane (with an optional lane-spatial C
+        // factor producing cross-lane partial sums).
+        let choose_capped = |cap: u64, n: u64, rng: &mut SplitMix64| -> u64 {
+            let opts: Vec<u64> = divisors(n).into_iter().filter(|&v| v <= cap).collect();
+            *rng.choose(&opts)
+        };
+        let (interior_spatial, interior_temporal, rest) = if d.is_reduction() {
+            let tile = match pinned_tile {
+                Some(t) => {
+                    if padded % t != 0 {
+                        return None;
+                    }
+                    t
+                }
+                None => *rng.choose(&divisors(padded)),
+            };
+            let lane = if d == Dim::C && self.config.allow_lane_reduction && rng.below(4) == 0 {
+                choose_capped(*lanes_budget, tile, rng)
+            } else {
+                1
+            };
+            *lanes_budget /= lane;
+            (lane, tile / lane, padded / tile)
+        } else {
+            let tile = match pinned_tile {
+                Some(t) => {
+                    if padded % t != 0 || t > *lanes_budget {
+                        return None;
+                    }
+                    t
+                }
+                None if stream && d == Dim::K => {
+                    // Streaming: pack the channels into the lanes.
+                    *divisors(padded).iter().filter(|&&v| v <= *lanes_budget).max().unwrap()
+                }
+                None => choose_capped(*lanes_budget, padded, rng),
+            };
+            *lanes_budget /= tile;
+            (tile, 1, padded / tile)
+        };
+
+        // Distribute the remainder over (spatial, temporal) per level.
+        // Spatial draws are capped by the remaining fan-out budgets; the
+        // compute level's own nest never holds spatial loops. Reduction
+        // dims stay temporal in the hierarchy (cross-bank partial sums are
+        // modelled but not sampled by default).
+        let mut per_level = Vec::with_capacity(levels);
+        let mut rest = rest;
+        if d.is_reduction() && reduction_inner {
+            // Entire hierarchy residue lives at the compute level.
+            for i in 0..levels {
+                per_level.push((1, if i == levels - 1 { rest } else { 1 }));
+            }
+            return Some(Split { per_level, interior_spatial, interior_temporal });
+        }
+        for i in 0..levels {
+            let s = if d.is_reduction() || i == levels - 1 {
+                1
+            } else {
+                let s = choose_capped(spatial_budget[i].min(*banks_budget), rest, rng);
+                spatial_budget[i] /= s;
+                *banks_budget /= s;
+                s
+            };
+            rest /= s;
+            let t = if i == levels - 1 {
+                rest
+            } else {
+                *rng.choose(&divisors(rest))
+            };
+            rest /= t;
+            per_level.push((s, t));
+        }
+        debug_assert_eq!(rest, 1);
+        Some(Split { per_level, interior_spatial, interior_temporal })
+    }
+
+    /// A deterministic, always-valid fallback mapping: outputs spread
+    /// spatially as far as the fan-out allows, everything else temporal,
+    /// reduction fully serial in the interior. Returns `None` only if even
+    /// this cannot fit (layer slice too small).
+    pub fn default_mapping(&self) -> Option<Mapping> {
+        let mut rng = SplitMix64::new(0xD0D0);
+        // The sampler with many attempts acts as a robust constructor.
+        for _ in 0..512 {
+            if let Some(m) = self.try_sample(&mut rng) {
+                if m.validate(self.arch, self.layer).is_ok() {
+                    return Some(m);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Padding candidates for bound `n`: the exact value plus up to `extra`
+/// smoother values below `2n` (next multiples of 2 and 4, next power of
+/// two), ascending.
+pub fn pad_candidates(n: u64, extra: usize) -> Vec<u64> {
+    let mut cands = vec![n];
+    if extra > 1 && n > 1 {
+        let mut more = vec![n.next_multiple_of(2), n.next_multiple_of(4), n.next_power_of_two()];
+        more.retain(|&m| m > n && m < 2 * n);
+        more.sort_unstable();
+        more.dedup();
+        more.truncate(extra - 1);
+        cands.extend(more);
+    }
+    cands
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+
+    fn layer() -> Layer {
+        Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn sample_produces_valid_mappings() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(1);
+        let mut found = 0;
+        for _ in 0..100 {
+            if let Some(m) = ms.sample(&mut rng) {
+                m.validate(&arch, &l).unwrap();
+                found += 1;
+            }
+        }
+        assert!(found >= 90, "sampler should almost always succeed, got {found}");
+    }
+
+    #[test]
+    fn samples_are_diverse() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(2);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..50 {
+            if let Some(m) = ms.sample(&mut rng) {
+                distinct.insert(format!("{m:?}"));
+            }
+        }
+        assert!(distinct.len() > 10, "want diversity, got {}", distinct.len());
+    }
+
+    #[test]
+    fn pinned_interior_tile_respected() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let constraint = MappingConstraint {
+            interior_tile: vec![(Dim::K, 4), (Dim::P, 2), (Dim::Q, 2)],
+            no_pad: vec![Dim::K, Dim::P, Dim::Q],
+            ..Default::default()
+        };
+        let ms = MapSpace::new(&arch, &l, constraint, MapSpaceConfig::default());
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..20 {
+            let m = ms.sample(&mut rng).expect("constrained sample");
+            assert_eq!(m.tile(Dim::K), 4);
+            assert_eq!(m.tile(Dim::P), 2);
+            assert_eq!(m.tile(Dim::Q), 2);
+        }
+    }
+
+    #[test]
+    fn no_pad_keeps_exact_bounds() {
+        let arch = Arch::dram_pim_small();
+        let l = Layer::conv("odd", 1, 6, 3, 7, 7, 3, 3, 1, 1);
+        let constraint =
+            MappingConstraint { no_pad: Dim::ALL.to_vec(), ..Default::default() };
+        let ms = MapSpace::new(&arch, &l, constraint, MapSpaceConfig::default());
+        let mut rng = SplitMix64::new(4);
+        let m = ms.sample(&mut rng).expect("sample");
+        for d in Dim::ALL {
+            assert_eq!(m.bounds[d], l.dim(d), "dim {d}");
+        }
+    }
+
+    #[test]
+    fn pad_candidates_shape() {
+        assert_eq!(pad_candidates(7, 3), vec![7, 8]);
+        assert_eq!(pad_candidates(7, 1), vec![7]);
+        assert_eq!(pad_candidates(1, 3), vec![1]);
+        let c = pad_candidates(112, 3);
+        assert_eq!(c[0], 112);
+        assert!(c.iter().all(|&v| v < 224));
+    }
+
+    #[test]
+    fn default_mapping_exists_for_all_zoo_layers() {
+        let arch = Arch::dram_pim();
+        for (_, net) in crate::workload::zoo::all() {
+            for l in &net.layers {
+                let ms = MapSpace::with_defaults(&arch, l);
+                assert!(
+                    ms.default_mapping().is_some(),
+                    "no default mapping for {}",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_instances_constraint() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let constraint =
+            MappingConstraint { max_instances: Some(2), ..Default::default() };
+        let ms = MapSpace::new(&arch, &l, constraint, MapSpaceConfig::default());
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..20 {
+            if let Some(m) = ms.sample(&mut rng) {
+                assert!(m.spatial_instances() <= 2);
+            }
+        }
+    }
+}

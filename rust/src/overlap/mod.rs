@@ -1,0 +1,682 @@
+//! Computational-overlap analysis between consecutive layers
+//! (paper §IV-G "Overlapping Definition" and §IV-H "Overlap Analysis with
+//! Analytical Algorithm").
+//!
+//! Given a producer layer `n` and a consumer layer `n+1`, both with fixed
+//! mappings, the analysis answers: *for every temporal step `t` of the
+//! consumer, at which producer cycle is the whole input operation space
+//! `I_t^{n+1}` ready?* The consumer step may start as soon as its inputs
+//! are ready and an instance is free; the resulting schedule yields the
+//! overlapped latency, the optimization metric of Fast-OverlaPIM.
+//!
+//! Two engines implement the analysis:
+//!
+//! * [`ExhaustiveOverlap`] — OverlaPIM's O(N·M) algorithm: compare every
+//!   consumer input data space against every producer output data space
+//!   and take the latest intersecting step. Kept as the runtime baseline
+//!   (Fig. 14) and as the oracle for the analytical engine.
+//! * [`AnalyticalOverlap`] — the paper's Eqs. 3–6: walk the producer's
+//!   loop nest once per query, decoding the latest *finish step* of the
+//!   input region directly (`O(#loops)` per step). The step index is a sum
+//!   of independent per-dimension digit contributions, so the maximum over
+//!   a box is the sum of per-dimension digit-walk maxima
+//!   ([`LoopTable::max_finish_step_over_box`]).
+
+use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range};
+use crate::mapping::Mapping;
+use crate::perf::LayerStats;
+use crate::workload::{Layer, LayerKind};
+
+/// A box in *producer output* coordinates `[K, P, Q]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutBox {
+    pub k: Range,
+    pub p: Range,
+    pub q: Range,
+}
+
+/// Analysis tuning knobs.
+#[derive(Debug, Clone)]
+pub struct OverlapConfig {
+    /// Maximum consumer temporal steps probed per pair. Mappings with more
+    /// steps are probed at an even stride (first and last always probed);
+    /// the overlapped-latency estimate is then a lower bound that becomes
+    /// exact when `steps <= max_probe_steps`. Bounded probing is what keeps
+    /// whole-network search tractable; the final chosen mapping can be
+    /// re-analyzed exactly.
+    pub max_probe_steps: usize,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        Self { max_probe_steps: 2048 }
+    }
+}
+
+/// Ready times of consumer steps, possibly probed at a stride.
+#[derive(Debug, Clone)]
+pub struct ReadyTimes {
+    /// `(consumer step index, ready cycle on the producer clock)`,
+    /// ascending in step index.
+    pub probes: Vec<(u64, u64)>,
+    /// Total consumer temporal steps.
+    pub total_steps: u64,
+}
+
+impl ReadyTimes {
+    /// Latest ready cycle across probes (the whole-layer dependency).
+    pub fn max_ready(&self) -> u64 {
+        self.probes.iter().map(|&(_, r)| r).max().unwrap_or(0)
+    }
+}
+
+/// A producer/consumer pair under analysis: layers, mappings, performance
+/// stats, and the precomputed coordinate transform between the consumer's
+/// input space and the producer's output space.
+pub struct LayerPair<'a> {
+    pub producer: &'a Layer,
+    pub producer_mapping: &'a Mapping,
+    pub producer_stats: &'a LayerStats,
+    pub consumer: &'a Layer,
+    pub consumer_mapping: &'a Mapping,
+    pub consumer_stats: &'a LayerStats,
+    /// Producer loop table (decodes finish steps analytically).
+    pub producer_table: LoopTable,
+    /// Consumer loop table (decodes consumer data spaces).
+    pub consumer_table: LoopTable,
+    /// Pooling factor between the layers (producer `pool_after`).
+    pool: u64,
+    /// Producer movement cycles amortized per producer step: outputs
+    /// stream to the consumer's input locations as they complete.
+    per_step_move: u64,
+    /// Consumer banks with distinct input regions (see
+    /// [`LoopTable::representative_banks`]).
+    consumer_rep_banks: Vec<u64>,
+}
+
+impl<'a> LayerPair<'a> {
+    pub fn new(
+        producer: (&'a Layer, &'a Mapping, &'a LayerStats),
+        consumer: (&'a Layer, &'a Mapping, &'a LayerStats),
+    ) -> LayerPair<'a> {
+        let producer_table = LoopTable::new(producer.1);
+        let consumer_table = LoopTable::new(consumer.1);
+        let consumer_rep_banks = consumer_table.representative_banks(&[
+            crate::mapping::Dim::P,
+            crate::mapping::Dim::Q,
+            crate::mapping::Dim::C,
+            crate::mapping::Dim::R,
+            crate::mapping::Dim::S,
+        ]);
+        let steps = producer.2.temporal_steps.max(1);
+        LayerPair {
+            producer: producer.0,
+            producer_mapping: producer.1,
+            producer_stats: producer.2,
+            consumer: consumer.0,
+            consumer_mapping: consumer.1,
+            consumer_stats: consumer.2,
+            producer_table,
+            consumer_table,
+            consumer_rep_banks,
+            pool: producer.0.pool_after.max(1),
+            per_step_move: producer.2.movement_cycles.div_ceil(steps),
+        }
+    }
+
+    /// Convert one consumer data space's *input* region into boxes in the
+    /// producer's output coordinate system, clamped to the producer's real
+    /// (unpadded) bounds. Empty if the region lies wholly in padding.
+    pub fn input_boxes(&self, ds: &DataSpace) -> Vec<OutBox> {
+        match self.consumer.kind {
+            LayerKind::Fc => self.fc_input_boxes(ds),
+            LayerKind::Conv | LayerKind::MatMul => {
+                self.conv_input_boxes(ds).into_iter().collect()
+            }
+        }
+    }
+
+    fn conv_input_boxes(&self, ds: &DataSpace) -> Option<OutBox> {
+        let (kp, pp, qp) = (self.producer.k, self.producer.p, self.producer.q);
+        // Input channels of the consumer are the producer's output channels.
+        let k = ds.c.clamp(kp)?;
+        // Receptive field in padded input coordinates, shifted by padding
+        // and clamped to the consumer's real input extent, then mapped
+        // through pooling to producer output rows.
+        let y = shift_clamp(ds.input_y(self.consumer.stride), self.consumer.pad, pp / self.pool)?;
+        let x = shift_clamp(ds.input_x(self.consumer.stride), self.consumer.pad, qp / self.pool)?;
+        let p = unpool(y, self.pool).clamp(pp)?;
+        let q = unpool(x, self.pool).clamp(qp)?;
+        Some(OutBox { k, p, q })
+    }
+
+    /// FC consumers flatten the producer's `[K, P', Q']` output (after
+    /// pooling) row-major into their C axis; a contiguous C range maps to
+    /// up to three boxes: a partial first K-plane, full middle planes, and
+    /// a partial last plane. For the *latest finish* query only the max
+    /// corner matters, but the exhaustive engine needs the true region.
+    fn fc_input_boxes(&self, ds: &DataSpace) -> Vec<OutBox> {
+        let (kp, pp, qp) = (self.producer.k, self.producer.p, self.producer.q);
+        let (ppool, qpool) = (pp / self.pool.max(1), qp / self.pool.max(1));
+        let plane = (ppool * qpool).max(1);
+        let total = kp * plane;
+        let Some(c) = ds.c.clamp(total) else { return vec![] };
+        let mut boxes = Vec::new();
+        let k_lo = c.lo / plane;
+        let k_hi = (c.hi - 1) / plane; // inclusive
+        if k_lo == k_hi {
+            // Single plane: a row-major flat segment inside one K slice.
+            boxes.extend(flat_segment_boxes(k_lo, c.lo % plane, (c.hi - 1) % plane, qpool));
+        } else {
+            // Head partial plane.
+            boxes.extend(flat_segment_boxes(k_lo, c.lo % plane, plane - 1, qpool));
+            // Middle full planes.
+            if k_hi > k_lo + 1 {
+                boxes.push(OutBox {
+                    k: Range::new(k_lo + 1, k_hi),
+                    p: Range::new(0, ppool),
+                    q: Range::new(0, qpool),
+                });
+            }
+            // Tail partial plane.
+            boxes.extend(flat_segment_boxes(k_hi, 0, (c.hi - 1) % plane, qpool));
+        }
+        // Map pooled coordinates back to producer output coordinates.
+        boxes
+            .into_iter()
+            .filter_map(|b| {
+                Some(OutBox {
+                    k: b.k,
+                    p: scale_range(b.p, self.pool).clamp(pp)?,
+                    q: scale_range(b.q, self.pool).clamp(qp)?,
+                })
+            })
+            .collect()
+    }
+
+    /// Ready cycle for a set of input boxes: the finish cycle of the
+    /// latest-producing box corner plus the per-step output transfer.
+    /// This is the Eqs. 3–6 query, also used per-job by the transformation.
+    pub fn ready_cycle_of_boxes(&self, boxes: &[OutBox]) -> u64 {
+        let mut latest: Option<u64> = None;
+        for b in boxes {
+            let step = self.producer_table.max_finish_step_over_box(b.k, b.p, b.q);
+            latest = Some(latest.map_or(step, |l: u64| l.max(step)));
+        }
+        match latest {
+            // Inputs entirely in padding: ready immediately.
+            None => 0,
+            Some(step) => {
+                self.producer_stats.step_finish_cycle(step) + self.per_step_move
+            }
+        }
+    }
+
+    /// The input boxes of the whole step `t` across all consumer
+    /// instances (paper §IV-G: the ready time of `I_t^{n+1}` covers the
+    /// input operation spaces of *all* hardware instances at that step).
+    /// The union is a set of per-bank boxes — NOT their bounding box,
+    /// which would wildly overapproximate when spatial splits are coarse.
+    /// Banks differing only in K/N spatial digits consume identical input
+    /// regions, so only representatives over {P, Q, C, R, S} are queried.
+    pub fn step_input_boxes(&self, step: u64) -> Vec<OutBox> {
+        let mut boxes = Vec::new();
+        for &bank in &self.consumer_rep_banks {
+            let ds = self.consumer_table.space_at(bank, step);
+            boxes.extend(self.input_boxes(&ds));
+        }
+        boxes
+    }
+
+    /// The probe steps for this pair under `config`.
+    pub fn probe_steps(&self, config: &OverlapConfig) -> Vec<u64> {
+        let total = self.consumer_table.total_steps;
+        probe_indices(total, config.max_probe_steps as u64)
+    }
+}
+
+/// Shift a padded-coordinate range left by `pad` and clamp to `[0, bound)`.
+fn shift_clamp(r: Range, pad: u64, bound: u64) -> Option<Range> {
+    let lo = r.lo.saturating_sub(pad);
+    let hi = r.hi.saturating_sub(pad);
+    if lo >= hi {
+        return None;
+    }
+    Range::new(lo, hi).clamp(bound)
+}
+
+/// Map consumer-input (post-pool) rows to producer output rows.
+fn unpool(r: Range, pool: u64) -> Range {
+    Range::new(r.lo * pool, r.hi * pool)
+}
+
+fn scale_range(r: Range, pool: u64) -> Range {
+    Range::new(r.lo * pool, r.hi * pool)
+}
+
+/// Boxes covering the row-major flat segment `[lo, hi]` (inclusive) inside
+/// one pooled K-plane of width `q`: up to three (partial head row, full
+/// middle rows, partial tail row).
+fn flat_segment_boxes(k: u64, lo: u64, hi: u64, q: u64) -> Vec<OutBox> {
+    debug_assert!(lo <= hi);
+    let kr = Range::new(k, k + 1);
+    let (row_lo, col_lo) = (lo / q, lo % q);
+    let (row_hi, col_hi) = (hi / q, hi % q);
+    if row_lo == row_hi {
+        return vec![OutBox {
+            k: kr,
+            p: Range::new(row_lo, row_lo + 1),
+            q: Range::new(col_lo, col_hi + 1),
+        }];
+    }
+    let mut out = Vec::with_capacity(3);
+    out.push(OutBox { k: kr, p: Range::new(row_lo, row_lo + 1), q: Range::new(col_lo, q) });
+    if row_hi > row_lo + 1 {
+        out.push(OutBox { k: kr, p: Range::new(row_lo + 1, row_hi), q: Range::new(0, q) });
+    }
+    out.push(OutBox { k: kr, p: Range::new(row_hi, row_hi + 1), q: Range::new(0, col_hi + 1) });
+    out
+}
+
+/// Evenly-strided probe indices over `[0, total)`, always including the
+/// first and last index, at most `max` of them.
+pub fn probe_indices(total: u64, max: u64) -> Vec<u64> {
+    assert!(max >= 2, "need at least first+last probes");
+    if total <= max {
+        return (0..total).collect();
+    }
+    let stride = total.div_ceil(max);
+    let mut v: Vec<u64> = (0..total).step_by(stride as usize).collect();
+    if *v.last().unwrap() != total - 1 {
+        v.push(total - 1);
+    }
+    v
+}
+
+/// The overlap-analysis interface shared by both engines.
+pub trait OverlapAnalysis {
+    /// Ready cycles (producer clock) for the consumer's probed steps.
+    fn ready_times(&self, pair: &LayerPair<'_>) -> ReadyTimes;
+
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's analytical engine (Eqs. 3–6).
+#[derive(Debug, Clone, Default)]
+pub struct AnalyticalOverlap {
+    pub config: OverlapConfig,
+}
+
+impl AnalyticalOverlap {
+    pub fn new(config: OverlapConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl OverlapAnalysis for AnalyticalOverlap {
+    fn ready_times(&self, pair: &LayerPair<'_>) -> ReadyTimes {
+        let steps = pair.probe_steps(&self.config);
+        let probes = steps
+            .into_iter()
+            .map(|t| {
+                let boxes = pair.step_input_boxes(t);
+                (t, pair.ready_cycle_of_boxes(&boxes))
+            })
+            .collect();
+        ReadyTimes { probes, total_steps: pair.consumer_table.total_steps }
+    }
+
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+}
+
+/// OverlaPIM's exhaustive engine: materialize all producer data spaces and
+/// compare every consumer input region against all of them (§IV-H:
+/// "O(N·M) time complexity with overheads").
+#[derive(Debug, Clone, Default)]
+pub struct ExhaustiveOverlap {
+    pub config: OverlapConfig,
+}
+
+impl ExhaustiveOverlap {
+    pub fn new(config: OverlapConfig) -> Self {
+        Self { config }
+    }
+}
+
+impl OverlapAnalysis for ExhaustiveOverlap {
+    fn ready_times(&self, pair: &LayerPair<'_>) -> ReadyTimes {
+        // N producer data spaces, materialized up front (OverlaPIM's flow).
+        let producer_spaces = AnalyticalGen::generate(pair.producer_mapping);
+        let steps = pair.probe_steps(&self.config);
+        let probes = steps
+            .into_iter()
+            .map(|t| {
+                let boxes = pair.step_input_boxes(t);
+                let mut latest: Option<u64> = None;
+                for b in &boxes {
+                    for ds in &producer_spaces {
+                        if ds.output_intersects(&b.k, &b.p, &b.q) {
+                            latest = Some(latest.map_or(ds.step, |l: u64| l.max(ds.step)));
+                        }
+                    }
+                }
+                let ready = match latest {
+                    None => 0,
+                    Some(step) => {
+                        pair.producer_stats.step_finish_cycle(step) + pair.per_step_move
+                    }
+                };
+                (t, ready)
+            })
+            .collect();
+        ReadyTimes { probes, total_steps: pair.consumer_table.total_steps }
+    }
+
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+}
+
+/// Result of the overlapped-latency evaluation for one pair (§IV-G).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapResult {
+    /// Consumer end cycle on the producer's clock (includes the consumer's
+    /// trailing data movement).
+    pub overlapped_end: u64,
+    /// Latency the consumer adds beyond the producer's end — the quantity
+    /// whole-network optimization sums.
+    pub added_latency: u64,
+    /// Cycles saved vs. strictly sequential execution.
+    pub saving: u64,
+    /// Fraction of the consumer's sequential latency hidden by overlap
+    /// (Fig. 4's normalized overlapped latency).
+    pub overlap_fraction: f64,
+}
+
+/// Evaluate the overlapped latency of the consumer given its step ready
+/// times.
+///
+/// Consumer steps execute in order across all its banks in lock-step;
+/// step `t` starts at `max(ready_t, finish_{t-1})`, so the end time is
+/// `max_t (ready_t + (T - t)·c)` with `c` the consumer step latency —
+/// exact when every step is probed, a lower bound otherwise.
+pub fn overlapped_latency(
+    producer_stats: &LayerStats,
+    consumer_stats: &LayerStats,
+    ready: &ReadyTimes,
+) -> OverlapResult {
+    let c = consumer_stats.step_cycles.max(1);
+    let t_total = ready.total_steps.max(1);
+    let mut end = t_total * c; // all-ready-at-0 floor
+    for &(t, r) in &ready.probes {
+        end = end.max(r + (t_total - t) * c);
+    }
+    let overlapped_end = end + consumer_stats.movement_cycles;
+    let producer_end = producer_stats.latency_cycles;
+    let sequential_end = producer_end + consumer_stats.latency_cycles;
+    let added_latency = overlapped_end.saturating_sub(producer_end);
+    let saving = sequential_end.saturating_sub(overlapped_end);
+    OverlapResult {
+        overlapped_end,
+        added_latency,
+        saving,
+        overlap_fraction: saving as f64 / consumer_stats.latency_cycles.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::mapping::{Dim, Loop, Mapping};
+    use crate::mapspace::MapSpace;
+    use crate::perf::PerfModel;
+    use crate::util::rng::SplitMix64;
+    use crate::workload::Layer;
+
+    fn conv_pair() -> (Layer, Layer) {
+        (
+            Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+            Layer::conv("b", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+        )
+    }
+
+    fn simple_mapping(k: u64, p: u64, q: u64, c: u64) -> Mapping {
+        // All output dims temporal at bank level in K->P->Q order,
+        // reduction serial in the interior, single bank.
+        Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![
+                Loop::temporal(Dim::K, k),
+                Loop::temporal(Dim::P, p),
+                Loop::temporal(Dim::Q, q),
+            ],
+            vec![
+                Loop::spatial(Dim::K, 8 / k),
+                Loop::spatial(Dim::P, 8 / p),
+                Loop::spatial(Dim::Q, 8 / q),
+                Loop::temporal(Dim::C, c),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ])
+    }
+
+    fn eval<'a>(
+        arch: &Arch,
+        layer: &Layer,
+        mapping: &Mapping,
+    ) -> crate::perf::LayerStats {
+        PerfModel::new(arch).evaluate(layer, mapping)
+    }
+
+    #[test]
+    fn analytical_equals_exhaustive_on_simple_pair() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ana = AnalyticalOverlap::default().ready_times(&pair);
+        let exh = ExhaustiveOverlap::default().ready_times(&pair);
+        assert_eq!(ana.probes, exh.probes);
+        assert_eq!(ana.total_steps, exh.total_steps);
+    }
+
+    #[test]
+    fn analytical_equals_exhaustive_on_sampled_pairs() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let pm = PerfModel::new(&arch);
+        let msa = MapSpace::with_defaults(&arch, &la);
+        let msb = MapSpace::with_defaults(&arch, &lb);
+        let mut rng = SplitMix64::new(77);
+        let mut checked = 0;
+        for _ in 0..12 {
+            let (Some(ma), Some(mb)) = (msa.sample(&mut rng), msb.sample(&mut rng)) else {
+                continue;
+            };
+            // Keep the exhaustive side small.
+            if ma.temporal_steps() * ma.spatial_instances() > 4096
+                || mb.temporal_steps() > 2048
+            {
+                continue;
+            }
+            let sa = pm.evaluate(&la, &ma);
+            let sb = pm.evaluate(&lb, &mb);
+            let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+            let ana = AnalyticalOverlap::default().ready_times(&pair);
+            let exh = ExhaustiveOverlap::default().ready_times(&pair);
+            assert_eq!(ana.probes, exh.probes, "ma={ma:?} mb={mb:?}");
+            checked += 1;
+        }
+        assert!(checked >= 5, "too few pairs checked: {checked}");
+    }
+
+    #[test]
+    fn matched_production_order_overlaps_well() {
+        // Producer emits P rows in order; consumer consumes them in the
+        // same order -> most steps ready early -> large saving.
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(1, 8, 1, 8); // P-major production
+        let mb = simple_mapping(1, 8, 1, 8); // P-major consumption
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ready = AnalyticalOverlap::default().ready_times(&pair);
+        let res = overlapped_latency(&sa, &sb, &ready);
+        assert!(
+            res.overlap_fraction > 0.3,
+            "aligned mappings should overlap: {res:?}"
+        );
+        // First consumer row only needs the first two producer rows.
+        let first_ready = ready.probes[0].1;
+        assert!(first_ready < sa.latency_cycles / 2);
+    }
+
+    #[test]
+    fn mismatched_order_overlaps_poorly() {
+        // Producer emits K-major (all K for row 0 late); consumer needs
+        // all C (=K of producer) for its first output -> ready late.
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(8, 1, 1, 8); // K innermost... K outer-major
+        let mb = simple_mapping(1, 8, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ready = AnalyticalOverlap::default().ready_times(&pair);
+        // Every consumer step needs the full K range of some rows ->
+        // ready times near the producer end.
+        let res = overlapped_latency(&sa, &sb, &ready);
+        let aligned = {
+            let ma2 = simple_mapping(1, 8, 1, 8);
+            let sa2 = eval(&arch, &la, &ma2);
+            let pair2 = LayerPair::new((&la, &ma2, &sa2), (&lb, &mb, &sb));
+            let ready2 = AnalyticalOverlap::default().ready_times(&pair2);
+            overlapped_latency(&sa2, &sb, &ready2)
+        };
+        assert!(
+            aligned.saving > res.saving,
+            "aligned {aligned:?} should beat mismatched {res:?}"
+        );
+    }
+
+    #[test]
+    fn ready_times_monotone_bounds() {
+        // Ready cycles never exceed producer compute end + per-step move.
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 2, 2, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ready = AnalyticalOverlap::default().ready_times(&pair);
+        let bound = sa.compute_cycles + sa.movement_cycles;
+        for &(_, r) in &ready.probes {
+            assert!(r <= bound, "ready {r} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn overlapped_latency_bounds() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(2, 4, 1, 8);
+        let mb = simple_mapping(4, 2, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ready = AnalyticalOverlap::default().ready_times(&pair);
+        let res = overlapped_latency(&sa, &sb, &ready);
+        // Never better than the consumer running entirely in parallel,
+        // never worse than sequential.
+        assert!(res.overlapped_end >= sb.latency_cycles);
+        assert!(res.overlapped_end <= sa.latency_cycles + sb.latency_cycles);
+        assert_eq!(
+            res.saving + res.overlapped_end,
+            sa.latency_cycles + sb.latency_cycles
+        );
+    }
+
+    #[test]
+    fn fc_consumer_boxes_cover_flattened_range() {
+        let producer = Layer::conv("c", 1, 4, 8, 4, 4, 3, 3, 1, 1);
+        let fc = Layer::fc("fc", 1, 10, 4 * 4 * 4);
+        let mp = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::K, 4), Loop::temporal(Dim::P, 4)],
+            vec![
+                Loop::spatial(Dim::Q, 4),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let mc = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::C, 16)],
+            vec![Loop::spatial(Dim::K, 10), Loop::temporal(Dim::C, 4)],
+        ]);
+        let arch = Arch::dram_pim_small();
+        let sp = eval(&arch, &producer, &mp);
+        let sc = eval(&arch, &fc, &mc);
+        let pair = LayerPair::new((&producer, &mp, &sp), (&fc, &mc, &sc));
+        // Consumer step 0 consumes C [0,4) = flat k=0, rows 0..1 (q 0..4).
+        let boxes = pair.step_input_boxes(0);
+        let covered: u64 = boxes.iter().map(|b| b.k.len() * b.p.len() * b.q.len()).sum();
+        assert_eq!(covered, 4);
+        // Last step consumes the final flat segment.
+        let ana = AnalyticalOverlap::default().ready_times(&pair);
+        let exh = ExhaustiveOverlap::default().ready_times(&pair);
+        assert_eq!(ana.probes, exh.probes);
+    }
+
+    #[test]
+    fn probe_indices_cover_endpoints() {
+        assert_eq!(probe_indices(5, 8), vec![0, 1, 2, 3, 4]);
+        let p = probe_indices(1000, 10);
+        assert!(p.len() <= 11);
+        assert_eq!(p[0], 0);
+        assert_eq!(*p.last().unwrap(), 999);
+    }
+
+    #[test]
+    fn pooled_pair_ready_before_producer_end() {
+        // Producer with pool_after=2 feeding a consumer at half spatial res.
+        let la = Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1).with_pool(2);
+        let lb = Layer::conv("b", 1, 8, 8, 4, 4, 3, 3, 1, 1);
+        let arch = Arch::dram_pim_small();
+        let ma = simple_mapping(1, 8, 1, 8);
+        let mb = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::P, 4)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::Q, 4),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ana = AnalyticalOverlap::default().ready_times(&pair);
+        let exh = ExhaustiveOverlap::default().ready_times(&pair);
+        assert_eq!(ana.probes, exh.probes);
+        // The first consumer row depends on producer rows 0..4-ish, not all.
+        assert!(ana.probes[0].1 < sa.latency_cycles);
+    }
+}

@@ -1,0 +1,361 @@
+//! The PIM performance model (paper §IV-C, Table I).
+//!
+//! Timeloop's native model only counts compute/read/write; PIM evaluation
+//! needs the data movements of in-memory execution instead. Following the
+//! paper, each MAC in a bank is modelled in three phases:
+//!
+//! 1. element-wise multiplication producing partial products — bit-serial,
+//!    one `mul` PIM op per MAC (a 16-bit multiply = 16 sequential full
+//!    additions; a full addition = `4n+1` AAP commands);
+//! 2. read/write transposition moving operands/partials between row
+//!    orientation and column lanes;
+//! 3. serial additions reducing partial sums.
+//!
+//! Latency is charged per bank-level *temporal step*: all column lanes of
+//! a bank execute in lock-step (row-parallel bit-serial, §III-A), so a step
+//! costs `waves × macs_per_output × (mul + add)` plus intra-bank reduction,
+//! where `waves` covers output tiles wider than the lane count. Data
+//! movement adds (a) the producer→consumer output transfer over the
+//! channel links and (b) partial-sum reduction movement when reduction
+//! dimensions are split spatially. Energy follows Table I.
+
+use crate::arch::Arch;
+use crate::mapping::{Dim, Mapping};
+use crate::util::ceil_div;
+use crate::workload::Layer;
+
+/// Evaluation result for one (layer, mapping) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerStats {
+    /// End-to-end sequential latency of the layer (no overlap), cycles.
+    pub latency_cycles: u64,
+    /// Pure compute portion.
+    pub compute_cycles: u64,
+    /// Data-movement portion (inter-layer transfer + reductions).
+    pub movement_cycles: u64,
+    /// Latency of one bank-level temporal step, cycles.
+    pub step_cycles: u64,
+    /// Number of bank-level temporal steps.
+    pub temporal_steps: u64,
+    /// Compute instances (banks) the mapping occupies.
+    pub banks_used: u64,
+    /// Output elements computed per step per bank.
+    pub outputs_per_step: u64,
+    /// Total energy, picojoules.
+    pub energy_pj: f64,
+    /// Bank × lane occupancy in [0, 1] (padding waste included).
+    pub utilization: f64,
+}
+
+impl LayerStats {
+    /// Convert a bank-level step index (0-based) to the cycle at which that
+    /// step *finishes*.
+    #[inline]
+    pub fn step_finish_cycle(&self, step: u64) -> u64 {
+        (step + 1) * self.step_cycles
+    }
+}
+
+/// The performance model, bound to an architecture.
+#[derive(Debug, Clone)]
+pub struct PerfModel<'a> {
+    pub arch: &'a Arch,
+    mul_cycles: u64,
+    add_cycles: u64,
+    /// Cycles to move one operand between row and column orientation
+    /// (transposition read+write of `word_bits` rows).
+    transpose_cycles: u64,
+    word_bits: u32,
+}
+
+impl<'a> PerfModel<'a> {
+    pub fn new(arch: &'a Arch) -> Self {
+        let word_bits = arch.levels[0].word_bits.max(1);
+        // One row access ~ tRCD + tCL (activate + column access); a w-bit
+        // bit-serial operand spans w rows; transposition reads and rewrites
+        // each of them once.
+        let row_cycles = ((arch.timing.t_rcd + arch.timing.t_cl) / arch.clock_ns).ceil() as u64;
+        Self {
+            arch,
+            mul_cycles: arch.op_cycles("mul"),
+            add_cycles: arch.op_cycles("add"),
+            transpose_cycles: 2 * u64::from(word_bits) * row_cycles,
+            word_bits,
+        }
+    }
+
+    /// Cycles of one MAC (multiply + accumulate-add) in a lane.
+    #[inline]
+    pub fn mac_cycles(&self) -> u64 {
+        self.mul_cycles + self.add_cycles
+    }
+
+    /// Latency of one bank-level temporal step of `mapping`.
+    pub fn step_cycles(&self, mapping: &Mapping) -> u64 {
+        let lanes = self.arch.lanes_per_compute_instance().max(1);
+        let red_lanes = mapping.reduction_lanes().max(1);
+        // Each output occupies `red_lanes` columns; lanes available for
+        // distinct outputs shrink accordingly.
+        let effective_lanes = (lanes / red_lanes).max(1);
+        let outputs = mapping.outputs_per_step().max(1);
+        let waves = ceil_div(outputs, effective_lanes);
+        let serial_macs = mapping.macs_per_output().max(1);
+        let mut cycles = waves * serial_macs * self.mac_cycles();
+        if red_lanes > 1 {
+            // Tree reduction across lanes: log2 rounds of transpose + add.
+            let rounds = 64 - (red_lanes - 1).leading_zeros() as u64;
+            cycles += waves * rounds * (self.transpose_cycles + self.add_cycles);
+        }
+        cycles
+    }
+
+    /// Inter-layer data-movement cycles: the layer's outputs travel from
+    /// the producing banks to the next layer's input locations over the
+    /// bank/channel links (paper §IV-C "output-input inter-layer data
+    /// transfer").
+    pub fn output_movement_cycles(&self, layer: &Layer) -> u64 {
+        let out_bytes = layer.output_size() * u64::from(self.word_bits) / 8;
+        let compute = self.arch.compute_level();
+        let bw = self.arch.levels[..=compute]
+            .iter()
+            .map(|l| l.write_bandwidth.max(l.read_bandwidth))
+            .filter(|&b| b > 0)
+            .min()
+            .unwrap_or(16)
+            .max(1);
+        // Channels move data in parallel.
+        let channels = self
+            .arch
+            .levels
+            .iter()
+            .find(|l| l.name.eq_ignore_ascii_case("channel"))
+            .map(|l| l.instances)
+            .unwrap_or(1)
+            .max(1);
+        ceil_div(out_bytes, bw * channels)
+    }
+
+    /// Cross-bank partial-sum reduction movement for hierarchy-spatial
+    /// reduction loops.
+    pub fn cross_bank_reduction_cycles(&self, layer: &Layer, mapping: &Mapping) -> u64 {
+        let groups: u64 = mapping
+            .hierarchy_loops()
+            .filter(|(_, l)| l.is_spatial() && l.dim.is_reduction())
+            .map(|(_, l)| l.bound)
+            .product();
+        if groups <= 1 {
+            return 0;
+        }
+        // (groups-1) partial output tensors move and get added in.
+        let out_bytes = layer.output_size() * u64::from(self.word_bits) / 8;
+        let bw = self.arch.levels[self.arch.compute_level()]
+            .write_bandwidth
+            .max(1);
+        (groups - 1) * (ceil_div(out_bytes, bw) + self.add_cycles)
+    }
+
+    /// Evaluate a full (layer, mapping) pair.
+    pub fn evaluate(&self, layer: &Layer, mapping: &Mapping) -> LayerStats {
+        let step_cycles = self.step_cycles(mapping);
+        let temporal_steps = mapping.temporal_steps().max(1);
+        let compute_cycles = step_cycles * temporal_steps;
+        let movement_cycles =
+            self.output_movement_cycles(layer) + self.cross_bank_reduction_cycles(layer, mapping);
+        let latency_cycles = compute_cycles + movement_cycles;
+
+        let banks_used = mapping.spatial_instances().max(1);
+        let total_banks = self.arch.compute_instances().max(1);
+        let lanes = self.arch.lanes_per_compute_instance().max(1);
+        let red_lanes = mapping.reduction_lanes().max(1);
+        let effective_lanes = (lanes / red_lanes).max(1);
+        let outputs = mapping.outputs_per_step().max(1);
+        let waves = ceil_div(outputs, effective_lanes);
+        let lane_occupancy = outputs as f64 / (waves * effective_lanes) as f64;
+        let utilization = (banks_used.min(total_banks) as f64 / total_banks as f64)
+            * lane_occupancy
+            / mapping.padding_waste(layer);
+
+        let energy_pj = self.energy_pj(layer, mapping);
+
+        LayerStats {
+            latency_cycles,
+            compute_cycles,
+            movement_cycles,
+            step_cycles,
+            temporal_steps,
+            banks_used,
+            outputs_per_step: mapping.outputs_per_step(),
+            energy_pj,
+            utilization,
+        }
+    }
+
+    /// Energy model from Table I: each AAP issues two activates and a
+    /// precharge (`2·e_ACT` dominates; the GSA terms cover the sense path),
+    /// movement pays `e_IO` per transferred bit.
+    pub fn energy_pj(&self, layer: &Layer, mapping: &Mapping) -> f64 {
+        let e = &self.arch.energy;
+        let e_aap = 2.0 * e.e_act + e.e_pre_gsa + e.e_post_gsa;
+        let n = u64::from(self.word_bits);
+        // AAPs per add and per mul (4n+1 per full addition; a mul is n adds).
+        let aaps_add = 4 * n + 1;
+        let aaps_mul = n * aaps_add;
+        // Total padded MACs actually executed.
+        let padded_macs: u64 = Dim::ALL.iter().map(|&d| mapping.bounds[d]).product();
+        let compute_pj = padded_macs as f64 * (aaps_add + aaps_mul) as f64 * e_aap
+            // all lanes in a bank share the row activation
+            / self.arch.lanes_per_compute_instance().max(1) as f64;
+        let moved_bits = (layer.output_size() * u64::from(self.word_bits)) as f64;
+        compute_pj + moved_bits * e.e_io
+    }
+}
+
+/// Sequential whole-network latency: the sum of per-layer latencies
+/// (layers execute back-to-back without overlap).
+pub fn sequential_network_latency(stats: &[LayerStats]) -> u64 {
+    stats.iter().map(|s| s.latency_cycles).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Arch;
+    use crate::mapping::{Loop, Mapping};
+    use crate::mapspace::MapSpace;
+    use crate::util::rng::SplitMix64;
+
+    fn layer() -> Layer {
+        Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1)
+    }
+
+    fn mapping() -> Mapping {
+        Mapping::new(vec![
+            vec![Loop::temporal(Dim::K, 2)],
+            vec![Loop::spatial(Dim::P, 4)],
+            vec![Loop::temporal(Dim::P, 2), Loop::temporal(Dim::Q, 4)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::Q, 2),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ])
+    }
+
+    #[test]
+    fn step_cycles_hand_computed() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        // outputs/step = 16, lanes = 64 -> 1 wave; 72 serial MACs;
+        // mac = 980 + 196 = 1176 cycles.
+        assert_eq!(pm.step_cycles(&mapping()), 72 * 1176);
+    }
+
+    #[test]
+    fn latency_composition() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let m = mapping();
+        let st = pm.evaluate(&l, &m);
+        assert_eq!(st.temporal_steps, 16);
+        assert_eq!(st.compute_cycles, 16 * st.step_cycles);
+        assert_eq!(st.latency_cycles, st.compute_cycles + st.movement_cycles);
+        assert!(st.movement_cycles > 0);
+        assert!(st.energy_pj > 0.0);
+        assert!(st.utilization > 0.0 && st.utilization <= 1.0);
+    }
+
+    #[test]
+    fn more_banks_fewer_steps_is_faster() {
+        // Spreading work over more banks must not be slower in compute.
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let wide = mapping(); // 4 banks
+        let mut narrow_nests = wide.nests.clone();
+        narrow_nests[1] = vec![]; // drop the spatial P split
+        narrow_nests[2].push(Loop::temporal(Dim::P, 4)); // serialize it
+        let narrow = Mapping::new(narrow_nests);
+        let fast = pm.evaluate(&l, &wide);
+        let slow = pm.evaluate(&l, &narrow);
+        assert!(fast.compute_cycles < slow.compute_cycles);
+    }
+
+    #[test]
+    fn lane_reduction_charges_extra() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        // Same tile, but C split across 4 lanes spatially.
+        let base = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::K, 2), Loop::temporal(Dim::P, 8), Loop::temporal(Dim::Q, 8)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let lane_red = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::K, 2), Loop::temporal(Dim::P, 8), Loop::temporal(Dim::Q, 8)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::C, 4),
+                Loop::temporal(Dim::C, 2),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        // Serial MACs drop 8->2 but reduction movement appears.
+        let a = pm.step_cycles(&base);
+        let b = pm.step_cycles(&lane_red);
+        assert!(b < a, "lane reduction should shorten the serial chain");
+        let only_macs = 2 * 3 * 3 * pm.mac_cycles();
+        assert!(b > only_macs, "reduction rounds must be charged");
+    }
+
+    #[test]
+    fn cross_bank_reduction_counted() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let m = Mapping::new(vec![
+            vec![],
+            vec![Loop::spatial(Dim::C, 4)],
+            vec![
+                Loop::temporal(Dim::K, 2),
+                Loop::temporal(Dim::P, 8),
+                Loop::temporal(Dim::Q, 8),
+            ],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::temporal(Dim::C, 2),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        assert!(pm.cross_bank_reduction_cycles(&l, &m) > 0);
+        assert_eq!(pm.cross_bank_reduction_cycles(&l, &mapping()), 0);
+    }
+
+    #[test]
+    fn sampled_mappings_have_positive_stats() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..50 {
+            if let Some(m) = ms.sample(&mut rng) {
+                let st = pm.evaluate(&l, &m);
+                assert!(st.latency_cycles > 0);
+                assert!(st.utilization > 0.0 && st.utilization <= 1.0 + 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! A small argument parser for the `repro` binary and the figure benches
+//! (the image has no `clap`).
+//!
+//! Grammar: `program <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the program name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of argument strings.
+    pub fn parse<I, S>(args: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().map(Into::into).peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// String option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse an option as `u64` (panics with a readable message on bad input).
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")),
+        }
+    }
+
+    /// Parse an option as `f64`.
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Boolean flag presence (`--verbose`). A valued option also counts
+    /// when its value is truthy (`--verbose=true`).
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        // NB: a bare `--flag` followed by a non-option token consumes it as
+        // a value (there is no schema); use `--flag=true` or put the flag
+        // last when positionals follow.
+        let a = Args::parse(["search", "extra", "--net", "resnet18", "--budget=100", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.get("net"), Some("resnet18"));
+        assert_eq!(a.get_u64("budget", 0), 100);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(["run"]);
+        assert_eq!(a.get_u64("budget", 7), 7);
+        assert_eq!(a.get_or("net", "vgg16"), "vgg16");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(["x", "--dry-run"]);
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = Args::parse(["x", "--n", "abc"]);
+        a.get_u64("n", 0);
+    }
+}

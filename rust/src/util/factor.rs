@@ -1,0 +1,182 @@
+//! Integer factorization helpers used by map-space construction.
+//!
+//! Timeloop-style "index factorization" writes every padded problem
+//! dimension as an ordered product of per-level factors. The enumeration
+//! primitives here are exact (no sampling) and exhaustively tested.
+
+/// All divisors of `n`, ascending. `n >= 1`.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n >= 1);
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// All ordered factorizations of `n` into exactly `parts` factors
+/// (each factor >= 1, product == n). The number of results is
+/// multiplicative over prime powers: for p^e it is C(e + parts - 1, parts - 1).
+pub fn ordered_factorizations(n: u64, parts: usize) -> Vec<Vec<u64>> {
+    assert!(parts >= 1);
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(parts);
+    rec(n, parts, &mut cur, &mut out);
+    return out;
+
+    fn rec(n: u64, parts: usize, cur: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if parts == 1 {
+            cur.push(n);
+            out.push(cur.clone());
+            cur.pop();
+            return;
+        }
+        for d in divisors(n) {
+            cur.push(d);
+            rec(n / d, parts - 1, cur, out);
+            cur.pop();
+        }
+    }
+}
+
+/// Count of ordered factorizations without materializing them
+/// (used to size map spaces before deciding between enumeration
+/// and sampling).
+pub fn count_ordered_factorizations(n: u64, parts: usize) -> u64 {
+    // Multiplicative over the prime factorization: each exponent e
+    // contributes C(e + parts - 1, parts - 1) ways.
+    let mut total = 1u64;
+    for (_, e) in prime_factorization(n) {
+        total = total.saturating_mul(binomial(e as u64 + parts as u64 - 1, parts as u64 - 1));
+    }
+    total
+}
+
+/// Prime factorization as (prime, exponent) pairs, primes ascending.
+pub fn prime_factorization(mut n: u64) -> Vec<(u64, u32)> {
+    assert!(n >= 1);
+    let mut out = Vec::new();
+    let mut p = 2;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut e = 0;
+            while n % p == 0 {
+                n /= p;
+                e += 1;
+            }
+            out.push((p, e));
+        }
+        p += 1;
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+fn binomial(n: u64, k: u64) -> u64 {
+    let k = k.min(n - k);
+    let mut num = 1u64;
+    for i in 0..k {
+        num = num.saturating_mul(n - i) / (i + 1);
+    }
+    num
+}
+
+/// Sample one ordered factorization of `n` into `parts` factors, uniformly
+/// over the divisor-tree paths (not uniform over factorizations, but cheap
+/// and well-spread; the mapper only needs diverse coverage).
+pub fn sample_ordered_factorization(
+    n: u64,
+    parts: usize,
+    rng: &mut crate::util::rng::SplitMix64,
+) -> Vec<u64> {
+    assert!(parts >= 1);
+    let mut rest = n;
+    let mut out = Vec::with_capacity(parts);
+    for i in 0..parts - 1 {
+        let _ = i;
+        let divs = divisors(rest);
+        let d = *rng.choose(&divs);
+        out.push(d);
+        rest /= d;
+    }
+    out.push(rest);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn factorizations_product_invariant() {
+        for n in [1u64, 2, 6, 12, 16, 30, 36] {
+            for parts in 1..=4usize {
+                let fs = ordered_factorizations(n, parts);
+                assert!(!fs.is_empty());
+                for f in &fs {
+                    assert_eq!(f.len(), parts);
+                    assert_eq!(f.iter().product::<u64>(), n, "n={n} parts={parts} f={f:?}");
+                }
+                // no duplicates
+                let mut sorted = fs.clone();
+                sorted.sort();
+                sorted.dedup();
+                assert_eq!(sorted.len(), fs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn factorization_count_matches_enumeration() {
+        for n in [1u64, 4, 6, 12, 24, 36, 64, 100] {
+            for parts in 1..=4usize {
+                assert_eq!(
+                    count_ordered_factorizations(n, parts),
+                    ordered_factorizations(n, parts).len() as u64,
+                    "n={n} parts={parts}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prime_factorization_roundtrip() {
+        for n in 1..=500u64 {
+            let pf = prime_factorization(n);
+            let prod: u64 = pf.iter().map(|(p, e)| p.pow(*e)).product();
+            assert_eq!(prod, n);
+        }
+    }
+
+    #[test]
+    fn sampled_factorization_is_valid() {
+        let mut rng = SplitMix64::new(11);
+        for n in [12u64, 56, 224, 512] {
+            for _ in 0..50 {
+                let f = sample_ordered_factorization(n, 4, &mut rng);
+                assert_eq!(f.len(), 4);
+                assert_eq!(f.iter().product::<u64>(), n);
+            }
+        }
+    }
+}

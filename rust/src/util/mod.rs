@@ -1,0 +1,45 @@
+//! Small, dependency-free building blocks shared by the whole framework.
+//!
+//! The build image has no crates.io access beyond the `xla` crate closure,
+//! so the usual suspects (rand, serde, clap, proptest, criterion) are
+//! replaced by minimal in-tree implementations that cover exactly what the
+//! framework needs.
+
+pub mod cli;
+pub mod factor;
+pub mod prop;
+pub mod rng;
+pub mod yaml;
+
+/// Integer ceiling division for unsigned operands.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(0, 5), 0);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(0, 4), 0);
+    }
+}

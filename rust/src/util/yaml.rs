@@ -1,0 +1,448 @@
+//! A minimal YAML-subset parser for architecture / workload configuration
+//! files (paper §IV-B shows YAML-style architecture descriptions).
+//!
+//! Supported subset — exactly what our `configs/*.yaml` use:
+//!
+//! * nested mappings by indentation (`key:` followed by a more-indented block)
+//! * inline scalars (`key: value`) — integers, floats, booleans, strings
+//! * block lists (`- item`) whose items are scalars or mappings
+//! * `#` comments (full-line and trailing) and blank lines
+//!
+//! Not supported (and rejected loudly rather than mis-parsed): flow
+//! syntax (`{}`/`[]`), anchors, multi-line strings, tabs for indentation.
+
+use std::fmt;
+
+/// A parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+    /// Insertion-ordered mapping.
+    Map(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(v) if *v >= 0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Look up a key in a mapping value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_map()?.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// `get` that reports a useful error instead of `None`.
+    pub fn require(&self, key: &str) -> Result<&Value, ParseError> {
+        self.get(key)
+            .ok_or_else(|| ParseError::new(0, format!("missing required key `{key}`")))
+    }
+}
+
+/// Error with a 1-based line number (0 = post-parse validation).
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl ParseError {
+    pub fn new(line: usize, message: impl Into<String>) -> Self {
+        Self { line, message: message.into() }
+    }
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "yaml parse error at line {}: {}", self.line, self.message)
+        } else {
+            write!(f, "yaml error: {}", self.message)
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+struct Line {
+    number: usize,
+    indent: usize,
+    /// content with comment stripped, trimmed
+    text: String,
+}
+
+/// Parse a YAML-subset document into a [`Value`].
+pub fn parse(source: &str) -> Result<Value, ParseError> {
+    let lines = preprocess(source)?;
+    if lines.is_empty() {
+        return Ok(Value::Map(Vec::new()));
+    }
+    let mut pos = 0;
+    let root_indent = lines[0].indent;
+    let value = parse_block(&lines, &mut pos, root_indent)?;
+    if pos != lines.len() {
+        return Err(ParseError::new(
+            lines[pos].number,
+            format!("unexpected dedent/content `{}`", lines[pos].text),
+        ));
+    }
+    Ok(value)
+}
+
+fn preprocess(source: &str) -> Result<Vec<Line>, ParseError> {
+    let mut out = Vec::new();
+    for (i, raw) in source.lines().enumerate() {
+        let number = i + 1;
+        if raw.contains('\t') {
+            return Err(ParseError::new(number, "tabs are not allowed for indentation"));
+        }
+        let stripped = strip_comment(raw);
+        let text = stripped.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let indent = stripped.len() - stripped.trim_start().len();
+        out.push(Line { number, indent, text: text.to_string() });
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_quote: Option<char> = None;
+    for (i, ch) in line.char_indices() {
+        match (ch, in_quote) {
+            ('"' | '\'', None) => in_quote = Some(ch),
+            (q, Some(open)) if q == open => in_quote = None,
+            ('#', None) => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse the block starting at `pos` whose lines all have indent == `indent`.
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let first = &lines[*pos];
+    if first.text.starts_with("- ") || first.text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim();
+        if rest.is_empty() {
+            // `-` alone: item is the following more-indented block
+            *pos += 1;
+            if *pos >= lines.len() || lines[*pos].indent <= indent {
+                return Err(ParseError::new(line.number, "empty list item"));
+            }
+            let child_indent = lines[*pos].indent;
+            items.push(parse_block(lines, pos, child_indent)?);
+        } else if let Some((key, val)) = split_key_value(rest) {
+            // `- key: ...` — a mapping that starts inline. Subsequent keys
+            // of the same item are more-indented lines.
+            let mut map = Vec::new();
+            let item_line = line.number;
+            *pos += 1;
+            if val.is_empty() {
+                // value is a nested block (or empty)
+                if *pos < lines.len() && lines[*pos].indent > indent {
+                    let child_indent = lines[*pos].indent;
+                    // Distinguish "rest of this item's keys" from "nested
+                    // value of this key": a nested value block is even more
+                    // indented than sibling keys — but with the inline-start
+                    // form both appear at child_indent. We treat the block as
+                    // the key's value only if it is a list; otherwise the
+                    // block lines are sibling keys of the same item.
+                    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+                        let v = parse_block(lines, pos, child_indent)?;
+                        map.push((key.to_string(), v));
+                        collect_item_keys(lines, pos, child_indent, &mut map)?;
+                    } else {
+                        map.push((key.to_string(), Value::Map(Vec::new())));
+                        collect_item_keys(lines, pos, child_indent, &mut map)?;
+                    }
+                } else {
+                    map.push((key.to_string(), Value::Map(Vec::new())));
+                }
+            } else {
+                map.push((key.to_string(), parse_scalar(val)));
+                if *pos < lines.len() && lines[*pos].indent > indent {
+                    let child_indent = lines[*pos].indent;
+                    collect_item_keys(lines, pos, child_indent, &mut map)?;
+                }
+            }
+            if map.is_empty() {
+                return Err(ParseError::new(item_line, "empty mapping list item"));
+            }
+            items.push(Value::Map(map));
+        } else {
+            items.push(parse_scalar(rest));
+            *pos += 1;
+        }
+    }
+    Ok(Value::List(items))
+}
+
+/// After an inline-start list item (`- key: v`), parse the remaining
+/// `key: value` lines of the same item at `indent`.
+fn collect_item_keys(
+    lines: &[Line],
+    pos: &mut usize,
+    indent: usize,
+    map: &mut Vec<(String, Value)>,
+) -> Result<(), ParseError> {
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if line.text.starts_with("- ") || line.text == "-" {
+            break;
+        }
+        let (key, val) = split_key_value(&line.text)
+            .ok_or_else(|| ParseError::new(line.number, "expected `key: value`"))?;
+        *pos += 1;
+        if val.is_empty() {
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                map.push((key.to_string(), parse_block(lines, pos, child_indent)?));
+            } else {
+                map.push((key.to_string(), Value::Map(Vec::new())));
+            }
+        } else {
+            map.push((key.to_string(), parse_scalar(val)));
+        }
+    }
+    Ok(())
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, ParseError> {
+    let mut map = Vec::new();
+    while *pos < lines.len() && lines[*pos].indent == indent {
+        let line = &lines[*pos];
+        if line.text.starts_with("- ") || line.text == "-" {
+            return Err(ParseError::new(line.number, "unexpected list item inside mapping"));
+        }
+        let (key, val) = split_key_value(&line.text)
+            .ok_or_else(|| ParseError::new(line.number, "expected `key: value`"))?;
+        if map.iter().any(|(k, _)| k == key) {
+            return Err(ParseError::new(line.number, format!("duplicate key `{key}`")));
+        }
+        *pos += 1;
+        if val.is_empty() {
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                map.push((key.to_string(), parse_block(lines, pos, child_indent)?));
+            } else {
+                map.push((key.to_string(), Value::Map(Vec::new())));
+            }
+        } else {
+            map.push((key.to_string(), parse_scalar(val)));
+        }
+    }
+    Ok(Value::Map(map))
+}
+
+/// Split `key: value` (value may be empty). Returns `None` if there is no
+/// unquoted `:` separator.
+fn split_key_value(text: &str) -> Option<(&str, &str)> {
+    let idx = text.find(':')?;
+    let (k, v) = text.split_at(idx);
+    let v = v[1..].trim();
+    let k = k.trim();
+    if k.is_empty() {
+        return None;
+    }
+    Some((k, v))
+}
+
+fn parse_scalar(text: &str) -> Value {
+    let t = text.trim();
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Value::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" => return Value::Bool(true),
+        "false" | "False" => return Value::Bool(false),
+        _ => {}
+    }
+    if let Ok(v) = t.parse::<i64>() {
+        return Value::Int(v);
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Value::Float(v);
+    }
+    Value::Str(t.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42"), Value::Int(42));
+        assert_eq!(parse_scalar("-3"), Value::Int(-3));
+        assert_eq!(parse_scalar("2.5"), Value::Float(2.5));
+        assert_eq!(parse_scalar("true"), Value::Bool(true));
+        assert_eq!(parse_scalar("hello"), Value::Str("hello".into()));
+        assert_eq!(parse_scalar("\"17\""), Value::Str("17".into()));
+    }
+
+    #[test]
+    fn nested_map() {
+        let doc = "\
+arch:
+  name: dram
+  channels: 16
+  timing:
+    t_rc: 45
+";
+        let v = parse(doc).unwrap();
+        let arch = v.get("arch").unwrap();
+        assert_eq!(arch.get("name").unwrap().as_str(), Some("dram"));
+        assert_eq!(arch.get("channels").unwrap().as_u64(), Some(16));
+        assert_eq!(arch.get("timing").unwrap().get("t_rc").unwrap().as_u64(), Some(45));
+    }
+
+    #[test]
+    fn list_of_maps_inline_start() {
+        let doc = "\
+levels:
+  - name: DRAM
+    instances: 1
+  - name: Channel
+    instances: 16
+";
+        let v = parse(doc).unwrap();
+        let levels = v.get("levels").unwrap().as_list().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].get("name").unwrap().as_str(), Some("DRAM"));
+        assert_eq!(levels[1].get("instances").unwrap().as_u64(), Some(16));
+    }
+
+    #[test]
+    fn scalar_list() {
+        let doc = "\
+dims:
+  - K
+  - P
+  - Q
+";
+        let v = parse(doc).unwrap();
+        let dims = v.get("dims").unwrap().as_list().unwrap();
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[2].as_str(), Some("Q"));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = "\
+# header comment
+a: 1   # trailing
+
+b: 2
+";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn nested_list_in_item() {
+        let doc = "\
+levels:
+  - name: Bank
+    pim_ops:
+      - name: add
+        latency: 196
+      - name: mul
+        latency: 980
+";
+        let v = parse(doc).unwrap();
+        let bank = &v.get("levels").unwrap().as_list().unwrap()[0];
+        let ops = bank.get("pim_ops").unwrap().as_list().unwrap();
+        assert_eq!(ops.len(), 2);
+        assert_eq!(ops[1].get("latency").unwrap().as_u64(), Some(980));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn tab_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Value::Map(vec![]));
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Map(vec![]));
+    }
+
+    #[test]
+    fn quoted_hash_not_comment() {
+        let v = parse("a: \"x # y\"\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x # y"));
+    }
+}

@@ -1,0 +1,330 @@
+//! DNN workload descriptions (paper §IV-B, §IV-E).
+//!
+//! Fast-OverlaPIM uses the conventional 7D loop-nest representation of a
+//! layer: `R`/`S` weight height/width, `P`/`Q` output height/width, `C`
+//! input channels, `K` output channels, `N` batch. CONV and FC dominate
+//! DNN compute; FC and matrix multiplication are expressed by collapsing
+//! dimensions to 1 exactly as the paper's §VI case study does.
+
+pub mod parser;
+pub mod zoo;
+
+/// The seven problem dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerKind {
+    /// 2D convolution.
+    Conv,
+    /// Fully-connected: R=S=P=Q=1, weights C×K.
+    Fc,
+    /// Matrix multiply A[P,C]·W[C,K] expressed with Q=R=S=1 (BERT §VI).
+    MatMul,
+}
+
+/// One DNN layer in the 7D representation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Batch size.
+    pub n: u64,
+    /// Output channels.
+    pub k: u64,
+    /// Input channels.
+    pub c: u64,
+    /// Output height.
+    pub p: u64,
+    /// Output width.
+    pub q: u64,
+    /// Weight height.
+    pub r: u64,
+    /// Weight width.
+    pub s: u64,
+    /// Convolution stride (same in both spatial dims; the nets we evaluate
+    /// use square strides).
+    pub stride: u64,
+    /// Zero padding on each spatial border.
+    pub pad: u64,
+    /// Spatial down-sampling factor applied *after* this layer before the
+    /// next one consumes it (max/avg pooling). `1` = no pooling. This is
+    /// what makes consecutive-layer coordinates line up in ResNet/VGG.
+    pub pool_after: u64,
+    /// True for residual/skip branch layers. Skip layers execute in
+    /// parallel with ≥2 main-chain layers of the same block and are hidden
+    /// under them (paper §IV-J), so they are excluded from the overlap
+    /// chain but still listed for completeness.
+    pub skip: bool,
+}
+
+impl Layer {
+    /// Convolution layer constructor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        n: u64,
+        k: u64,
+        c: u64,
+        p: u64,
+        q: u64,
+        r: u64,
+        s: u64,
+        stride: u64,
+        pad: u64,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            n,
+            k,
+            c,
+            p,
+            q,
+            r,
+            s,
+            stride,
+            pad,
+            pool_after: 1,
+            skip: false,
+        }
+    }
+
+    /// Fully-connected layer: input C features, output K features.
+    pub fn fc(name: &str, n: u64, k: u64, c: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc,
+            n,
+            k,
+            c,
+            p: 1,
+            q: 1,
+            r: 1,
+            s: 1,
+            stride: 1,
+            pad: 0,
+            pool_after: 1,
+            skip: false,
+        }
+    }
+
+    /// Matrix multiply `A[p, c] · W[c, k]` (sequence dim mapped to P, the
+    /// paper's §VI encoding with Q=R=S=1).
+    pub fn matmul(name: &str, p: u64, c: u64, k: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::MatMul,
+            n: 1,
+            k,
+            c,
+            p,
+            q: 1,
+            r: 1,
+            s: 1,
+            stride: 1,
+            pad: 0,
+            pool_after: 1,
+            skip: false,
+        }
+    }
+
+    /// Builder: mark a pooling stage after this layer.
+    pub fn with_pool(mut self, factor: u64) -> Layer {
+        self.pool_after = factor;
+        self
+    }
+
+    /// Builder: mark as a skip-branch layer.
+    pub fn as_skip(mut self) -> Layer {
+        self.skip = true;
+        self
+    }
+
+    /// Input feature-map height `(P-1)·stride + R − 2·pad`.
+    pub fn input_h(&self) -> u64 {
+        ((self.p - 1) * self.stride + self.r).saturating_sub(2 * self.pad)
+    }
+
+    /// Input feature-map width.
+    pub fn input_w(&self) -> u64 {
+        ((self.q - 1) * self.stride + self.s).saturating_sub(2 * self.pad)
+    }
+
+    /// Multiply-accumulate operations in the layer.
+    pub fn macs(&self) -> u64 {
+        self.n * self.k * self.c * self.p * self.q * self.r * self.s
+    }
+
+    /// Output tensor element count `N·K·P·Q`.
+    pub fn output_size(&self) -> u64 {
+        self.n * self.k * self.p * self.q
+    }
+
+    /// Input tensor element count (paper §IV-E: `[N, C, P+R−1, Q+S−1]` for
+    /// stride 1; generalized to the strided receptive extent).
+    pub fn input_size(&self) -> u64 {
+        self.n * self.c * self.input_h().max(1) * self.input_w().max(1)
+    }
+
+    /// Weight tensor element count `K·C·R·S`.
+    pub fn weight_size(&self) -> u64 {
+        self.k * self.c * self.r * self.s
+    }
+
+    /// Bound of a dimension by name.
+    pub fn dim(&self, d: crate::mapping::Dim) -> u64 {
+        use crate::mapping::Dim::*;
+        match d {
+            N => self.n,
+            K => self.k,
+            C => self.c,
+            P => self.p,
+            Q => self.q,
+            R => self.r,
+            S => self.s,
+        }
+    }
+
+    /// The paper's "Middle" search heuristics (§IV-K): output size `P·Q·K`.
+    pub fn output_heuristic(&self) -> u64 {
+        self.p * self.q * self.k
+    }
+
+    /// Overall size heuristic `P·Q·C·K`.
+    pub fn overall_heuristic(&self) -> u64 {
+        self.p * self.q * self.c * self.k
+    }
+
+    /// Basic shape sanity (all bounds ≥ 1, stride ≥ 1).
+    pub fn validate(&self) -> Result<(), String> {
+        for (nm, v) in [
+            ("n", self.n),
+            ("k", self.k),
+            ("c", self.c),
+            ("p", self.p),
+            ("q", self.q),
+            ("r", self.r),
+            ("s", self.s),
+            ("stride", self.stride),
+            ("pool_after", self.pool_after),
+        ] {
+            if v == 0 {
+                return Err(format!("layer `{}`: {nm} must be >= 1", self.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A whole network: an ordered chain of layers. Consecutive non-skip
+/// layers form producer→consumer pairs for overlap analysis; `K` of the
+/// producer equals `C` of the consumer (through any `pool_after`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, layers: Vec<Layer>) -> Network {
+        Network { name: name.into(), layers }
+    }
+
+    /// The overlap chain: indices of non-skip layers in execution order.
+    pub fn chain(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| !l.skip)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Validate every layer plus inter-layer channel consistency along the
+    /// chain (producer K == consumer C for Conv/Fc chains; MatMul chains
+    /// follow the §VI encoding).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err(format!("network `{}` has no layers", self.name));
+        }
+        for l in &self.layers {
+            l.validate()?;
+        }
+        let chain = self.chain();
+        for w in chain.windows(2) {
+            let (a, b) = (&self.layers[w[0]], &self.layers[w[1]]);
+            // An FC consumer flattens K·P·Q of the producer.
+            let produced = match b.kind {
+                LayerKind::Fc => {
+                    a.k * (a.p / a.pool_after).max(1) * (a.q / a.pool_after).max(1)
+                }
+                _ => a.k,
+            };
+            let consumed = b.c;
+            if produced != consumed {
+                return Err(format!(
+                    "network `{}`: `{}` produces {} channels but `{}` consumes {}",
+                    self.name, a.name, produced, b.name, consumed
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total MACs across the network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes() {
+        let l = Layer::conv("c", 1, 64, 3, 112, 112, 7, 7, 2, 3);
+        assert_eq!(l.input_h(), (112 - 1) * 2 + 7 - 6);
+        assert_eq!(l.macs(), 64 * 3 * 112 * 112 * 49);
+        l.validate().unwrap();
+    }
+
+    #[test]
+    fn fc_is_1x1() {
+        let l = Layer::fc("fc", 1, 1000, 512);
+        assert_eq!(l.p, 1);
+        assert_eq!(l.output_size(), 1000);
+        assert_eq!(l.weight_size(), 512_000);
+    }
+
+    #[test]
+    fn zero_dim_rejected() {
+        let mut l = Layer::fc("bad", 1, 10, 10);
+        l.c = 0;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn chain_skips_skip_layers() {
+        let net = Network::new(
+            "t",
+            vec![
+                Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+                Layer::conv("sk", 1, 8, 8, 8, 8, 1, 1, 1, 0).as_skip(),
+                Layer::conv("b", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+            ],
+        );
+        assert_eq!(net.chain(), vec![0, 2]);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn channel_mismatch_detected() {
+        let net = Network::new(
+            "bad",
+            vec![
+                Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+                Layer::conv("b", 1, 8, 16, 8, 8, 3, 3, 1, 1),
+            ],
+        );
+        assert!(net.validate().is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Workload file parser — the paper's "DNN interface" (§IV-B): a network
+//! description file listing the size parameters of every layer, produced
+//! either by hand or by the export toolkit, consumed by the mapper as the
+//! whole-network description.
+//!
+//! Format (YAML subset, see `configs/*.model.yaml`):
+//!
+//! ```yaml
+//! name: mynet
+//! layers:
+//!   - name: conv1
+//!     kind: conv          # conv | fc | matmul
+//!     k: 64
+//!     c: 3
+//!     p: 112
+//!     q: 112
+//!     r: 7
+//!     s: 7
+//!     stride: 2
+//!     pad: 3
+//!     pool_after: 2       # optional
+//!     skip: false         # optional
+//! ```
+
+use super::{Layer, LayerKind, Network};
+use crate::util::yaml::{self, Value};
+
+/// Parse a network description file.
+pub fn network_from_yaml(source: &str) -> Result<Network, String> {
+    let doc = yaml::parse(source).map_err(|e| e.to_string())?;
+    let name = doc
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or("missing `name`")?
+        .to_string();
+    let layers_val = doc.get("layers").and_then(Value::as_list).ok_or("missing `layers` list")?;
+    let mut layers = Vec::with_capacity(layers_val.len());
+    for (i, lv) in layers_val.iter().enumerate() {
+        layers.push(layer_from_value(lv).map_err(|e| format!("layer {i}: {e}"))?);
+    }
+    let net = Network::new(&name, layers);
+    net.validate()?;
+    Ok(net)
+}
+
+fn layer_from_value(v: &Value) -> Result<Layer, String> {
+    let name = v.get("name").and_then(Value::as_str).ok_or("missing `name`")?;
+    let kind = match v.get("kind").and_then(Value::as_str).unwrap_or("conv") {
+        "conv" => LayerKind::Conv,
+        "fc" => LayerKind::Fc,
+        "matmul" => LayerKind::MatMul,
+        other => return Err(format!("unknown kind `{other}`")),
+    };
+    let g = |key: &str, default: u64| v.get(key).and_then(Value::as_u64).unwrap_or(default);
+    let layer = Layer {
+        name: name.to_string(),
+        kind,
+        n: g("n", 1),
+        k: v.get("k").and_then(Value::as_u64).ok_or("missing `k`")?,
+        c: v.get("c").and_then(Value::as_u64).ok_or("missing `c`")?,
+        p: g("p", 1),
+        q: g("q", 1),
+        r: g("r", 1),
+        s: g("s", 1),
+        stride: g("stride", 1),
+        pad: g("pad", 0),
+        pool_after: g("pool_after", 1),
+        skip: v.get("skip").and_then(Value::as_bool).unwrap_or(false),
+    };
+    layer.validate()?;
+    Ok(layer)
+}
+
+/// Emit a network to the description format (round-trips through
+/// [`network_from_yaml`]). This is the export half of the paper's toolkit:
+/// `repro export --net resnet18` writes the auto-generated whole-network
+/// description.
+pub fn network_to_yaml(net: &Network) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "name: {}", net.name);
+    let _ = writeln!(s, "layers:");
+    for l in &net.layers {
+        let kind = match l.kind {
+            LayerKind::Conv => "conv",
+            LayerKind::Fc => "fc",
+            LayerKind::MatMul => "matmul",
+        };
+        let _ = writeln!(s, "  - name: {}", l.name);
+        let _ = writeln!(s, "    kind: {kind}");
+        for (k, v) in [
+            ("n", l.n),
+            ("k", l.k),
+            ("c", l.c),
+            ("p", l.p),
+            ("q", l.q),
+            ("r", l.r),
+            ("s", l.s),
+            ("stride", l.stride),
+            ("pad", l.pad),
+            ("pool_after", l.pool_after),
+        ] {
+            let _ = writeln!(s, "    {k}: {v}");
+        }
+        if l.skip {
+            let _ = writeln!(s, "    skip: true");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_networks() {
+        for (name, net) in zoo::all() {
+            let text = network_to_yaml(&net);
+            let parsed = network_from_yaml(&text)
+                .unwrap_or_else(|e| panic!("reparse {name}: {e}"));
+            assert_eq!(parsed, net, "{name} roundtrip");
+        }
+    }
+
+    #[test]
+    fn minimal_layer_defaults() {
+        let doc = "\
+name: m
+layers:
+  - name: fc1
+    kind: fc
+    k: 10
+    c: 20
+";
+        let net = network_from_yaml(doc).unwrap();
+        assert_eq!(net.layers[0].p, 1);
+        assert_eq!(net.layers[0].stride, 1);
+    }
+
+    #[test]
+    fn missing_k_is_error() {
+        let doc = "\
+name: m
+layers:
+  - name: bad
+    c: 20
+";
+        assert!(network_from_yaml(doc).is_err());
+    }
+
+    #[test]
+    fn unknown_kind_is_error() {
+        let doc = "\
+name: m
+layers:
+  - name: bad
+    kind: pool
+    k: 2
+    c: 2
+";
+        assert!(network_from_yaml(doc).is_err());
+    }
+}

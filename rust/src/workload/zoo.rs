@@ -1,0 +1,263 @@
+//! The model zoo: the networks the paper evaluates (ResNet-18, VGG-16,
+//! ResNet-50 — §V-A4; one BERT encoder block — §VI) plus a tiny CNN used
+//! by the functional execution engine and the end-to-end example.
+//!
+//! All ImageNet nets use batch 1 at 224×224 input, matching the paper's
+//! per-layer tables. Residual down-sample (1×1) convolutions are marked as
+//! skip layers: per §IV-J they run in parallel with ≥2 main-chain layers
+//! and do not affect total latency, so they are excluded from the overlap
+//! chain.
+
+use super::{Layer, Network};
+
+/// ResNet-18 (He et al. 2016): conv1 + 16 basic-block convs + fc on the
+/// main chain, 3 down-sample convs on skip branches.
+pub fn resnet18() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 1, 64, 3, 112, 112, 7, 7, 2, 3).with_pool(2));
+
+    // Stage 1: 64 ch, 56x56, two basic blocks.
+    for b in 1..=2 {
+        layers.push(Layer::conv(&format!("conv2_{b}a"), 1, 64, 64, 56, 56, 3, 3, 1, 1));
+        layers.push(Layer::conv(&format!("conv2_{b}b"), 1, 64, 64, 56, 56, 3, 3, 1, 1));
+    }
+    // Stage 2: 128 ch, 28x28; first conv strides, skip branch downsamples.
+    layers.push(Layer::conv("conv3_1a", 1, 128, 64, 28, 28, 3, 3, 2, 1));
+    layers.push(Layer::conv("conv3_1b", 1, 128, 128, 28, 28, 3, 3, 1, 1));
+    layers.push(Layer::conv("ds3", 1, 128, 64, 28, 28, 1, 1, 2, 0).as_skip());
+    layers.push(Layer::conv("conv3_2a", 1, 128, 128, 28, 28, 3, 3, 1, 1));
+    layers.push(Layer::conv("conv3_2b", 1, 128, 128, 28, 28, 3, 3, 1, 1));
+    // Stage 3: 256 ch, 14x14.
+    layers.push(Layer::conv("conv4_1a", 1, 256, 128, 14, 14, 3, 3, 2, 1));
+    layers.push(Layer::conv("conv4_1b", 1, 256, 256, 14, 14, 3, 3, 1, 1));
+    layers.push(Layer::conv("ds4", 1, 256, 128, 14, 14, 1, 1, 2, 0).as_skip());
+    layers.push(Layer::conv("conv4_2a", 1, 256, 256, 14, 14, 3, 3, 1, 1));
+    layers.push(Layer::conv("conv4_2b", 1, 256, 256, 14, 14, 3, 3, 1, 1));
+    // Stage 4: 512 ch, 7x7.
+    layers.push(Layer::conv("conv5_1a", 1, 512, 256, 7, 7, 3, 3, 2, 1));
+    layers.push(Layer::conv("conv5_1b", 1, 512, 512, 7, 7, 3, 3, 1, 1));
+    layers.push(Layer::conv("ds5", 1, 512, 256, 7, 7, 1, 1, 2, 0).as_skip());
+    layers.push(Layer::conv("conv5_2a", 1, 512, 512, 7, 7, 3, 3, 1, 1));
+    let last = Layer::conv("conv5_2b", 1, 512, 512, 7, 7, 3, 3, 1, 1).with_pool(7);
+    layers.push(last);
+    layers.push(Layer::fc("fc", 1, 1000, 512));
+
+    let net = Network::new("resnet18", layers);
+    net.validate().expect("resnet18 must validate");
+    net
+}
+
+/// VGG-16 (Simonyan & Zisserman 2014): 13 convs + 3 FCs.
+pub fn vgg16() -> Network {
+    let mut layers = Vec::new();
+    let stages: &[(u64, u64, u64, usize)] = &[
+        // (channels, spatial, in_channels_of_first, convs)
+        (64, 224, 3, 2),
+        (128, 112, 64, 2),
+        (256, 56, 128, 3),
+        (512, 28, 256, 3),
+        (512, 14, 512, 3),
+    ];
+    for (si, &(ch, hw, in_ch, convs)) in stages.iter().enumerate() {
+        for ci in 0..convs {
+            let c = if ci == 0 { in_ch } else { ch };
+            let mut l =
+                Layer::conv(&format!("conv{}_{}", si + 1, ci + 1), 1, ch, c, hw, hw, 3, 3, 1, 1);
+            if ci == convs - 1 {
+                l = l.with_pool(2);
+            }
+            layers.push(l);
+        }
+    }
+    layers.push(Layer::fc("fc6", 1, 4096, 512 * 7 * 7));
+    layers.push(Layer::fc("fc7", 1, 4096, 4096));
+    layers.push(Layer::fc("fc8", 1, 1000, 4096));
+
+    let net = Network::new("vgg16", layers);
+    net.validate().expect("vgg16 must validate");
+    net
+}
+
+/// ResNet-50: conv1 + 48 bottleneck convs + fc on the main chain, 4
+/// down-sample convs on skip branches (49 compute layers in Fig. 12a).
+pub fn resnet50() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 1, 64, 3, 112, 112, 7, 7, 2, 3).with_pool(2));
+
+    // (stage idx, blocks, mid channels, out channels, spatial)
+    let stages: &[(usize, usize, u64, u64, u64)] = &[
+        (2, 3, 64, 256, 56),
+        (3, 4, 128, 512, 28),
+        (4, 6, 256, 1024, 14),
+        (5, 3, 512, 2048, 7),
+    ];
+    let mut in_ch = 64u64;
+    for &(si, blocks, mid, out, hw) in stages {
+        for b in 1..=blocks {
+            let first = b == 1;
+            // v1.5 bottleneck: stride lives on the 3x3 of the first block
+            // of stages 3..5.
+            let stride = if first && si > 2 { 2 } else { 1 };
+            layers.push(Layer::conv(
+                &format!("conv{si}_{b}a"),
+                1,
+                mid,
+                in_ch,
+                hw,
+                hw,
+                1,
+                1,
+                1,
+                0,
+            ));
+            layers.push(Layer::conv(
+                &format!("conv{si}_{b}b"),
+                1,
+                mid,
+                mid,
+                hw,
+                hw,
+                3,
+                3,
+                stride,
+                1,
+            ));
+            let mut l1x1 =
+                Layer::conv(&format!("conv{si}_{b}c"), 1, out, mid, hw, hw, 1, 1, 1, 0);
+            if si == 5 && b == blocks {
+                l1x1 = l1x1.with_pool(7);
+            }
+            layers.push(l1x1);
+            if first {
+                layers.push(
+                    Layer::conv(&format!("ds{si}"), 1, out, in_ch, hw, hw, 1, 1, stride, 0)
+                        .as_skip(),
+                );
+            }
+            in_ch = out;
+        }
+    }
+    layers.push(Layer::fc("fc", 1, 1000, 2048));
+
+    let net = Network::new("resnet50", layers);
+    net.validate().expect("resnet50 must validate");
+    net
+}
+
+/// One BERT-base encoder block expressed as a matmul chain (paper §VI:
+/// matrix–matrix multiplication via R=S=Q=1, sequence length on P).
+/// Sequence length 128, hidden 768, 12 heads, FFN 3072.
+pub fn bert_encoder() -> Network {
+    let seq = 128;
+    let hidden = 768;
+    let ffn = 3072;
+    let layers = vec![
+        // Fused QKV projection.
+        Layer::matmul("qkv_proj", seq, hidden, 3 * hidden),
+        // Attention scores Q·K^T (fused-head encoding: consumes the QKV
+        // activations, produces a seq x seq map per token row).
+        Layer::matmul("attn_scores", seq, 3 * hidden, seq),
+        // Context = softmax(scores)·V.
+        Layer::matmul("attn_context", seq, seq, hidden),
+        // Output projection.
+        Layer::matmul("attn_out", seq, hidden, hidden),
+        // Feed-forward.
+        Layer::matmul("ffn1", seq, hidden, ffn),
+        Layer::matmul("ffn2", seq, ffn, hidden),
+    ];
+    let net = Network::new("bert-encoder", layers);
+    net.validate().expect("bert encoder must validate");
+    net
+}
+
+/// A tiny CNN for the functional end-to-end driver: small enough that its
+/// AOT tile executables compile quickly, large enough to exercise multi-step
+/// overlap schedules on the small DRAM-PIM preset.
+pub fn tiny_cnn() -> Network {
+    let layers = vec![
+        Layer::conv("conv1", 1, 16, 8, 16, 16, 3, 3, 1, 1),
+        Layer::conv("conv2", 1, 16, 16, 16, 16, 3, 3, 1, 1).with_pool(2),
+        Layer::conv("conv3", 1, 32, 16, 8, 8, 3, 3, 1, 1),
+        Layer::fc("fc", 1, 10, 32 * 8 * 8),
+    ];
+    let net = Network::new("tiny-cnn", layers);
+    net.validate().expect("tiny cnn must validate");
+    net
+}
+
+/// Look up a zoo network by name (used by the CLI and benches).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "vgg16" => Some(vgg16()),
+        "resnet50" => Some(resnet50()),
+        "bert" | "bert-encoder" => Some(bert_encoder()),
+        "tiny" | "tiny-cnn" => Some(tiny_cnn()),
+        _ => None,
+    }
+}
+
+/// All zoo entries with their canonical names.
+pub fn all() -> Vec<(&'static str, Network)> {
+    vec![
+        ("resnet18", resnet18()),
+        ("vgg16", vgg16()),
+        ("resnet50", resnet50()),
+        ("bert-encoder", bert_encoder()),
+        ("tiny-cnn", tiny_cnn()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet18_layer_counts() {
+        let net = resnet18();
+        assert_eq!(net.layers.iter().filter(|l| l.skip).count(), 3);
+        // conv1 + 16 convs + fc on the main chain.
+        assert_eq!(net.chain().len(), 18);
+    }
+
+    #[test]
+    fn vgg16_layer_counts() {
+        let net = vgg16();
+        assert_eq!(net.layers.len(), 16);
+        assert_eq!(net.chain().len(), 16);
+    }
+
+    #[test]
+    fn resnet50_layer_counts() {
+        let net = resnet50();
+        // conv1 + 16 blocks x 3 convs + fc = 50 main-chain layers.
+        assert_eq!(net.chain().len(), 50);
+        assert_eq!(net.layers.iter().filter(|l| l.skip).count(), 4);
+    }
+
+    #[test]
+    fn total_macs_are_plausible() {
+        // Published MAC counts: ResNet-18 ~1.8G, VGG-16 ~15.5G, ResNet-50 ~4.1G.
+        let r18 = resnet18().total_macs() as f64 / 1e9;
+        assert!((1.5..2.2).contains(&r18), "resnet18 GMACs = {r18}");
+        let vgg = vgg16().total_macs() as f64 / 1e9;
+        assert!((14.0..16.5).contains(&vgg), "vgg16 GMACs = {vgg}");
+        let r50 = resnet50().total_macs() as f64 / 1e9;
+        assert!((3.5..4.5).contains(&r50), "resnet50 GMACs = {r50}");
+    }
+
+    #[test]
+    fn zoo_by_name_roundtrip() {
+        for (name, net) in all() {
+            let got = by_name(name).unwrap();
+            assert_eq!(got, net);
+            got.validate().unwrap();
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn bert_chain_is_consistent() {
+        bert_encoder().validate().unwrap();
+    }
+}

@@ -1,0 +1,295 @@
+//! Property-based tests over the core invariants, using the in-tree
+//! deterministic harness (`util::prop`).
+//!
+//! These are the repo's strongest correctness signals:
+//! * the analytical data-space generator ≡ the recursive reference;
+//! * the analytical overlap engine ≡ OverlaPIM's exhaustive engine;
+//! * data spaces exactly tile the padded output volume;
+//! * the digit-walk box-maximum ≡ brute-force maximum;
+//! * transformation and overlap results respect their physical bounds.
+
+use fastoverlapim::dataspace::{AnalyticalGen, LoopTable, Range, ReferenceGen};
+use fastoverlapim::mapspace::MapSpace;
+use fastoverlapim::prelude::*;
+use fastoverlapim::transform::transform_schedule;
+use fastoverlapim::util::prop::check_seeded;
+use fastoverlapim::util::rng::SplitMix64;
+
+/// Sample a random (layer, mapping) pair on the small arch, bounded so the
+/// reference generator and exhaustive engine stay fast.
+fn sample_pairable(
+    arch: &Arch,
+    rng: &mut SplitMix64,
+    max_spaces: u64,
+) -> Option<(Layer, Mapping)> {
+    let k = *rng.choose(&[4u64, 8, 16, 32]);
+    let c = *rng.choose(&[4u64, 8, 16]);
+    let pq = *rng.choose(&[4u64, 6, 8, 14]);
+    let rs = *rng.choose(&[1u64, 3]);
+    let stride = *rng.choose(&[1u64, 2]);
+    let pad = if rs == 3 { 1 } else { 0 };
+    let layer = Layer::conv("prop", 1, k, c, pq, pq, rs, rs, stride, pad);
+    let ms = MapSpace::with_defaults(arch, &layer);
+    let m = ms.sample(rng)?;
+    if m.temporal_steps() * m.spatial_instances() > max_spaces {
+        return None;
+    }
+    Some((layer, m))
+}
+
+#[test]
+fn prop_analytical_generation_equals_reference() {
+    let arch = Arch::dram_pim_small();
+    check_seeded(
+        0xDA7A,
+        120,
+        |rng| sample_pairable(&arch, rng, 2048),
+        |input| {
+            let Some((_, m)) = input else { return Ok(()) };
+            let a = AnalyticalGen::generate(m);
+            let r = ReferenceGen::generate(m);
+            if a != r {
+                return Err(format!("generation mismatch ({} vs {} spaces)", a.len(), r.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_data_spaces_tile_padded_output() {
+    let arch = Arch::dram_pim_small();
+    check_seeded(
+        0x711E,
+        80,
+        |rng| sample_pairable(&arch, rng, 2048),
+        |input| {
+            let Some((_, m)) = input else { return Ok(()) };
+            let spaces = AnalyticalGen::generate(m);
+            let (kb, pb, qb) =
+                (m.bounds[Dim::K] as usize, m.bounds[Dim::P] as usize, m.bounds[Dim::Q] as usize);
+            let mut hits = vec![0u64; kb * pb * qb];
+            for ds in &spaces {
+                for k in ds.k.lo..ds.k.hi {
+                    for p in ds.p.lo..ds.p.hi {
+                        for q in ds.q.lo..ds.q.hi {
+                            hits[(k as usize * pb + p as usize) * qb + q as usize] += 1;
+                        }
+                    }
+                }
+            }
+            // Reduction revisits multiply coverage uniformly; every cell
+            // must be hit the same (non-zero) number of times.
+            let first = hits[0];
+            if first == 0 {
+                return Err("output cell (0,0,0) never covered".into());
+            }
+            if hits.iter().any(|&h| h != first) {
+                return Err("uneven output coverage (data spaces must tile uniformly)".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_box_maximum_equals_bruteforce() {
+    let arch = Arch::dram_pim_small();
+    check_seeded(
+        0xB0C5,
+        100,
+        |rng| {
+            let s = sample_pairable(&arch, rng, 1024);
+            let coords = (rng.next_u64(), rng.next_u64(), rng.next_u64());
+            (s, coords)
+        },
+        |(input, coords)| {
+            let Some((_, m)) = input else { return Ok(()) };
+            let t = LoopTable::new(m);
+            let (kb, pb, qb) = (m.bounds[Dim::K], m.bounds[Dim::P], m.bounds[Dim::Q]);
+            let mk = |seed: u64, bound: u64| -> Range {
+                let a = seed % bound;
+                let b = (seed >> 17) % bound;
+                Range::new(a.min(b), a.max(b) + 1)
+            };
+            let k = mk(coords.0, kb);
+            let p = mk(coords.1, pb);
+            let q = mk(coords.2, qb);
+            let got = t.max_finish_step_over_box(k, p, q);
+            let mut want = 0;
+            for kk in k.lo..k.hi {
+                for pp in p.lo..p.hi {
+                    for qq in q.lo..q.hi {
+                        want = want.max(t.finish_step_of_output(kk, pp, qq));
+                    }
+                }
+            }
+            if got != want {
+                return Err(format!("box max {got} != brute force {want} for {k} {p} {q}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_analytical_overlap_equals_exhaustive() {
+    let arch = Arch::dram_pim_small();
+    let pm = PerfModel::new(&arch);
+    check_seeded(
+        0x0E71A,
+        60,
+        |rng| {
+            let a = sample_pairable(&arch, rng, 1024);
+            let b = sample_pairable(&arch, rng, 512);
+            let reseed = rng.next_u64();
+            (a, b, reseed)
+        },
+        |(a, b, reseed)| {
+            let (Some((la, ma)), Some((lb_raw, _)), reseed) = (a, b, reseed) else {
+                return Ok(());
+            };
+            // Make the pair chain-consistent: consumer C := producer K,
+            // then sample a fresh consumer mapping for the adjusted layer.
+            let mut lb = lb_raw.clone();
+            lb.c = la.k;
+            let ms = MapSpace::with_defaults(&arch, &lb);
+            let mut rng2 = SplitMix64::new(*reseed);
+            let Some(mb) = ms.sample(&mut rng2) else { return Ok(()) };
+            if mb.temporal_steps() > 512 {
+                return Ok(());
+            }
+            let sa = pm.evaluate(la, ma);
+            let sb = pm.evaluate(&lb, &mb);
+            let pair = LayerPair::new((la, ma, &sa), (&lb, &mb, &sb));
+            let ana = AnalyticalOverlap::default().ready_times(&pair);
+            let exh = ExhaustiveOverlap::default().ready_times(&pair);
+            if ana.probes != exh.probes {
+                let n = ana.probes.iter().zip(&exh.probes).filter(|(x, y)| x != y).count();
+                let first: Vec<_> = ana
+                    .probes
+                    .iter()
+                    .zip(&exh.probes)
+                    .filter(|(x, y)| x != y)
+                    .take(2)
+                    .collect();
+                return Err(format!(
+                    "engines disagree on {n} probes, first {first:?}\nma={ma:?}\nmb={mb:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_overlap_and_transform_bounds() {
+    let arch = Arch::dram_pim_small();
+    let pm = PerfModel::new(&arch);
+    check_seeded(
+        0xB0DD5,
+        60,
+        |rng| {
+            let a = sample_pairable(&arch, rng, 4096);
+            let b = sample_pairable(&arch, rng, 4096);
+            let reseed = rng.next_u64();
+            (a, b, reseed)
+        },
+        |(a, b, reseed)| {
+            let (Some((la, ma)), Some((lb_raw, _)), reseed) = (a, b, reseed) else {
+                return Ok(());
+            };
+            let mut lb = lb_raw.clone();
+            lb.c = la.k;
+            let ms = MapSpace::with_defaults(&arch, &lb);
+            let mut rng2 = SplitMix64::new(*reseed);
+            let Some(mb) = ms.sample(&mut rng2) else { return Ok(()) };
+            let sa = pm.evaluate(la, ma);
+            let sb = pm.evaluate(&lb, &mb);
+            let pair = LayerPair::new((la, ma, &sa), (&lb, &mb, &sb));
+            let ready = AnalyticalOverlap::default().ready_times(&pair);
+            let ov = overlapped_latency(&sa, &sb, &ready);
+            let seq = sa.latency_cycles + sb.latency_cycles;
+            if ov.overlapped_end < sb.compute_cycles {
+                return Err(format!("overlap end {} < consumer compute", ov.overlapped_end));
+            }
+            if ov.overlapped_end > seq {
+                return Err(format!("overlap end {} > sequential {seq}", ov.overlapped_end));
+            }
+            if ov.saving + ov.overlapped_end != seq {
+                return Err("saving + end != sequential".into());
+            }
+            let tr = transform_schedule(&pair, &TransformConfig::default());
+            if tr.transformed_end < sb.compute_cycles {
+                return Err(format!("transform end {} < consumer compute", tr.transformed_end));
+            }
+            if tr.transformed_end > seq + tr.penalty_cycles {
+                return Err(format!(
+                    "transform end {} > sequential {seq} + penalty {}",
+                    tr.transformed_end, tr.penalty_cycles
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mapping_samples_always_validate() {
+    let arch = Arch::dram_pim();
+    check_seeded(
+        0x5A11D,
+        150,
+        |rng| {
+            let k = *rng.choose(&[10u64, 64, 100, 512]);
+            let c = *rng.choose(&[3u64, 17, 64, 256]);
+            let pq = *rng.choose(&[7u64, 14, 28, 56]);
+            (Layer::conv("v", 1, k, c, pq, pq, 3, 3, 1, 1), rng.next_u64())
+        },
+        |(layer, seed)| {
+            let ms = MapSpace::with_defaults(&arch, layer);
+            let mut rng = SplitMix64::new(*seed);
+            match ms.sample(&mut rng) {
+                None => Err("sampler failed on a reasonable layer".into()),
+                Some(m) => m.validate(&arch, layer).map_err(|e| e.to_string()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_perf_model_scales_with_work() {
+    // More serial MACs per output => step cycles strictly increase.
+    let arch = Arch::dram_pim_small();
+    let pm = PerfModel::new(&arch);
+    check_seeded(
+        0x9E7F,
+        60,
+        |rng| {
+            let c1 = *rng.choose(&[2u64, 4, 8]);
+            let c2 = c1 * *rng.choose(&[2u64, 4]);
+            (c1, c2)
+        },
+        |&(c1, c2)| {
+            let mk = |c: u64| {
+                Mapping::new(vec![
+                    vec![],
+                    vec![],
+                    vec![Loop::temporal(Dim::P, 8)],
+                    vec![
+                        Loop::spatial(Dim::K, 8),
+                        Loop::temporal(Dim::C, c),
+                        Loop::temporal(Dim::R, 3),
+                        Loop::temporal(Dim::S, 3),
+                    ],
+                ])
+            };
+            let a = pm.step_cycles(&mk(c1));
+            let b = pm.step_cycles(&mk(c2));
+            if b <= a {
+                return Err(format!("step cycles must grow with reduction: {a} !< {b}"));
+            }
+            Ok(())
+        },
+    );
+}
