@@ -84,5 +84,43 @@ fn main() {
          engine at the same deadline explores so few mappings per layer that whole-network\n\
          optimization degrades to near-arbitrary mappings (run with FOPIM_DEADLINE_MS to probe)."
     );
+
+    // Parallel search at equal runtime: the same per-layer deadline
+    // converts worker threads into search breadth the way the analytical
+    // engine converts cheaper analysis into breadth. (Deadline-mode runs
+    // are timing-dependent, so totals are indicative; the bit-identical
+    // determinism guarantee is exercised in fig14's budget-mode sweep and
+    // in rust/tests/parallel_search.rs.)
+    let threads = common::env_u64("FOPIM_THREADS", 8) as usize;
+    let net = zoo::resnet18();
+    let mut t = Table::new(
+        &format!("{} — analytical engine, equal per-layer deadline, 1 vs {threads} threads", net.name),
+        &["threads", "mappings explored", "breadth vs 1 thread", "Best Transform"],
+    );
+    let mut base_maps = 0usize;
+    for workers in [1usize, threads] {
+        let mut cfg = MapperConfig {
+            budget: usize::MAX / 2,
+            deadline: Some(deadline),
+            seed: common::seed(),
+            refine_passes: 0,
+            threads: workers,
+            ..Default::default()
+        };
+        cfg.overlap = fastoverlapim::overlap::OverlapConfig { max_probe_steps: 256 };
+        let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+            .run(&net, Metric::Transform);
+        if workers == 1 {
+            base_maps = plan.mappings_evaluated;
+        }
+        t.row(vec![
+            workers.to_string(),
+            plan.mappings_evaluated.to_string(),
+            format!("{:.1}x", plan.mappings_evaluated as f64 / base_maps.max(1) as f64),
+            cycles(plan.total_transformed),
+        ]);
+    }
+    println!("{}", t.render());
+    common::maybe_csv(&t);
     println!("fig11 OK");
 }

@@ -138,5 +138,66 @@ fn main() {
     }
     println!("{}", t.render());
     common::maybe_csv(&t);
+
+    // Parallel whole-network search throughput: the ResNet-18 sweep at a
+    // fixed candidate budget, fanned across worker threads. Budget-mode
+    // candidates are pure functions of (seed, index), so every row must
+    // produce the bit-identical plan — the speedup is pure wall-clock.
+    let budget = common::env_u64("FOPIM_BUDGET", 32) as usize;
+    let max_threads = common::env_u64("FOPIM_THREADS", 8) as usize;
+    let net = fastoverlapim::workload::zoo::resnet18();
+    let mut t = Table::new(
+        &format!(
+            "parallel whole-network search — {} @ budget {budget}/layer (Transform metric)",
+            net.name
+        ),
+        &["threads", "wallclock", "mappings/s", "speedup vs 1 thread", "Best Transform"],
+    );
+    let mut base_secs = 0.0f64;
+    let mut base_total = 0u64;
+    let mut last_speedup = 0.0f64;
+    // Powers of two up to (and including) the requested maximum, so the
+    // final "speedup at max threads" line always reports FOPIM_THREADS.
+    let mut sweep: Vec<usize> = Vec::new();
+    let mut w = 1usize;
+    while w < max_threads.max(1) {
+        sweep.push(w);
+        w *= 2;
+    }
+    sweep.push(max_threads.max(1));
+    for workers in sweep {
+        let cfg = fastoverlapim::search::MapperConfig {
+            budget,
+            seed: common::seed(),
+            refine_passes: 0,
+            threads: workers,
+            ..Default::default()
+        };
+        let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+            .run(&net, Metric::Transform);
+        let secs = plan.wallclock.as_secs_f64().max(1e-9);
+        if workers == 1 {
+            base_secs = secs;
+            base_total = plan.total_transformed;
+        } else {
+            assert_eq!(
+                plan.total_transformed, base_total,
+                "plans must be bit-identical across thread counts"
+            );
+        }
+        last_speedup = base_secs / secs;
+        t.row(vec![
+            workers.to_string(),
+            format!("{:.2?}", plan.wallclock),
+            format!("{:.0}", plan.mappings_evaluated as f64 / secs),
+            format!("{last_speedup:.2}x"),
+            plan.total_transformed.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    common::maybe_csv(&t);
+    println!(
+        "parallel search speedup at max threads: {last_speedup:.1}x with bit-identical plans\n"
+    );
     println!("fig14 OK");
 }

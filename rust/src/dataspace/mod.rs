@@ -202,13 +202,18 @@ impl LoopTable {
         }
     }
 
-    /// Temporal loops over reduction dims: the extra `(bound−1)·G` term
-    /// that pushes an output's *completion* to its final reduction visit
-    /// (§IV-H: the R/S/C loop sizes are added to the temporal index).
-    pub fn reduction_completion_offset(&self) -> u64 {
+    /// The extra `(bound−1)·G` completion term of every temporal loop that
+    /// does not index the output coordinates: reduction dims C/R/S (§IV-H:
+    /// an output is only complete after the *last* visit of each reduction
+    /// loop) plus batch N. Data spaces carry no batch coordinate — a
+    /// `[K, P, Q]` output block recurs at every batch digit — so the
+    /// exhaustive engine's "latest intersecting step" lands on the final
+    /// batch visit, and the analytical queries must charge the same term
+    /// to agree with that oracle.
+    pub fn completion_offset(&self) -> u64 {
         self.temporal
             .iter()
-            .filter(|i| i.dim.is_reduction())
+            .filter(|i| i.dim.is_reduction() || i.dim == Dim::N)
             .map(|i| (i.bound - 1) * i.index_stride)
             .sum()
     }
@@ -225,8 +230,12 @@ impl LoopTable {
                 Dim::P => t += ((p / info.data_stride) % info.bound) * info.index_stride,
                 Dim::Q => t += ((q / info.data_stride) % info.bound) * info.index_stride,
                 // The output is only complete after the *last* visit of
-                // every reduction loop.
-                d if d.is_reduction() => t += (info.bound - 1) * info.index_stride,
+                // every reduction loop — and of every batch (N) loop,
+                // since a `[K, P, Q]` block recurs once per batch digit
+                // (see `completion_offset`).
+                d if d.is_reduction() || d == Dim::N => {
+                    t += (info.bound - 1) * info.index_stride
+                }
                 _ => {}
             }
         }
@@ -246,7 +255,7 @@ impl LoopTable {
     /// any digit DP) — still O(#loops) per query.
     pub fn max_finish_step_over_box(&self, k: Range, p: Range, q: Range) -> u64 {
         debug_assert!(!k.is_empty() && !p.is_empty() && !q.is_empty());
-        let mut t = self.reduction_completion_offset();
+        let mut t = self.completion_offset();
         t += self.max_dim_contribution(Dim::K, k);
         t += self.max_dim_contribution(Dim::P, p);
         t += self.max_dim_contribution(Dim::Q, q);
@@ -581,7 +590,7 @@ mod tests {
     }
 
     #[test]
-    fn reduction_completion_offset_counts_hierarchy_reduction_loops() {
+    fn completion_offset_counts_hierarchy_reduction_loops() {
         // Move C above the bank: steps gain a C dimension, and outputs
         // complete only at the last C visit.
         let m = Mapping::new(vec![
@@ -598,10 +607,56 @@ mod tests {
         ]);
         let t = LoopTable::new(&m);
         // C hierarchy loop: bound 4, G = 8 (inner Q loop) -> offset 24.
-        assert_eq!(t.reduction_completion_offset(), 3 * 8);
+        assert_eq!(t.completion_offset(), 3 * 8);
         // finish step of any output must include the offset.
         assert_eq!(t.finish_step_of_output(0, 0, 0), 24);
         assert_eq!(t.finish_step_of_output(0, 0, 7), 24 + 7);
+    }
+
+    #[test]
+    fn batch_loops_delay_completion_like_the_exhaustive_oracle() {
+        // A temporal N loop replays every [K, P, Q] block once per batch
+        // digit; the finish step must land on the *last* replay, which is
+        // what the exhaustive engine's latest-intersecting-step query sees
+        // (data spaces carry no batch coordinate).
+        let m = Mapping::new(vec![
+            vec![Loop::temporal(Dim::N, 2)],
+            vec![Loop::spatial(Dim::P, 4)],
+            vec![Loop::temporal(Dim::Q, 8)],
+            vec![
+                Loop::spatial(Dim::K, 16),
+                Loop::spatial(Dim::P, 2),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let t = LoopTable::new(&m);
+        assert_eq!(t.total_steps, 16);
+        // N loop: bound 2, G = 8 (inner Q) -> offset 8 on every output.
+        assert_eq!(t.finish_step_of_output(0, 0, 0), 8);
+        assert_eq!(t.finish_step_of_output(0, 0, 7), 8 + 7);
+        assert_eq!(
+            t.max_finish_step_over_box(
+                Range::new(0, 16),
+                Range::new(0, 8),
+                Range::new(0, 8)
+            ),
+            15
+        );
+        // Oracle agreement: brute force over the generated spaces.
+        let spaces = AnalyticalGen::generate(&m);
+        let brute = spaces
+            .iter()
+            .filter(|ds| ds.output_intersects(
+                &Range::new(0, 1),
+                &Range::new(0, 1),
+                &Range::new(0, 1),
+            ))
+            .map(|ds| ds.step)
+            .max()
+            .unwrap();
+        assert_eq!(t.finish_step_of_output(0, 0, 0), brute);
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //!
 //! Architecture: a scheduler thread owns job state and the simulated
 //! clock; a pool of worker threads executes tiles through the shared PJRT
-//! [`Runtime`](crate::runtime::Runtime). Banks of the PIM slice map 1:1 to
-//! logical execution lanes.
+//! runtime (behind the `pjrt` feature — without it the device client is a
+//! stub and the engine reports a clear error instead of executing). Banks
+//! of the PIM slice map 1:1 to logical execution lanes.
 
 pub mod tiny;
 

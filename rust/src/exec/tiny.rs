@@ -21,8 +21,9 @@ use crate::mapspace::MappingConstraint;
 use crate::runtime::DeviceClient;
 use crate::search::{Mapper, MapperConfig, Metric, NeighborRole, PairContext};
 use crate::util::rng::SplitMix64;
+use crate::ensure;
+use crate::util::error::{Context, Error, Result};
 use crate::workload::{zoo, Network};
-use anyhow::{anyhow, Context, Result};
 use std::time::{Duration, Instant};
 
 /// Deterministic model parameters + input image.
@@ -107,7 +108,7 @@ pub fn plan_layers(
 ) -> Result<Vec<LayerExec>> {
     let constraints = layer_constraints();
     let chain = net.chain();
-    anyhow::ensure!(chain.len() == 4, "tiny-cnn chain must have 4 layers");
+    ensure!(chain.len() == 4, "tiny-cnn chain must have 4 layers");
     let mut out: Vec<LayerExec> = Vec::with_capacity(4);
     for (pos, &li) in chain.iter().enumerate() {
         let layer = &net.layers[li];
@@ -130,7 +131,7 @@ pub fn plan_layers(
             .collect();
         let best = mapper
             .search_layer_with(metric, layer, &ctxs)
-            .ok_or_else(|| anyhow!("no valid mapping for {}", layer.name))?;
+            .ok_or_else(|| Error::msg(format!("no valid mapping for {}", layer.name)))?;
         out.push(LayerExec::new(best.mapping, best.stats));
     }
     Ok(out)
@@ -210,7 +211,7 @@ impl TinyCnnEngine {
         let net = zoo::tiny_cnn();
         let (device, names) = DeviceClient::spawn(artifacts_dir).context("starting device")?;
         for needed in artifact_names().iter().chain(["tiny_cnn_full"].iter()) {
-            anyhow::ensure!(
+            ensure!(
                 names.iter().any(|n| n == needed),
                 "artifact `{needed}` missing — rebuild with `make artifacts`"
             );
@@ -328,7 +329,7 @@ impl TinyCnnEngine {
                 dispatched.push(id);
             }
             pending.retain(|id| !dispatched.contains(id));
-            anyhow::ensure!(
+            ensure!(
                 inflight > 0,
                 "deadlock: {} pending jobs, nothing dispatchable",
                 pending.len()
@@ -341,10 +342,10 @@ impl TinyCnnEngine {
             self.commit_output(&mut bufs, &jobs[d.job_id], &d.output, 1);
         }
         pool.shutdown();
-        anyhow::ensure!(bufs.conv1.complete(), "conv1 incomplete");
-        anyhow::ensure!(bufs.conv2.complete(), "conv2 incomplete");
-        anyhow::ensure!(bufs.conv3.complete(), "conv3 incomplete");
-        anyhow::ensure!(bufs.logit_parts_done == 8, "fc incomplete");
+        ensure!(bufs.conv1.complete(), "conv1 incomplete");
+        ensure!(bufs.conv2.complete(), "conv2 incomplete");
+        ensure!(bufs.conv3.complete(), "conv3 incomplete");
+        ensure!(bufs.logit_parts_done == 8, "fc incomplete");
         Ok(bufs)
     }
 

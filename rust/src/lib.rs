@@ -26,16 +26,22 @@
 //!   §IV-G/H), plus overlapped-latency evaluation.
 //! * [`transform`] — the overlap-driven mapping transformation (§IV-I).
 //! * [`search`] — the per-layer mapper and whole-network search strategies
-//!   (Forward / Backward / Middle) with all baseline algorithms (§IV-J/K).
+//!   (Forward / Backward / Middle) with all baseline algorithms (§IV-J/K),
+//!   plus the deterministic multi-threaded candidate evaluator
+//!   ([`search::ParallelMapper`]) and the overlap-analysis memoizer wiring.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO-text artifacts
 //!   produced by the Python compile path and executes them from Rust.
+//!   Gated behind the off-by-default `pjrt` cargo feature (the `xla`
+//!   bindings are unavailable offline); without it a std-only stub compiles
+//!   and the PJRT tests skip.
 //! * [`exec`] — an overlap-scheduled functional execution engine that runs
 //!   a real (small) network through the PJRT executables following the
 //!   searched schedule, proving the schedules are causally valid.
 //! * [`report`] — table / CSV / JSON emitters used by the figure benches.
-//! * [`util`] — PRNG, factorization, YAML-subset parser, CLI helper and a
-//!   small property-testing harness (the image has no crates.io access, so
-//!   the crate is std-only apart from the `xla` PJRT bindings).
+//! * [`util`] — PRNG (with stream splitting for sharded sampling),
+//!   factorization, YAML-subset parser, CLI helper, error type and a small
+//!   property-testing harness (the image has no crates.io access, so the
+//!   default build is strictly std-only).
 
 pub mod arch;
 pub mod dataspace;
@@ -59,12 +65,12 @@ pub mod prelude {
     pub use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
     pub use crate::overlap::{
         overlapped_latency, AnalyticalOverlap, ExhaustiveOverlap, LayerPair, OverlapAnalysis,
-        OverlapConfig, OverlapResult,
+        OverlapCache, OverlapConfig, OverlapResult,
     };
     pub use crate::perf::{LayerStats, PerfModel};
     pub use crate::search::{
         Algorithm, AnalysisEngine, EvaluatedMapping, Mapper, MapperConfig, Metric,
-        MiddleHeuristic, NetworkPlan, NetworkSearch, SearchStrategy,
+        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
     };
     pub use crate::transform::{transform_schedule, TransformConfig, TransformResult};
     pub use crate::util::rng::SplitMix64;

@@ -47,7 +47,8 @@ SUBCOMMANDS
   search   --net <zoo|file.yaml> [--arch dram|reram|small|file.yaml]
            [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
            [--metric seq|overlap|transform] [--engine analytical|exhaustive]
-           [--deadline-ms T] [--refine N] [--per-layer] [--csv]
+           [--deadline-ms T] [--refine N] [--threads N] [--cache on|off]
+           [--per-layer] [--csv]
   analyze  --net <zoo> --pair I [--budget N] [--seed S]
   arch     [--config dram|reram|small|file.yaml] [--dump]
   export   --net <zoo> [--out file.yaml]
@@ -97,6 +98,11 @@ fn mapper_config(args: &Args) -> MapperConfig {
         "exhaustive" => AnalysisEngine::Exhaustive,
         other => panic!("unknown engine `{other}`"),
     };
+    // Parallel search knobs: worker threads for per-layer candidate
+    // evaluation (results are bit-identical at any thread count when no
+    // deadline is set) and the overlap-analysis memoization cache.
+    cfg.threads = args.get_usize("threads", 1).max(1);
+    cfg.cache = args.get_switch("cache", true);
     cfg
 }
 
@@ -125,6 +131,7 @@ fn cmd_search(args: &Args) {
         "searching {} on {} (budget {}, {:?}, {:?}, {:?} engine)...",
         net.name, arch.name, cfg.budget, strat, metric, cfg.engine
     );
+    let threads = cfg.threads;
     let search = NetworkSearch::new(&arch, cfg, strat);
     let plan = search.run(&net, metric);
 
@@ -145,9 +152,18 @@ fn cmd_search(args: &Args) {
     ]);
     println!("{}", t.render());
     println!(
-        "search: {} mappings evaluated in {:.2?}",
-        plan.mappings_evaluated, plan.wallclock
+        "search: {} mappings evaluated in {:.2?} ({} thread{})",
+        plan.mappings_evaluated,
+        plan.wallclock,
+        threads,
+        if threads == 1 { "" } else { "s" }
     );
+    if plan.cache_hits + plan.cache_misses > 0 {
+        println!(
+            "overlap cache: {} hits / {} misses",
+            plan.cache_hits, plan.cache_misses
+        );
+    }
 
     if args.has_flag("per-layer") {
         let mut t = Table::new(
@@ -254,6 +270,13 @@ fn cmd_export(args: &Args) {
 fn cmd_exec(args: &Args) {
     use fastoverlapim::exec::tiny::TinyCnnEngine;
     use fastoverlapim::exec::SchedulePolicy;
+    if !fastoverlapim::runtime::pjrt_enabled() {
+        eprintln!(
+            "this binary was built without the `pjrt` feature; the exec engine needs \
+             the XLA/PJRT runtime (rebuild with `--features pjrt` and a vendored `xla` crate)"
+        );
+        std::process::exit(1);
+    }
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)

@@ -347,6 +347,28 @@ impl Mapping {
         Ok(())
     }
 
+    /// A stable 64-bit structural fingerprint of the mapping: a pure
+    /// function of the nest structure (level boundaries, loop dimensions,
+    /// bounds and spatial/temporal kinds). Two mappings compare equal iff
+    /// they fingerprint equal (modulo 64-bit hash collisions), across
+    /// threads, runs and platforms — the key ingredient of the
+    /// overlap-analysis memoization cache (the `(producer, consumer)`
+    /// cache key is built from the two mappings' fingerprints).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write(self.nests.len() as u64);
+        for nest in &self.nests {
+            // Nest delimiter: keeps `[[a], [b]]` distinct from `[[a, b]]`.
+            h.write(0xFEED_FACE_CAFE_BEEF);
+            for l in nest {
+                h.write(l.dim.index() as u64);
+                h.write(l.bound);
+                h.write(l.is_spatial() as u64);
+            }
+        }
+        h.finish()
+    }
+
     /// Padding waste factor: padded iteration volume / true volume (>= 1).
     pub fn padding_waste(&self, layer: &Layer) -> f64 {
         let padded: f64 = Dim::ALL.iter().map(|&d| self.bounds[d] as f64).product();
@@ -500,5 +522,36 @@ mod tests {
     fn padding_waste_unity_for_exact() {
         let m = demo_mapping();
         assert!((m.padding_waste(&demo_layer()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_separates_structure() {
+        let a = demo_mapping();
+        let b = demo_mapping();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+
+        // Different bound -> different fingerprint.
+        let mut nests = demo_mapping().nests;
+        nests[0] = vec![Loop::temporal(Dim::K, 4)];
+        let c = Mapping::new(nests);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+
+        // Same loops, different level placement -> different fingerprint.
+        let d = Mapping::new(vec![
+            vec![],
+            vec![Loop::spatial(Dim::P, 4), Loop::temporal(Dim::K, 2)],
+            vec![Loop::temporal(Dim::P, 2), Loop::temporal(Dim::Q, 4)],
+            demo_mapping().nests[3].clone(),
+        ]);
+        assert_ne!(a.fingerprint(), d.fingerprint());
+
+        // Spatial vs temporal kind matters.
+        let e = Mapping::new(vec![
+            vec![Loop::spatial(Dim::K, 2)],
+            vec![Loop::spatial(Dim::P, 4)],
+            vec![Loop::temporal(Dim::P, 2), Loop::temporal(Dim::Q, 4)],
+            demo_mapping().nests[3].clone(),
+        ]);
+        assert_ne!(a.fingerprint(), e.fingerprint());
     }
 }

@@ -25,7 +25,11 @@
 use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range};
 use crate::mapping::Mapping;
 use crate::perf::LayerStats;
+use crate::util::Fnv64;
 use crate::workload::{Layer, LayerKind};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A box in *producer output* coordinates `[K, P, Q]`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -427,6 +431,175 @@ pub fn overlapped_latency(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Overlap-analysis memoization (§IV-J acceleration).
+//
+// The whole-network sweep evaluates N layers × k candidates, and each
+// candidate is scored against a *fixed* neighbor mapping. The same
+// (producer, consumer) pair recurs whenever an incumbent is re-scored — in
+// coordinate-descent refinement passes, in the final forward evaluation
+// pass, and across the baseline-matrix searches — and `ReadyTimes` is a
+// pure function of the pair, so recomputing it is pure waste. The cache
+// below keys entries by stable fingerprints of both sides plus the probe
+// configuration and engine, and is sharded so parallel workers rarely
+// contend on the same lock.
+// ---------------------------------------------------------------------------
+
+/// Cache key for one analyzed pair: stable fingerprints of the producer
+/// and consumer sides plus the analysis configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PairKey {
+    pub producer: u64,
+    pub consumer: u64,
+    /// `OverlapConfig::max_probe_steps` the entry was computed with.
+    pub probe: u64,
+    /// Engine tag (the two engines agree analytically, but keying them
+    /// apart keeps the cache observationally transparent even if one
+    /// regresses).
+    pub engine: u64,
+}
+
+/// Fingerprint of one side of a pair: everything `ready_times` reads from
+/// it — layer shape, mapping structure, and the latency parameters of its
+/// stats (step length, movement, step count).
+fn side_fingerprint(layer: &Layer, mapping: &Mapping, stats: &LayerStats) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(layer.fingerprint());
+    h.write(mapping.fingerprint());
+    h.write(stats.step_cycles);
+    h.write(stats.movement_cycles);
+    h.write(stats.temporal_steps);
+    h.finish()
+}
+
+/// Build the cache key for a pair under a probe budget and engine tag.
+pub fn pair_cache_key(pair: &LayerPair<'_>, engine: u64, max_probe_steps: usize) -> PairKey {
+    PairKey {
+        producer: side_fingerprint(pair.producer, pair.producer_mapping, pair.producer_stats),
+        consumer: side_fingerprint(pair.consumer, pair.consumer_mapping, pair.consumer_stats),
+        probe: max_probe_steps as u64,
+        engine,
+    }
+}
+
+const CACHE_SHARDS: usize = 16;
+
+/// Default per-shard entry cap (total = 16 shards × 256 = 4096 entries).
+/// Recurring-pair lookups ([`OverlapCache::get_or_compute`]) insert on
+/// miss; one-shot candidate lookups ([`OverlapCache::peek_or_compute`])
+/// never do, so the population is O(chain length × passes) in practice
+/// and the cap is a memory backstop — a full shard simply computes
+/// through without inserting, which can cost a recomputation later but
+/// can never change a result.
+const CACHE_SHARD_CAP: usize = 256;
+
+/// Sharded, thread-safe, bounded memoization cache for [`ReadyTimes`].
+///
+/// Lookups take one shard lock for a hash-map probe; the (expensive)
+/// analysis itself always runs outside any lock, so parallel workers never
+/// serialize on each other's computations — at worst two workers race to
+/// compute the same entry and the first insertion wins (both computed the
+/// same pure value, so the race is benign and deterministic).
+pub struct OverlapCache {
+    shards: [Mutex<HashMap<PairKey, Arc<ReadyTimes>>>; CACHE_SHARDS],
+    shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl OverlapCache {
+    pub fn new() -> OverlapCache {
+        Self::with_shard_cap(CACHE_SHARD_CAP)
+    }
+
+    /// Cache holding at most `16 × shard_cap` entries (0 = store nothing,
+    /// i.e. a pure pass-through that still counts hits/misses).
+    pub fn with_shard_cap(shard_cap: usize) -> OverlapCache {
+        OverlapCache {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            shard_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: &PairKey) -> &Mutex<HashMap<PairKey, Arc<ReadyTimes>>> {
+        let h = key.producer ^ key.consumer.rotate_left(17) ^ key.probe ^ key.engine;
+        &self.shards[(h as usize) % CACHE_SHARDS]
+    }
+
+    /// Fetch the entry for `key`, computing it on a miss and inserting the
+    /// result while the shard has room. `compute` runs outside the shard
+    /// lock.
+    pub fn get_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
+    where
+        F: FnOnce() -> ReadyTimes,
+    {
+        self.fetch(key, true, compute)
+    }
+
+    /// Fetch the entry for `key`, computing on a miss **without inserting**.
+    /// For lookups whose key is unlikely to recur (each candidate draw of a
+    /// search analyzes a fresh pair exactly once): they still profit from
+    /// entries the recurring paths stored, but must not flush those
+    /// entries out of the bounded shards with write-once garbage.
+    pub fn peek_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
+    where
+        F: FnOnce() -> ReadyTimes,
+    {
+        self.fetch(key, false, compute)
+    }
+
+    fn fetch<F>(&self, key: PairKey, store: bool, compute: F) -> Arc<ReadyTimes>
+    where
+        F: FnOnce() -> ReadyTimes,
+    {
+        let shard = self.shard(&key);
+        if let Some(v) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(v);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = Arc::new(compute());
+        if store {
+            let mut guard = shard.lock().unwrap();
+            if let Some(existing) = guard.get(&key) {
+                // Lost a benign race: another worker inserted the same pure
+                // value; keep the first insertion.
+                return Arc::clone(existing);
+            }
+            if guard.len() < self.shard_cap {
+                guard.insert(key, Arc::clone(&v));
+            }
+        }
+        v
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct entries currently held.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for OverlapCache {
+    fn default() -> OverlapCache {
+        OverlapCache::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -640,6 +813,112 @@ mod tests {
         let ana = AnalyticalOverlap::default().ready_times(&pair);
         let exh = ExhaustiveOverlap::default().ready_times(&pair);
         assert_eq!(ana.probes, exh.probes);
+    }
+
+    #[test]
+    fn engines_agree_on_batched_producer() {
+        // Regression: a temporal batch (N) loop replays every output block
+        // once per batch digit. The exhaustive oracle's latest-intersecting
+        // step lands on the final replay; the analytical engine must charge
+        // the same completion offset.
+        let arch = Arch::dram_pim_small();
+        let la = Layer::conv("a", 2, 8, 8, 8, 8, 3, 3, 1, 1);
+        let lb = Layer::conv("b", 1, 8, 8, 8, 8, 3, 3, 1, 1);
+        let ma = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::N, 2), Loop::temporal(Dim::P, 8)],
+            vec![
+                Loop::spatial(Dim::K, 8),
+                Loop::spatial(Dim::Q, 8),
+                Loop::temporal(Dim::C, 8),
+                Loop::temporal(Dim::R, 3),
+                Loop::temporal(Dim::S, 3),
+            ],
+        ]);
+        let mb = simple_mapping(1, 8, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ana = AnalyticalOverlap::default().ready_times(&pair);
+        let exh = ExhaustiveOverlap::default().ready_times(&pair);
+        assert_eq!(ana.probes, exh.probes);
+        // Every consumer step depends on the *second* batch pass: no probe
+        // may be ready before step 8 of the producer finishes.
+        let floor = sa.step_finish_cycle(8);
+        for &(_, r) in &ana.probes {
+            assert!(r >= floor, "ready {r} ignores the batch replay (floor {floor})");
+        }
+    }
+
+    #[test]
+    fn cache_returns_identical_ready_times() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let cfg = OverlapConfig::default();
+        let cache = OverlapCache::new();
+        let key = pair_cache_key(&pair, 0, cfg.max_probe_steps);
+        let direct = AnalyticalOverlap::new(cfg.clone()).ready_times(&pair);
+        let first = cache.get_or_compute(key, || {
+            AnalyticalOverlap::new(cfg.clone()).ready_times(&pair)
+        });
+        let second = cache.get_or_compute(key, || {
+            panic!("second lookup must be a cache hit")
+        });
+        assert_eq!(first.probes, direct.probes);
+        assert_eq!(second.probes, direct.probes);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn cache_capacity_bounds_insertions_without_changing_results() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let direct = AnalyticalOverlap::default().ready_times(&pair);
+        // Zero-capacity cache: pass-through, never stores, same values.
+        let cache = OverlapCache::with_shard_cap(0);
+        for _ in 0..3 {
+            let got = cache.get_or_compute(pair_cache_key(&pair, 0, 2048), || {
+                AnalyticalOverlap::default().ready_times(&pair)
+            });
+            assert_eq!(got.probes, direct.probes);
+        }
+        assert_eq!(cache.len(), 0, "capacity 0 must store nothing");
+        assert_eq!(cache.misses(), 3);
+    }
+
+    #[test]
+    fn cache_key_separates_pairs_probes_and_engines() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let ma2 = simple_mapping(2, 4, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sa2 = eval(&arch, &la, &ma2);
+        let sb = eval(&arch, &lb, &mb);
+        let p1 = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let p2 = LayerPair::new((&la, &ma2, &sa2), (&lb, &mb, &sb));
+        let k1 = pair_cache_key(&p1, 0, 2048);
+        let k2 = pair_cache_key(&p2, 0, 2048);
+        assert_ne!(k1, k2, "different producer mappings must not share entries");
+        assert_ne!(k1, pair_cache_key(&p1, 1, 2048), "engine tag must separate");
+        assert_ne!(k1, pair_cache_key(&p1, 0, 64), "probe budget must separate");
+        // Swapping roles must not alias.
+        let swapped = LayerPair::new((&lb, &mb, &sb), (&la, &ma, &sa));
+        assert_ne!(k1, pair_cache_key(&swapped, 0, 2048));
     }
 
     #[test]

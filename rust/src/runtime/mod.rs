@@ -9,11 +9,19 @@
 //!
 //! Python never runs on the request path: `make artifacts` lowers the
 //! kernels once, and the Rust binary is self-contained afterwards.
+//!
+//! # The `pjrt` feature
+//!
+//! The `xla` bindings crate is not available in the offline build image,
+//! so everything that touches PJRT lives behind the off-by-default `pjrt`
+//! cargo feature. Without it this module compiles a **std-only stub**: the
+//! manifest parser and path helpers work normally, `artifacts_available()`
+//! reports `false`, and [`DeviceClient::spawn`] returns a descriptive
+//! error — callers (the `exec` engine, the `repro exec` subcommand, the
+//! runtime integration tests) skip gracefully instead of failing to build.
 
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use crate::util::error::{Context, Error, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 /// Description of one artifact from `artifacts/manifest.yaml`.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,22 +36,22 @@ pub struct ArtifactSpec {
 
 /// Parse `manifest.yaml` (written by `aot.py`).
 pub fn parse_manifest(source: &str) -> Result<Vec<ArtifactSpec>> {
-    let doc = crate::util::yaml::parse(source).map_err(|e| anyhow!("{e}"))?;
+    let doc = crate::util::yaml::parse(source).map_err(|e| Error::msg(e.to_string()))?;
     let arts = doc
         .get("artifacts")
         .and_then(|v| v.as_list())
-        .ok_or_else(|| anyhow!("manifest missing `artifacts` list"))?;
+        .context("manifest missing `artifacts` list")?;
     let mut out = Vec::with_capacity(arts.len());
     for a in arts {
         let name = a
             .get("name")
             .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .context("artifact missing name")?
             .to_string();
         let file = a
             .get("file")
             .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow!("artifact `{name}` missing file"))?
+            .with_context(|| format!("artifact `{name}` missing file"))?
             .to_string();
         // Shapes are compact `AxBxC` strings (`x` alone = scalar).
         let parse_shape = |v: &crate::util::yaml::Value| -> Result<Vec<usize>> {
@@ -51,266 +59,31 @@ pub fn parse_manifest(source: &str) -> Result<Vec<ArtifactSpec>> {
             if let Some(n) = v.as_u64() {
                 return Ok(vec![n as usize]);
             }
-            let s = v.as_str().ok_or_else(|| anyhow!("shape must be a string like `8x18x18`"))?;
+            let s = v.as_str().context("shape must be a string like `8x18x18`")?;
             if s == "scalar" {
                 return Ok(vec![]);
             }
             s.split('x')
-                .map(|d| d.trim().parse::<usize>().map_err(|_| anyhow!("bad shape `{s}`")))
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::msg(format!("bad shape `{s}`")))
+                })
                 .collect()
         };
         let inputs = a
             .get("inputs")
             .and_then(|v| v.as_list())
-            .ok_or_else(|| anyhow!("artifact `{name}` missing inputs"))?
+            .with_context(|| format!("artifact `{name}` missing inputs"))?
             .iter()
             .map(parse_shape)
             .collect::<Result<Vec<_>>>()?;
         let output = parse_shape(
-            a.get("output").ok_or_else(|| anyhow!("artifact `{name}` missing output"))?,
+            a.get("output").with_context(|| format!("artifact `{name}` missing output"))?,
         )?;
         out.push(ArtifactSpec { name, file, inputs, output });
     }
     Ok(out)
-}
-
-struct LoadedArtifact {
-    spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT runtime: one CPU client plus a registry of compiled
-/// executables keyed by artifact name.
-///
-/// Execution is serialized behind a mutex: the PJRT CPU client is not
-/// thread-safe through the `xla` crate's wrappers, and this box is
-/// single-core anyway. Worker threads of the execution engine contend on
-/// the lock only for the duration of one tile execution.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts: Mutex<HashMap<String, LoadedArtifact>>,
-    pub dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT runtime rooted at an artifacts directory.
-    pub fn cpu(dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifacts: Mutex::new(HashMap::new()),
-            dir: dir.as_ref().to_path_buf(),
-        })
-    }
-
-    /// Platform string (for logs).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile every artifact in the manifest. Returns the names.
-    pub fn load_manifest(&self) -> Result<Vec<String>> {
-        let manifest_path = self.dir.join("manifest.yaml");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let specs = parse_manifest(&text)?;
-        let mut names = Vec::with_capacity(specs.len());
-        for spec in specs {
-            names.push(spec.name.clone());
-            self.load(spec)?;
-        }
-        Ok(names)
-    }
-
-    /// Load and compile one artifact.
-    pub fn load(&self, spec: ArtifactSpec) -> Result<()> {
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact `{}`", spec.name))?;
-        self.artifacts
-            .lock()
-            .unwrap()
-            .insert(spec.name.clone(), LoadedArtifact { spec, exe });
-        Ok(())
-    }
-
-    /// Names of loaded artifacts.
-    pub fn names(&self) -> Vec<String> {
-        self.artifacts.lock().unwrap().keys().cloned().collect()
-    }
-
-    /// Spec of a loaded artifact.
-    pub fn spec(&self, name: &str) -> Option<ArtifactSpec> {
-        self.artifacts.lock().unwrap().get(name).map(|a| a.spec.clone())
-    }
-
-    /// Execute artifact `name` on f32 inputs (shapes must match the
-    /// manifest). Returns the flattened f32 output.
-    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        let guard = self.artifacts.lock().unwrap();
-        let art = guard
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact `{name}` not loaded"))?;
-        if inputs.len() != art.spec.inputs.len() {
-            bail!(
-                "artifact `{name}` expects {} inputs, got {}",
-                art.spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs.iter().zip(&art.spec.inputs) {
-            let expect: usize = shape.iter().product();
-            if data.len() != expect {
-                bail!(
-                    "artifact `{name}`: input length {} != shape {:?} ({} elements)",
-                    data.len(),
-                    shape,
-                    expect
-                );
-            }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&dims)
-                .with_context(|| format!("reshaping input to {shape:?}"))?;
-            literals.push(lit);
-        }
-        let result = art
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing `{name}`"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result buffer")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = lit.to_tuple1().context("unwrapping result tuple")?;
-        let values = out.to_vec::<f32>().context("reading f32 result")?;
-        let expect: usize = art.spec.output.iter().product();
-        if values.len() != expect {
-            bail!(
-                "artifact `{name}`: output length {} != manifest shape {:?}",
-                values.len(),
-                art.spec.output
-            );
-        }
-        Ok(values)
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Device service: the `xla` crate's PJRT handles are `Rc`-based and cannot
-// cross threads, so a dedicated device thread owns the [`Runtime`] and
-// serves execution requests over channels — exactly how a real PIM device
-// serializes commands through its controller queue. [`DeviceClient`] is
-// `Clone + Send` and is what the execution engine's workers hold.
-// ---------------------------------------------------------------------------
-
-enum DeviceRequest {
-    Execute {
-        name: String,
-        inputs: Vec<Vec<f32>>,
-        reply: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
-    },
-    Platform {
-        reply: mpsc::Sender<String>,
-    },
-    Names {
-        reply: mpsc::Sender<Vec<String>>,
-    },
-}
-
-use std::sync::mpsc;
-
-/// Cloneable, thread-safe handle to the device thread.
-#[derive(Clone)]
-pub struct DeviceClient {
-    tx: mpsc::Sender<DeviceRequest>,
-}
-
-impl DeviceClient {
-    /// Spawn the device thread: builds the PJRT runtime from `dir`, loads
-    /// the manifest, then serves requests until every client is dropped.
-    /// Returns the client and the loaded artifact names.
-    pub fn spawn(dir: impl AsRef<Path>) -> Result<(DeviceClient, Vec<String>)> {
-        let dir = dir.as_ref().to_path_buf();
-        let (tx, rx) = mpsc::channel::<DeviceRequest>();
-        let (init_tx, init_rx) = mpsc::channel::<std::result::Result<Vec<String>, String>>();
-        std::thread::Builder::new()
-            .name("pjrt-device".into())
-            .spawn(move || {
-                let runtime = match Runtime::cpu(&dir).and_then(|rt| {
-                    rt.load_manifest()?;
-                    Ok(rt)
-                }) {
-                    Ok(rt) => {
-                        let _ = init_tx.send(Ok(rt.names()));
-                        rt
-                    }
-                    Err(e) => {
-                        let _ = init_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        DeviceRequest::Execute { name, inputs, reply } => {
-                            let refs: Vec<&[f32]> =
-                                inputs.iter().map(Vec::as_slice).collect();
-                            let res = runtime
-                                .execute_f32(&name, &refs)
-                                .map_err(|e| format!("{e:#}"));
-                            let _ = reply.send(res);
-                        }
-                        DeviceRequest::Platform { reply } => {
-                            let _ = reply.send(runtime.platform());
-                        }
-                        DeviceRequest::Names { reply } => {
-                            let _ = reply.send(runtime.names());
-                        }
-                    }
-                }
-            })
-            .context("spawning device thread")?;
-        let names = init_rx
-            .recv()
-            .context("device thread init")?
-            .map_err(|e| anyhow!("device init failed: {e}"))?;
-        Ok((DeviceClient { tx }, names))
-    }
-
-    /// Execute an artifact (blocking request-response).
-    pub fn execute_f32(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(DeviceRequest::Execute { name: name.to_string(), inputs, reply })
-            .map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv()
-            .map_err(|_| anyhow!("device thread dropped reply"))?
-            .map_err(|e| anyhow!("{e}"))
-    }
-
-    pub fn platform(&self) -> Result<String> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(DeviceRequest::Platform { reply })
-            .map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))
-    }
-
-    pub fn names(&self) -> Result<Vec<String>> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(DeviceRequest::Names { reply })
-            .map_err(|_| anyhow!("device thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("device thread dropped reply"))
-    }
 }
 
 /// Default artifacts directory relative to the repo root.
@@ -321,10 +94,311 @@ pub fn default_artifacts_dir() -> PathBuf {
     Path::new(manifest_dir).join("artifacts")
 }
 
-/// True if the artifacts have been built (`make artifacts`).
-pub fn artifacts_available() -> bool {
-    default_artifacts_dir().join("manifest.yaml").exists()
+/// True when this build carries the real PJRT runtime.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
+
+/// True if the artifacts have been built (`make artifacts`) *and* this
+/// build can execute them.
+pub fn artifacts_available() -> bool {
+    pjrt_enabled() && default_artifacts_dir().join("manifest.yaml").exists()
+}
+
+#[cfg(feature = "pjrt")]
+mod device {
+    //! The real PJRT-backed device (requires the vendored `xla` crate).
+
+    use super::ArtifactSpec;
+    use crate::util::error::{Context, Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{mpsc, Mutex};
+
+    struct LoadedArtifact {
+        spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT runtime: one CPU client plus a registry of compiled
+    /// executables keyed by artifact name.
+    ///
+    /// Execution is serialized behind a mutex: the PJRT CPU client is not
+    /// thread-safe through the `xla` crate's wrappers, and this box is
+    /// single-core anyway. Worker threads of the execution engine contend
+    /// on the lock only for the duration of one tile execution.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifacts: Mutex<HashMap<String, LoadedArtifact>>,
+        pub dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT runtime rooted at an artifacts directory.
+        pub fn cpu(dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                artifacts: Mutex::new(HashMap::new()),
+                dir: dir.as_ref().to_path_buf(),
+            })
+        }
+
+        /// Platform string (for logs).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile every artifact in the manifest. Returns the
+        /// names.
+        pub fn load_manifest(&self) -> Result<Vec<String>> {
+            let manifest_path = self.dir.join("manifest.yaml");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?;
+            let specs = super::parse_manifest(&text)?;
+            let mut names = Vec::with_capacity(specs.len());
+            for spec in specs {
+                names.push(spec.name.clone());
+                self.load(spec)?;
+            }
+            Ok(names)
+        }
+
+        /// Load and compile one artifact.
+        pub fn load(&self, spec: ArtifactSpec) -> Result<()> {
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{}`", spec.name))?;
+            self.artifacts
+                .lock()
+                .unwrap()
+                .insert(spec.name.clone(), LoadedArtifact { spec, exe });
+            Ok(())
+        }
+
+        /// Names of loaded artifacts.
+        pub fn names(&self) -> Vec<String> {
+            self.artifacts.lock().unwrap().keys().cloned().collect()
+        }
+
+        /// Spec of a loaded artifact.
+        pub fn spec(&self, name: &str) -> Option<ArtifactSpec> {
+            self.artifacts.lock().unwrap().get(name).map(|a| a.spec.clone())
+        }
+
+        /// Execute artifact `name` on f32 inputs (shapes must match the
+        /// manifest). Returns the flattened f32 output.
+        pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            let guard = self.artifacts.lock().unwrap();
+            let art = guard
+                .get(name)
+                .with_context(|| format!("artifact `{name}` not loaded"))?;
+            if inputs.len() != art.spec.inputs.len() {
+                crate::bail!(
+                    "artifact `{name}` expects {} inputs, got {}",
+                    art.spec.inputs.len(),
+                    inputs.len()
+                );
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, shape) in inputs.iter().zip(&art.spec.inputs) {
+                let expect: usize = shape.iter().product();
+                if data.len() != expect {
+                    crate::bail!(
+                        "artifact `{name}`: input length {} != shape {:?} ({} elements)",
+                        data.len(),
+                        shape,
+                        expect
+                    );
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input to {shape:?}"))?;
+                literals.push(lit);
+            }
+            let result = art
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing `{name}`"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .context("fetching result buffer")?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = lit.to_tuple1().context("unwrapping result tuple")?;
+            let values = out.to_vec::<f32>().context("reading f32 result")?;
+            let expect: usize = art.spec.output.iter().product();
+            if values.len() != expect {
+                crate::bail!(
+                    "artifact `{name}`: output length {} != manifest shape {:?}",
+                    values.len(),
+                    art.spec.output
+                );
+            }
+            Ok(values)
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Device service: the `xla` crate's PJRT handles are `Rc`-based and
+    // cannot cross threads, so a dedicated device thread owns the
+    // [`Runtime`] and serves execution requests over channels — exactly how
+    // a real PIM device serializes commands through its controller queue.
+    // [`DeviceClient`] is `Clone + Send` and is what the execution engine's
+    // workers hold.
+    // -----------------------------------------------------------------------
+
+    enum DeviceRequest {
+        Execute {
+            name: String,
+            inputs: Vec<Vec<f32>>,
+            reply: mpsc::Sender<std::result::Result<Vec<f32>, String>>,
+        },
+        Platform {
+            reply: mpsc::Sender<String>,
+        },
+        Names {
+            reply: mpsc::Sender<Vec<String>>,
+        },
+    }
+
+    /// Cloneable, thread-safe handle to the device thread.
+    #[derive(Clone)]
+    pub struct DeviceClient {
+        tx: mpsc::Sender<DeviceRequest>,
+    }
+
+    impl DeviceClient {
+        /// Spawn the device thread: builds the PJRT runtime from `dir`,
+        /// loads the manifest, then serves requests until every client is
+        /// dropped. Returns the client and the loaded artifact names.
+        pub fn spawn(dir: impl AsRef<Path>) -> Result<(DeviceClient, Vec<String>)> {
+            let dir = dir.as_ref().to_path_buf();
+            let (tx, rx) = mpsc::channel::<DeviceRequest>();
+            let (init_tx, init_rx) =
+                mpsc::channel::<std::result::Result<Vec<String>, String>>();
+            std::thread::Builder::new()
+                .name("pjrt-device".into())
+                .spawn(move || {
+                    let runtime = match Runtime::cpu(&dir).and_then(|rt| {
+                        rt.load_manifest()?;
+                        Ok(rt)
+                    }) {
+                        Ok(rt) => {
+                            let _ = init_tx.send(Ok(rt.names()));
+                            rt
+                        }
+                        Err(e) => {
+                            let _ = init_tx.send(Err(format!("{e}")));
+                            return;
+                        }
+                    };
+                    while let Ok(req) = rx.recv() {
+                        match req {
+                            DeviceRequest::Execute { name, inputs, reply } => {
+                                let refs: Vec<&[f32]> =
+                                    inputs.iter().map(Vec::as_slice).collect();
+                                let res = runtime
+                                    .execute_f32(&name, &refs)
+                                    .map_err(|e| format!("{e}"));
+                                let _ = reply.send(res);
+                            }
+                            DeviceRequest::Platform { reply } => {
+                                let _ = reply.send(runtime.platform());
+                            }
+                            DeviceRequest::Names { reply } => {
+                                let _ = reply.send(runtime.names());
+                            }
+                        }
+                    }
+                })
+                .context("spawning device thread")?;
+            let names = init_rx
+                .recv()
+                .context("device thread init")?
+                .map_err(|e| Error::msg(format!("device init failed: {e}")))?;
+            Ok((DeviceClient { tx }, names))
+        }
+
+        /// Execute an artifact (blocking request-response).
+        pub fn execute_f32(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(DeviceRequest::Execute { name: name.to_string(), inputs, reply })
+                .map_err(|_| Error::msg("device thread gone"))?;
+            rx.recv()
+                .map_err(|_| Error::msg("device thread dropped reply"))?
+                .map_err(Error::msg)
+        }
+
+        pub fn platform(&self) -> Result<String> {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(DeviceRequest::Platform { reply })
+                .map_err(|_| Error::msg("device thread gone"))?;
+            rx.recv().map_err(|_| Error::msg("device thread dropped reply"))
+        }
+
+        pub fn names(&self) -> Result<Vec<String>> {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(DeviceRequest::Names { reply })
+                .map_err(|_| Error::msg("device thread gone"))?;
+            rx.recv().map_err(|_| Error::msg("device thread dropped reply"))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod device {
+    //! Std-only stub device: compiles everywhere, executes nothing.
+    //!
+    //! Keeps the `exec` engine and the runtime integration tests compiling
+    //! without the `xla` crate; every entry point reports a clear error.
+
+    use crate::util::error::{Error, Result};
+    use std::path::Path;
+
+    const NO_PJRT: &str = "built without the `pjrt` feature: the XLA/PJRT runtime is \
+         unavailable (rebuild with `--features pjrt` and a vendored `xla` crate)";
+
+    /// Stub handle mirroring the real `DeviceClient` API surface.
+    #[derive(Clone)]
+    pub struct DeviceClient {
+        _priv: (),
+    }
+
+    impl DeviceClient {
+        /// Always fails: there is no runtime in this build.
+        pub fn spawn(_dir: impl AsRef<Path>) -> Result<(DeviceClient, Vec<String>)> {
+            Err(Error::msg(NO_PJRT))
+        }
+
+        pub fn execute_f32(&self, _name: &str, _inputs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+            Err(Error::msg(NO_PJRT))
+        }
+
+        pub fn platform(&self) -> Result<String> {
+            Err(Error::msg(NO_PJRT))
+        }
+
+        pub fn names(&self) -> Result<Vec<String>> {
+            Err(Error::msg(NO_PJRT))
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use device::Runtime;
+
+pub use device::DeviceClient;
 
 #[cfg(test)]
 mod tests {
@@ -353,6 +427,18 @@ artifacts:
     fn manifest_missing_fields_rejected() {
         assert!(parse_manifest("artifacts:\n  - name: x\n").is_err());
         assert!(parse_manifest("nope: 1\n").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_device_reports_missing_feature() {
+        assert!(!pjrt_enabled());
+        assert!(!artifacts_available());
+        let err = match DeviceClient::spawn(default_artifacts_dir()) {
+            Err(e) => e,
+            Ok(_) => panic!("stub spawn must fail"),
+        };
+        assert!(err.to_string().contains("pjrt"), "got: {err}");
     }
 
     // PJRT-dependent tests live in rust/tests/runtime_exec.rs and skip

@@ -3,8 +3,8 @@
 //! §IV-K "Search Algorithm Optimization").
 //!
 //! The mapper samples valid mappings from the map space and keeps the best
-//! under a chosen metric, terminating after a fixed number of valid
-//! mappings (Timeloop-style) or a wall-clock deadline (for the paper's
+//! under a chosen metric, terminating after a fixed number of candidate
+//! draws (Timeloop-style) or a wall-clock deadline (for the paper's
 //! equal-runtime OverlaPIM comparison, Fig. 11). Whole-network search runs
 //! layer by layer: a linear `N × k` sweep instead of the intractable `k^N`
 //! joint space (§IV-J), with three traversal strategies:
@@ -16,18 +16,35 @@
 //! * **Middle** — start at a heuristically-chosen bottleneck layer
 //!   (largest `P·Q·K` or `P·Q·C·K`, §IV-K), then sweep backward to the
 //!   first layer and forward to the last.
+//!
+//! # Parallel search
+//!
+//! Candidate evaluation inside one layer is embarrassingly parallel: each
+//! candidate is a pure function of `(base seed, candidate index)` thanks to
+//! [`MapSpace::sample_indexed`]'s SplitMix64 stream splitting, and its
+//! score against the fixed neighbor is a pure function of the candidate.
+//! [`ParallelMapper`] therefore fans the index range across `std::thread`
+//! workers feeding off a work-stealing chunk queue (a shared atomic
+//! cursor); each worker tracks its local `(score, index)`-minimal candidate
+//! and the winners merge by the same order after the join — **no locks on
+//! the hot path, and bit-identical results at any thread count**. Repeated
+//! pair analyses are deduplicated by the [`OverlapCache`] memoizer keyed on
+//! mapping fingerprints (§IV-J: the fixed neighbor recurs across incumbent
+//! re-scores, refinement passes and the final evaluation pass).
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
 use crate::overlap::{
-    overlapped_latency, AnalyticalOverlap, ExhaustiveOverlap, LayerPair, OverlapAnalysis,
-    OverlapConfig, OverlapResult,
+    overlapped_latency, pair_cache_key, AnalyticalOverlap, ExhaustiveOverlap, LayerPair,
+    OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult, ReadyTimes,
 };
 use crate::perf::{LayerStats, PerfModel};
 use crate::transform::{transform_schedule, TransformConfig, TransformResult};
 use crate::util::rng::SplitMix64;
 use crate::workload::{Layer, Network};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// What the per-layer search optimizes (drives which of the paper's
@@ -114,6 +131,16 @@ pub enum AnalysisEngine {
     Exhaustive,
 }
 
+impl AnalysisEngine {
+    /// Stable tag used in overlap-cache keys.
+    fn tag(self) -> u64 {
+        match self {
+            AnalysisEngine::Analytical => 0,
+            AnalysisEngine::Exhaustive => 1,
+        }
+    }
+}
+
 /// Heuristic for choosing the "Middle" start layer (§IV-K).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MiddleHeuristic {
@@ -145,10 +172,14 @@ impl SearchStrategy {
 /// Mapper configuration.
 #[derive(Debug, Clone)]
 pub struct MapperConfig {
-    /// Valid mappings evaluated per layer before terminating (the paper's
-    /// "fixed number of valid mappings" criterion).
+    /// Candidate draws per layer before terminating (the paper's "fixed
+    /// number of valid mappings" criterion; a draw that fails validation
+    /// within the sampler's attempt budget counts toward the draw budget
+    /// but not toward `mappings_evaluated`).
     pub budget: usize,
     /// Optional wall-clock deadline per layer (equal-runtime comparisons).
+    /// Note: a deadline makes results timing-dependent, so the bit-identical
+    /// guarantee across thread counts only holds without one.
     pub deadline: Option<Duration>,
     /// PRNG seed — fixed seed ⇒ reproducible search.
     pub seed: u64,
@@ -165,6 +196,12 @@ pub struct MapperConfig {
     /// Coordinate-descent refinement sweeps after the directional pass
     /// (each layer re-searched with both neighbors fixed).
     pub refine_passes: usize,
+    /// Worker threads for per-layer candidate evaluation (1 = run inline).
+    /// Results are bit-identical for any value when no deadline is set.
+    pub threads: usize,
+    /// Enable the overlap-analysis memoization cache (identical results
+    /// either way; on saves recomputing recurring pair analyses).
+    pub cache: bool,
 }
 
 impl Default for MapperConfig {
@@ -179,6 +216,8 @@ impl Default for MapperConfig {
             transform: TransformConfig::default(),
             engine: AnalysisEngine::Analytical,
             refine_passes: 1,
+            threads: 1,
+            cache: true,
         }
     }
 }
@@ -212,19 +251,189 @@ pub struct EvaluatedMapping {
     pub score: u64,
 }
 
+// ---------------------------------------------------------------------------
+// Parallel candidate evaluation.
+// ---------------------------------------------------------------------------
+
+/// A worker-local best candidate: `(score, candidate index, mapping)`.
+/// The global winner is the `(score, index)`-lexicographic minimum, which
+/// is independent of which worker evaluated which index.
+type BestCandidate = Option<(u64, u64, EvaluatedMapping)>;
+
+/// Deterministic multi-threaded candidate evaluator.
+///
+/// Work distribution is a *work-stealing chunk queue*: a shared atomic
+/// cursor over the candidate index range that every worker bumps by
+/// [`ParallelMapper::chunk`] indices at a time, so fast workers naturally
+/// steal the share slow workers never claimed (dynamic self-scheduling).
+/// Each index is evaluated by a pure function, so the partitioning cannot
+/// change any result — only the wall-clock.
+pub struct ParallelMapper {
+    /// Worker count (1 = evaluate inline on the calling thread).
+    pub threads: usize,
+    /// Candidate indices claimed per queue grab. Small enough to balance
+    /// uneven per-candidate costs, large enough to keep the shared cursor
+    /// off the hot path.
+    pub chunk: u64,
+}
+
+impl ParallelMapper {
+    pub fn new(threads: usize) -> ParallelMapper {
+        ParallelMapper { threads: threads.max(1), chunk: 8 }
+    }
+
+    /// Evaluate candidates `0..budget` through `eval`, returning the
+    /// `(score, index)`-minimal result and how many candidates evaluated
+    /// to a valid mapping. `eval` must be a pure function of the index.
+    pub fn run<F>(
+        &self,
+        budget: u64,
+        deadline: Option<Instant>,
+        eval: &F,
+    ) -> (Option<EvaluatedMapping>, usize)
+    where
+        F: Fn(u64) -> Option<EvaluatedMapping> + Sync,
+    {
+        let queue = AtomicU64::new(0);
+        let chunk = self.chunk.max(1);
+        if self.threads == 1 {
+            let (best, evaluated) = search_worker(&queue, budget, chunk, deadline, eval);
+            return (best.map(|(_, _, em)| em), evaluated);
+        }
+        let results: Vec<(BestCandidate, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.threads)
+                .map(|_| s.spawn(|| search_worker(&queue, budget, chunk, deadline, eval)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("search worker panicked"))
+                .collect()
+        });
+        let mut evaluated = 0usize;
+        let mut best: BestCandidate = None;
+        for (cand, n) in results {
+            evaluated += n;
+            if let Some(c) = cand {
+                let better = match &best {
+                    None => true,
+                    Some(cur) => (c.0, c.1) < (cur.0, cur.1),
+                };
+                if better {
+                    best = Some(c);
+                }
+            }
+        }
+        (best.map(|(_, _, em)| em), evaluated)
+    }
+}
+
+/// One worker: drain chunks off the shared cursor until the range (or the
+/// deadline) is exhausted, tracking the local `(score, index)` minimum.
+fn search_worker<F>(
+    queue: &AtomicU64,
+    budget: u64,
+    chunk: u64,
+    deadline: Option<Instant>,
+    eval: &F,
+) -> (BestCandidate, usize)
+where
+    F: Fn(u64) -> Option<EvaluatedMapping>,
+{
+    let mut best: BestCandidate = None;
+    let mut evaluated = 0usize;
+    'queue: loop {
+        let start = queue.fetch_add(chunk, Ordering::Relaxed);
+        if start >= budget {
+            break;
+        }
+        let end = start.saturating_add(chunk).min(budget);
+        for i in start..end {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    break 'queue;
+                }
+            }
+            if let Some(em) = eval(i) {
+                evaluated += 1;
+                let better = match &best {
+                    None => true,
+                    Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
+                };
+                if better {
+                    best = Some((em.score, i, em));
+                }
+            }
+        }
+    }
+    (best, evaluated)
+}
+
 /// Per-layer mapping searcher.
 pub struct Mapper<'a> {
     pub arch: &'a Arch,
     pub config: MapperConfig,
     rng: SplitMix64,
+    cache: Option<Arc<OverlapCache>>,
     /// Valid mappings evaluated by the last `search_layer` call.
     pub last_evaluated: usize,
 }
 
 impl<'a> Mapper<'a> {
     pub fn new(arch: &'a Arch, config: MapperConfig) -> Mapper<'a> {
+        let cache = config.cache.then(|| Arc::new(OverlapCache::new()));
+        Self::with_cache(arch, config, cache)
+    }
+
+    /// Construct with an externally-owned cache (shared across metric runs
+    /// by [`NetworkSearch`]). `None` disables memoization regardless of
+    /// `config.cache`.
+    pub fn with_cache(
+        arch: &'a Arch,
+        config: MapperConfig,
+        cache: Option<Arc<OverlapCache>>,
+    ) -> Mapper<'a> {
         let rng = SplitMix64::new(config.seed);
-        Mapper { arch, config, rng, last_evaluated: 0 }
+        Mapper { arch, config, rng, cache, last_evaluated: 0 }
+    }
+
+    /// `(hits, misses)` of the overlap memoizer (zeros when disabled).
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.as_ref().map_or((0, 0), |c| (c.hits(), c.misses()))
+    }
+
+    /// Ready times of a pair under the configured engine, memoized when the
+    /// cache is enabled. The cached value is the exact analysis output, so
+    /// cache on/off cannot change any search result.
+    ///
+    /// `store` distinguishes the two lookup populations: pairs between
+    /// *chosen* mappings (incumbent re-scores, the final evaluation pass)
+    /// recur and are worth inserting; a candidate draw's pair is analyzed
+    /// exactly once, so it only peeks — inserting millions of write-once
+    /// entries would evict the few that matter.
+    fn ready_times(&self, pair: &LayerPair<'_>, store: bool) -> Arc<ReadyTimes> {
+        let compute = || match self.config.engine {
+            AnalysisEngine::Analytical => {
+                AnalyticalOverlap::new(self.config.overlap.clone()).ready_times(pair)
+            }
+            AnalysisEngine::Exhaustive => {
+                ExhaustiveOverlap::new(self.config.overlap.clone()).ready_times(pair)
+            }
+        };
+        match &self.cache {
+            Some(c) => {
+                let key = pair_cache_key(
+                    pair,
+                    self.config.engine.tag(),
+                    self.config.overlap.max_probe_steps,
+                );
+                if store {
+                    c.get_or_compute(key, compute)
+                } else {
+                    c.peek_or_compute(key, compute)
+                }
+            }
+            None => Arc::new(compute()),
+        }
     }
 
     /// Score one candidate mapping under `metric` against the fixed
@@ -239,6 +448,7 @@ impl<'a> Mapper<'a> {
         mapping: &Mapping,
         stats: &LayerStats,
         ctxs: &[PairContext<'_>],
+        store: bool,
     ) -> (u64, Option<OverlapResult>, Option<TransformResult>) {
         if metric == Metric::Sequential || ctxs.is_empty() {
             return (stats.latency_cycles, None, None);
@@ -258,14 +468,7 @@ impl<'a> Mapper<'a> {
                     (ctx.layer, ctx.mapping, ctx.stats),
                 ),
             };
-            let ready = match self.config.engine {
-                AnalysisEngine::Analytical => {
-                    AnalyticalOverlap::new(self.config.overlap.clone()).ready_times(&pair)
-                }
-                AnalysisEngine::Exhaustive => {
-                    ExhaustiveOverlap::new(self.config.overlap.clone()).ready_times(&pair)
-                }
-            };
+            let ready = self.ready_times(&pair, store);
             let ov = overlapped_latency(pair.producer_stats, pair.consumer_stats, &ready);
             let tr = (metric == Metric::Transform)
                 .then(|| transform_schedule(&pair, &self.config.transform));
@@ -298,8 +501,13 @@ impl<'a> Mapper<'a> {
     }
 
     /// Search the best mapping for `layer` under `metric`, optionally
-    /// against a fixed neighbor. Returns `None` only if no valid mapping
+    /// against fixed neighbors. Returns `None` only if no valid mapping
     /// was found within the budget.
+    ///
+    /// Candidate `i` is drawn from the `i`-th child stream of a per-call
+    /// base seed and scored by a pure function, so the search result is
+    /// identical whether the index range is walked by one thread or
+    /// sharded across many ([`ParallelMapper`]).
     pub fn search_layer_with(
         &mut self,
         metric: Metric,
@@ -313,28 +521,38 @@ impl<'a> Mapper<'a> {
             self.config.mapspace.clone(),
         );
         let pm = PerfModel::new(self.arch);
-        let start = Instant::now();
-        let mut best: Option<EvaluatedMapping> = None;
-        let mut evaluated = 0;
-        let mut rng = self.rng.fork();
-        while evaluated < self.config.budget {
-            if let Some(deadline) = self.config.deadline {
-                if start.elapsed() >= deadline {
-                    break;
-                }
-            }
-            let Some(mapping) = ms.sample(&mut rng) else {
-                break; // map space effectively exhausted / infeasible
-            };
-            let stats = pm.evaluate(layer, &mapping);
-            let (score, overlap, transform) =
-                self.score(metric, layer, &mapping, &stats, ctxs);
-            evaluated += 1;
-            let better = best.as_ref().map_or(true, |b| score < b.score);
-            if better {
-                best = Some(EvaluatedMapping { mapping, stats, overlap, transform, score });
-            }
+        // Advance the mapper's sequential stream exactly once per call so
+        // repeated searches of the same layer (refinement passes) explore
+        // fresh candidates, deterministically.
+        let base_seed = self.rng.next_u64();
+        let deadline = self.config.deadline.map(|d| Instant::now() + d);
+        let budget = self.config.budget as u64;
+        let threads = self.config.threads;
+
+        // Infeasibility preflight: if a fixed prefix of the candidate
+        // stream fails to produce even one valid mapping, declare the map
+        // space effectively exhausted instead of burning the whole draw
+        // budget (each failed draw already retries `max_attempts` times
+        // inside the sampler). The probe is a pure function of the base
+        // seed, so the early exit is identical at every thread count.
+        const PREFLIGHT_DRAWS: u64 = 32;
+        if budget >= PREFLIGHT_DRAWS
+            && (0..PREFLIGHT_DRAWS).all(|i| ms.sample_indexed(base_seed, i).is_none())
+        {
+            self.last_evaluated = 0;
+            return None;
         }
+
+        let this: &Mapper<'a> = &*self;
+        let eval_one = |i: u64| -> Option<EvaluatedMapping> {
+            let mapping = ms.sample_indexed(base_seed, i)?;
+            let stats = pm.evaluate(layer, &mapping);
+            // Candidate pairs are one-shot: peek the cache, never insert.
+            let (score, overlap, transform) =
+                this.score(metric, layer, &mapping, &stats, ctxs, false);
+            Some(EvaluatedMapping { mapping, stats, overlap, transform, score })
+        };
+        let (best, evaluated) = ParallelMapper::new(threads).run(budget, deadline, &eval_one);
         self.last_evaluated = evaluated;
         best
     }
@@ -396,6 +614,10 @@ pub struct NetworkPlan {
     pub wallclock: Duration,
     /// Valid mappings evaluated in total.
     pub mappings_evaluated: usize,
+    /// Overlap-memoizer hits during this run (0 when the cache is off).
+    pub cache_hits: u64,
+    /// Overlap-memoizer misses during this run (0 when the cache is off).
+    pub cache_misses: u64,
 }
 
 impl NetworkPlan {
@@ -412,11 +634,15 @@ pub struct NetworkSearch<'a> {
     pub arch: &'a Arch,
     pub config: MapperConfig,
     pub strategy: SearchStrategy,
+    /// Overlap memoizer shared by every metric run of this searcher (the
+    /// fixed-neighbor pairs recur across the baseline matrix).
+    cache: Option<Arc<OverlapCache>>,
 }
 
 impl<'a> NetworkSearch<'a> {
     pub fn new(arch: &'a Arch, config: MapperConfig, strategy: SearchStrategy) -> Self {
-        Self { arch, config, strategy }
+        let cache = config.cache.then(|| Arc::new(OverlapCache::new()));
+        Self { arch, config, strategy, cache }
     }
 
     /// Pick the Middle start index (position in the chain) per heuristic.
@@ -441,9 +667,14 @@ impl<'a> NetworkSearch<'a> {
     /// set for that metric with all three totals evaluated on it.
     pub fn run(&self, net: &Network, metric: Metric) -> NetworkPlan {
         let started = Instant::now();
+        let (hits0, misses0) = self
+            .cache
+            .as_ref()
+            .map_or((0, 0), |c| (c.hits(), c.misses()));
         let chain = net.chain();
         assert!(!chain.is_empty(), "network has no chain layers");
-        let mut mapper = Mapper::new(self.arch, self.config.clone());
+        let mut mapper =
+            Mapper::with_cache(self.arch, self.config.clone(), self.cache.clone());
         let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; chain.len()];
 
         // Determine the sweep order: a list of (position, role of the
@@ -532,12 +763,15 @@ impl<'a> NetworkSearch<'a> {
                 // Score the incumbent under the same two-sided objective,
                 // then accept the re-search winner only if strictly better.
                 let incumbent = plans[pos].as_ref().unwrap();
+                // Incumbent pairs are between chosen mappings and recur
+                // across passes and the final evaluation: worth storing.
                 let (inc_score, _, _) = mapper.score(
                     metric,
                     layer,
                     &incumbent.mapping,
                     &incumbent.stats,
                     &ctxs,
+                    true,
                 );
                 let challenger = mapper.search_layer_with(metric, layer, &ctxs);
                 mappings_evaluated += mapper.last_evaluated;
@@ -568,14 +802,7 @@ impl<'a> NetworkSearch<'a> {
                     (prev_layer, &prev.mapping, &prev.stats),
                     (layer, &em.mapping, &em.stats),
                 );
-                let ready = match self.config.engine {
-                    AnalysisEngine::Analytical => {
-                        AnalyticalOverlap::new(self.config.overlap.clone()).ready_times(&pair)
-                    }
-                    AnalysisEngine::Exhaustive => {
-                        ExhaustiveOverlap::new(self.config.overlap.clone()).ready_times(&pair)
-                    }
-                };
+                let ready = mapper.ready_times(&pair, true);
                 let ov = overlapped_latency(&prev.stats, &em.stats, &ready);
                 let tr = transform_schedule(&pair, &self.config.transform);
                 (Some(ov), Some(tr))
@@ -590,6 +817,10 @@ impl<'a> NetworkSearch<'a> {
             });
         }
 
+        let (hits1, misses1) = self
+            .cache
+            .as_ref()
+            .map_or((0, 0), |c| (c.hits(), c.misses()));
         let mut plan = NetworkPlan {
             network: net.name.clone(),
             strategy: self.strategy,
@@ -600,6 +831,8 @@ impl<'a> NetworkSearch<'a> {
             total_transformed: 0,
             wallclock: started.elapsed(),
             mappings_evaluated,
+            cache_hits: hits1 - hits0,
+            cache_misses: misses1 - misses0,
         };
         plan.compute_totals();
         plan
@@ -655,6 +888,8 @@ mod tests {
 
     #[test]
     fn bigger_budget_never_worse() {
+        // With indexed candidate streams the candidates of budget 5 are a
+        // strict subset of budget 80's, so this holds exactly.
         let arch = Arch::dram_pim_small();
         let layer = Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1);
         let mut small = Mapper::new(&arch, tiny_config(5, 42));
@@ -674,6 +909,34 @@ mod tests {
             .run(&net, Metric::Transform);
         assert_eq!(s1.total_transformed, s2.total_transformed);
         assert_eq!(s1.total_sequential, s2.total_sequential);
+    }
+
+    #[test]
+    fn single_layer_search_identical_across_thread_counts() {
+        let arch = Arch::dram_pim_small();
+        let layer = Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1);
+        let mut reference: Option<EvaluatedMapping> = None;
+        let mut reference_evaluated = 0usize;
+        for threads in [1usize, 2, 8] {
+            let mut cfg = tiny_config(40, 21);
+            cfg.threads = threads;
+            let mut mapper = Mapper::new(&arch, cfg);
+            let best = mapper.search_layer(&layer, &[]).unwrap();
+            match &reference {
+                None => {
+                    reference = Some(best);
+                    reference_evaluated = mapper.last_evaluated;
+                }
+                Some(r) => {
+                    assert_eq!(r.score, best.score, "threads={threads}");
+                    assert_eq!(r.mapping, best.mapping, "threads={threads}");
+                    assert_eq!(
+                        reference_evaluated, mapper.last_evaluated,
+                        "threads={threads}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -743,6 +1006,25 @@ mod tests {
         assert!(best.is_some());
         assert!(t0.elapsed() < Duration::from_secs(5));
         assert!(mapper.last_evaluated < 1_000_000);
+    }
+
+    #[test]
+    fn cache_counts_hits_on_recurring_pairs() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let mut cfg = tiny_config(15, 7);
+        cfg.refine_passes = 1;
+        let search = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward);
+        let first = search.run(&net, Metric::Overlap);
+        // Chosen-pair analyses (incumbent re-scores, final pass) insert
+        // into the cache...
+        assert!(first.cache_misses > 0, "run must populate the cache");
+        // ...and a deterministic replay against the warm cache must hit
+        // them: the second run's final-pass pairs are exactly the first
+        // run's, which were stored with `store = true`.
+        let again = search.run(&net, Metric::Overlap);
+        assert_eq!(first.total_overlapped, again.total_overlapped);
+        assert!(again.cache_hits > 0, "warm replay must hit stored pairs");
     }
 
     #[test]

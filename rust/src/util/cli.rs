@@ -78,6 +78,26 @@ impl Args {
         }
     }
 
+    /// Parse an option as `usize`.
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get_u64(key, default as u64) as usize
+    }
+
+    /// Parse an on/off switch (`--cache on`, `--cache=off`). A bare
+    /// `--cache` (flag form, no value) means on; absent keys take the
+    /// default; unrecognized values panic with a readable message.
+    pub fn get_switch(&self, key: &str, default: bool) -> bool {
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        match self.get(key) {
+            None => default,
+            Some("on" | "true" | "1" | "yes") => true,
+            Some("off" | "false" | "0" | "no") => false,
+            Some(v) => panic!("--{key} expects on|off, got `{v}`"),
+        }
+    }
+
     /// Boolean flag presence (`--verbose`). A valued option also counts
     /// when its value is truthy (`--verbose=true`).
     pub fn has_flag(&self, key: &str) -> bool {
@@ -122,5 +142,25 @@ mod tests {
     fn bad_integer_panics() {
         let a = Args::parse(["x", "--n", "abc"]);
         a.get_u64("n", 0);
+    }
+
+    #[test]
+    fn switch_parsing() {
+        let a = Args::parse(["x", "--cache", "off", "--fast=on"]);
+        assert!(!a.get_switch("cache", true));
+        assert!(a.get_switch("fast", false));
+        assert!(a.get_switch("absent", true));
+        assert!(!a.get_switch("absent2", false));
+        assert_eq!(a.get_usize("absent3", 4), 4);
+        // Bare flag form (no value) means "on" even against a false default.
+        let b = Args::parse(["x", "--cache"]);
+        assert!(b.get_switch("cache", false));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects on|off")]
+    fn bad_switch_panics() {
+        let a = Args::parse(["x", "--cache", "maybe"]);
+        a.get_switch("cache", true);
     }
 }

@@ -6,6 +6,7 @@
 //! framework needs.
 
 pub mod cli;
+pub mod error;
 pub mod factor;
 pub mod prop;
 pub mod rng;
@@ -16,6 +17,40 @@ pub mod yaml;
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0, "ceil_div by zero");
     a.div_ceil(b)
+}
+
+/// Streaming FNV-1a 64-bit hasher over `u64` words. Stable across runs and
+/// platforms (unlike `std::hash::DefaultHasher`), which is what mapping
+/// fingerprints and the overlap-analysis memoization cache need: the same
+/// mapping must hash to the same key in every worker thread and process.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv64 {
+        Fnv64(Self::OFFSET)
+    }
+
+    /// Absorb one 64-bit word (little-endian byte order).
+    pub fn write(&mut self, v: u64) -> &mut Fnv64 {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ u64::from(b)).wrapping_mul(Self::PRIME);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
 }
 
 /// Round `a` up to the next multiple of `b`.
@@ -41,5 +76,19 @@ mod tests {
         assert_eq!(round_up(10, 4), 12);
         assert_eq!(round_up(8, 4), 8);
         assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write(1).write(2).write(3);
+        let mut b = Fnv64::new();
+        b.write(1).write(2).write(3);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write(3).write(2).write(1);
+        assert_ne!(a.finish(), c.finish());
+        // Known-answer guard: hashing nothing yields the FNV offset basis.
+        assert_eq!(Fnv64::new().finish(), 0xcbf2_9ce4_8422_2325);
     }
 }

@@ -193,6 +193,34 @@ impl Layer {
         self.p * self.q * self.c * self.k
     }
 
+    /// Stable 64-bit fingerprint of the layer's *shape* (kind, bounds,
+    /// stride, padding, pooling — the name is deliberately excluded: two
+    /// identically-shaped layers produce identical overlap analyses, so
+    /// they may share memoization-cache entries).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write(match self.kind {
+            LayerKind::Conv => 1,
+            LayerKind::Fc => 2,
+            LayerKind::MatMul => 3,
+        });
+        for v in [
+            self.n,
+            self.k,
+            self.c,
+            self.p,
+            self.q,
+            self.r,
+            self.s,
+            self.stride,
+            self.pad,
+            self.pool_after,
+        ] {
+            h.write(v);
+        }
+        h.finish()
+    }
+
     /// Basic shape sanity (all bounds ≥ 1, stride ≥ 1).
     pub fn validate(&self) -> Result<(), String> {
         for (nm, v) in [
@@ -314,6 +342,20 @@ mod tests {
         );
         assert_eq!(net.chain(), vec![0, 2]);
         net.validate().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_tracks_shape_not_name() {
+        let a = Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1);
+        let renamed = Layer::conv("b", 1, 8, 8, 8, 8, 3, 3, 1, 1);
+        assert_eq!(a.fingerprint(), renamed.fingerprint());
+        let wider = Layer::conv("a", 1, 16, 8, 8, 8, 3, 3, 1, 1);
+        assert_ne!(a.fingerprint(), wider.fingerprint());
+        let pooled = a.clone().with_pool(2);
+        assert_ne!(a.fingerprint(), pooled.fingerprint());
+        let fc = Layer::fc("a", 1, 8, 8);
+        let mm = Layer::matmul("a", 8, 8, 8);
+        assert_ne!(fc.fingerprint(), mm.fingerprint());
     }
 
     #[test]
