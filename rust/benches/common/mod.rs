@@ -3,10 +3,11 @@
 //!
 //! Environment knobs (all optional):
 //!
-//! * `FOPIM_BUDGET`   — valid mappings per layer (default per bench)
-//! * `FOPIM_SEED`     — search seed (default 7)
-//! * `FOPIM_REFINE`   — refinement passes (default 1)
-//! * `FOPIM_CSV`      — also print CSV blocks when set
+//! * `FOPIM_BUDGET`    — valid mappings per layer (default per bench)
+//! * `FOPIM_SEED`      — search seed (default 7)
+//! * `FOPIM_REFINE`    — refinement passes (default 1)
+//! * `FOPIM_MM_BUDGET` — fig14's pipelined multi-metric matrix budget
+//! * `FOPIM_CSV`       — also print CSV blocks when set
 
 use fastoverlapim::prelude::*;
 use fastoverlapim::report::Table;

@@ -36,8 +36,13 @@ fn run(
     // comparison fair.
     cfg.overlap = fastoverlapim::overlap::OverlapConfig { max_probe_steps: 256 };
     let search = NetworkSearch::new(arch, cfg, SearchStrategy::Forward);
-    let seq = search.run(net, Metric::Sequential);
-    let tr = search.run(net, Metric::Transform);
+    // Deadline mode makes `run_metrics` fall back to serial full-network
+    // passes — the only sound interpretation of a per-layer wall-clock
+    // budget, where concurrent jobs would contend for the metered cores —
+    // so this is exactly the two-run reference flow.
+    let mut plans = search.run_metrics(net, &[Metric::Sequential, Metric::Transform]).into_iter();
+    let seq = plans.next().expect("sequential plan");
+    let tr = plans.next().expect("transform plan");
     // Report the overlap-aware phase's search breadth: the Sequential
     // phase never runs pair analysis, so both engines explore equally
     // there; the contrast the paper measures is in the pair-aware search.

@@ -5,7 +5,10 @@
 //!
 //! Also regenerates the §IV-F generation-runtime comparison (recursive
 //! reference generator vs the analytical one; the paper quotes ~600s vs
-//! <60s inside Timeloop).
+//! <60s inside Timeloop), the parallel whole-network search throughput
+//! sweep, and the pipelined multi-metric baseline-matrix comparison
+//! (serial three-pass vs concurrent metric jobs sharing candidate
+//! enumeration, cold and warm memoizer) on the VGG-class zoo workload.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -171,6 +174,11 @@ fn main() {
             seed: common::seed(),
             refine_passes: 0,
             threads: workers,
+            // Measure ParallelMapper scaling in isolation: with lookahead
+            // on, even the 1-thread row would overlap next-layer
+            // enumeration on a helper thread and deflate the baseline.
+            pipeline: false,
+            lookahead: false,
             ..Default::default()
         };
         let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
@@ -198,6 +206,73 @@ fn main() {
     common::maybe_csv(&t);
     println!(
         "parallel search speedup at max threads: {last_speedup:.1}x with bit-identical plans\n"
+    );
+
+    // Pipelined multi-metric baseline matrix on the VGG-class workload:
+    // the three metric sweeps (Sequential / Overlap / Transform) as
+    // concurrent jobs sharing one candidate enumeration per (seed, layer)
+    // call, vs the serial three-pass reference. The second pipelined run
+    // replays against the warm analysis memoizer (ready times + transform
+    // job queries), the configuration the ROADMAP speedup target meters.
+    let mm_budget = common::env_u64("FOPIM_MM_BUDGET", 12) as usize;
+    let vgg = fastoverlapim::workload::zoo::vgg16();
+    let base_cfg = fastoverlapim::search::MapperConfig {
+        budget: mm_budget,
+        seed: common::seed(),
+        refine_passes: 0,
+        threads: max_threads.max(1),
+        ..Default::default()
+    };
+    let mut serial_cfg = base_cfg.clone();
+    serial_cfg.pipeline = false;
+    serial_cfg.lookahead = false;
+    let serial_search = NetworkSearch::new(&arch, serial_cfg, SearchStrategy::Forward);
+    let pipe_search = NetworkSearch::new(&arch, base_cfg, SearchStrategy::Forward);
+    let run_matrix = |search: &NetworkSearch| {
+        let t0 = std::time::Instant::now();
+        let plans = search.run_all_metrics(&vgg);
+        (t0.elapsed().as_secs_f64().max(1e-9), plans)
+    };
+    let (serial_secs, (s_seq, s_ov, s_tr)) = run_matrix(&serial_search);
+    let (cold_secs, (c_seq, c_ov, c_tr)) = run_matrix(&pipe_search);
+    let (warm_secs, (w_seq, w_ov, w_tr)) = run_matrix(&pipe_search);
+    // The pipelined engine's contract: bit-identical totals, cold or warm.
+    for (s, p) in [(&s_seq, &c_seq), (&s_ov, &c_ov), (&s_tr, &c_tr)] {
+        assert_eq!(s.total_sequential, p.total_sequential, "pipelined != serial");
+        assert_eq!(s.total_overlapped, p.total_overlapped, "pipelined != serial");
+        assert_eq!(s.total_transformed, p.total_transformed, "pipelined != serial");
+    }
+    for (s, p) in [(&s_seq, &w_seq), (&s_ov, &w_ov), (&s_tr, &w_tr)] {
+        assert_eq!(s.total_sequential, p.total_sequential, "warm replay != serial");
+        assert_eq!(s.total_overlapped, p.total_overlapped, "warm replay != serial");
+        assert_eq!(s.total_transformed, p.total_transformed, "warm replay != serial");
+    }
+    let mut t = Table::new(
+        &format!(
+            "pipelined multi-metric matrix — {} @ budget {mm_budget}/layer",
+            vgg.name
+        ),
+        &["mode", "wallclock", "Best Transform", "speedup vs serial"],
+    );
+    for (mode, secs, tr_total) in [
+        ("serial three-pass", serial_secs, s_tr.total_transformed),
+        ("pipelined (cold)", cold_secs, c_tr.total_transformed),
+        ("pipelined (warm memoizer)", warm_secs, w_tr.total_transformed),
+    ] {
+        t.row(vec![
+            mode.to_string(),
+            format!("{:.2?}", std::time::Duration::from_secs_f64(secs)),
+            tr_total.to_string(),
+            format!("{:.2}x", serial_secs / secs),
+        ]);
+    }
+    println!("{}", t.render());
+    common::maybe_csv(&t);
+    println!(
+        "multi-metric pipeline speedup: {:.2}x cold, {:.2}x warm (target >= 1.5x warm), \
+         bit-identical plans\n",
+        serial_secs / cold_secs,
+        serial_secs / warm_secs
     );
     println!("fig14 OK");
 }

@@ -23,12 +23,19 @@
 //!   (Eqs. 1–2, §IV-F).
 //! * [`overlap`] — computational-overlap analysis: OverlaPIM's exhaustive
 //!   O(N·M) comparison and the paper's analytical algorithm (Eqs. 3–6,
-//!   §IV-G/H), plus overlapped-latency evaluation.
-//! * [`transform`] — the overlap-driven mapping transformation (§IV-I).
+//!   §IV-G/H), overlapped-latency evaluation, and the two-table analysis
+//!   memoizer ([`overlap::OverlapCache`]: ready times + transform job
+//!   queries).
+//! * [`transform`] — the overlap-driven mapping transformation (§IV-I),
+//!   split into the memoizable per-job ready queries and the cheap
+//!   scheduling arithmetic.
 //! * [`search`] — the per-layer mapper and whole-network search strategies
 //!   (Forward / Backward / Middle) with all baseline algorithms (§IV-J/K),
-//!   plus the deterministic multi-threaded candidate evaluator
-//!   ([`search::ParallelMapper`]) and the overlap-analysis memoizer wiring.
+//!   the deterministic multi-threaded candidate evaluator
+//!   ([`search::ParallelMapper`]), and the pipelined multi-metric engine
+//!   ([`search::NetworkSearch::run_metrics`]): concurrent metric jobs over
+//!   a shared candidate store with speculative layer look-ahead,
+//!   bit-identical to the serial baseline matrix.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO-text artifacts
 //!   produced by the Python compile path and executes them from Rust.
 //!   Gated behind the off-by-default `pjrt` cargo feature (the `xla`
@@ -42,6 +49,9 @@
 //!   factorization, YAML-subset parser, CLI helper, error type and a small
 //!   property-testing harness (the image has no crates.io access, so the
 //!   default build is strictly std-only).
+//!
+//! `rust/ARCHITECTURE.md` walks the workload → mapspace → overlap/transform
+//! → search → report dataflow end to end.
 
 pub mod arch;
 pub mod dataspace;
@@ -64,15 +74,18 @@ pub mod prelude {
     pub use crate::mapping::{Dim, Loop, LoopKind, Mapping};
     pub use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
     pub use crate::overlap::{
-        overlapped_latency, AnalyticalOverlap, ExhaustiveOverlap, LayerPair, OverlapAnalysis,
-        OverlapCache, OverlapConfig, OverlapResult,
+        overlapped_latency, AnalyticalOverlap, CacheStats, ExhaustiveOverlap, LayerPair,
+        OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
     };
     pub use crate::perf::{LayerStats, PerfModel};
     pub use crate::search::{
-        Algorithm, AnalysisEngine, EvaluatedMapping, Mapper, MapperConfig, Metric,
-        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
+        Algorithm, AnalysisEngine, CandidateStore, EvaluatedMapping, Mapper, MapperConfig,
+        Metric, MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
     };
-    pub use crate::transform::{transform_schedule, TransformConfig, TransformResult};
+    pub use crate::transform::{
+        transform_ready_jobs, transform_schedule, transform_schedule_owned,
+        transform_schedule_with_jobs, TransformConfig, TransformResult,
+    };
     pub use crate::util::rng::SplitMix64;
     pub use crate::workload::{Layer, LayerKind, Network};
 }

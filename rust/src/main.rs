@@ -46,9 +46,11 @@ USAGE: repro <subcommand> [options]
 SUBCOMMANDS
   search   --net <zoo|file.yaml> [--arch dram|reram|small|file.yaml]
            [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
-           [--metric seq|overlap|transform] [--engine analytical|exhaustive]
+           [--metric seq|overlap|transform|all] [--engine analytical|exhaustive]
            [--deadline-ms T] [--refine N] [--threads N] [--cache on|off]
-           [--per-layer] [--csv]
+           [--pipeline on|off] [--lookahead on|off] [--per-layer] [--csv]
+           (--metric all runs the whole baseline matrix: the three metric
+            sweeps as pipelined jobs sharing candidate enumeration)
   analyze  --net <zoo> --pair I [--budget N] [--seed S]
   arch     [--config dram|reram|small|file.yaml] [--dump]
   export   --net <zoo> [--out file.yaml]
@@ -100,9 +102,15 @@ fn mapper_config(args: &Args) -> MapperConfig {
     };
     // Parallel search knobs: worker threads for per-layer candidate
     // evaluation (results are bit-identical at any thread count when no
-    // deadline is set) and the overlap-analysis memoization cache.
+    // deadline is set) and the analysis memoization cache.
     cfg.threads = args.get_usize("threads", 1).max(1);
     cfg.cache = args.get_switch("cache", true);
+    // Pipelining knobs: concurrent metric jobs with shared candidate
+    // enumeration (`--metric all`), and speculative next-layer
+    // enumeration. Both are observationally transparent; both are ignored
+    // under a deadline.
+    cfg.pipeline = args.get_switch("pipeline", true);
+    cfg.lookahead = args.get_switch("lookahead", true);
     cfg
 }
 
@@ -125,6 +133,10 @@ fn cmd_search(args: &Args) {
         "seq" | "sequential" => Metric::Sequential,
         "overlap" => Metric::Overlap,
         "transform" => Metric::Transform,
+        "all" => {
+            cmd_search_matrix(args, &arch, &net, cfg, strat);
+            return;
+        }
         other => panic!("unknown metric `{other}`"),
     };
     eprintln!(
@@ -183,6 +195,84 @@ fn cmd_search(args: &Args) {
             print!("{}", t.to_csv());
         } else {
             println!("{}", t.render());
+        }
+    }
+}
+
+/// `search --metric all`: the full baseline matrix — the three metric
+/// sweeps run as pipelined jobs (per `--pipeline`) sharing candidate
+/// enumeration, reported as the paper's six algorithm variants (honoring
+/// `--csv` and `--per-layer` like the single-metric path).
+fn cmd_search_matrix(
+    args: &Args,
+    arch: &Arch,
+    net: &Network,
+    cfg: MapperConfig,
+    strat: SearchStrategy,
+) {
+    use fastoverlapim::search::{algorithm_total, Algorithm};
+    let pipelined = cfg.pipeline && cfg.deadline.is_none();
+    let mode = match (pipelined, cfg.sharing_active()) {
+        (true, true) => "pipelined jobs + shared enumeration",
+        // Above the store's memory cap the jobs still run concurrently
+        // but each enumerates its own candidates.
+        (true, false) => "pipelined jobs, unshared enumeration (budget above sharing cap)",
+        (false, _) => "serial passes",
+    };
+    eprintln!(
+        "searching {} on {} under all three metrics ({mode}, budget {}, {:?})...",
+        net.name, arch.name, cfg.budget, strat
+    );
+    let search = NetworkSearch::new(arch, cfg, strat);
+    let started = std::time::Instant::now();
+    let (seq, ov, tr) = search.run_all_metrics(net);
+    let wallclock = started.elapsed();
+
+    let mut t = Table::new(
+        &format!("{} / {} / baseline matrix", net.name, arch.name),
+        &["algorithm", "cycles", "vs Best Original"],
+    );
+    let base = seq.total_sequential;
+    for alg in Algorithm::ALL {
+        let v = algorithm_total(alg, &seq, &ov, &tr);
+        t.row(vec![alg.name().to_string(), cycles(v), speedup(base, v)]);
+    }
+    println!("{}", t.render());
+    if args.has_flag("csv") {
+        print!("{}", t.to_csv());
+    }
+    println!(
+        "matrix wall-clock: {wallclock:.2?} ({} mappings evaluated across 3 metric runs)",
+        seq.mappings_evaluated + ov.mappings_evaluated + tr.mappings_evaluated
+    );
+    let stats = search.cache_stats();
+    if stats.hits() + stats.misses() > 0 {
+        println!(
+            "analysis cache: ready {}h/{}m, transform {}h/{}m",
+            stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses
+        );
+    }
+
+    if args.has_flag("per-layer") {
+        for plan in [&seq, &ov, &tr] {
+            let mut t = Table::new(
+                &format!("per-layer contributions — {:?}-metric plan (cycles)", plan.metric),
+                &["layer", "sequential", "overlapped", "transformed", "overlap frac"],
+            );
+            for l in &plan.layers {
+                t.row(vec![
+                    l.name.clone(),
+                    cycles(l.sequential_contribution()),
+                    cycles(l.overlapped_contribution()),
+                    cycles(l.transformed_contribution()),
+                    format!("{:.2}", l.overlap.map_or(0.0, |o| o.overlap_fraction)),
+                ]);
+            }
+            if args.has_flag("csv") {
+                print!("{}", t.to_csv());
+            } else {
+                println!("{}", t.render());
+            }
         }
     }
 }

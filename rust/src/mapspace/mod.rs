@@ -7,6 +7,27 @@
 //! (the paper's framework, like Timeloop, terminates after a fixed number
 //! of *valid* mappings — §IV-J) and exposes exhaustive enumeration for the
 //! small problems used in tests.
+//!
+//! # Paper-to-code map
+//!
+//! | paper | here |
+//! |-------|------|
+//! | §IV-B per-layer mapping constraints | [`MappingConstraint`] |
+//! | §IV-E map-space construction (Fig. 8) | [`MapSpace::new`], factorization helpers |
+//! | §IV-J fixed-valid-mapping termination | [`MapSpace::sample`] + the mapper's draw budget |
+//!
+//! # Indexed sampling and the search engine
+//!
+//! [`MapSpace::sample_indexed`] is the contract the parallel and pipelined
+//! search layers are built on: candidate `i` is a pure function of
+//! `(base seed, i)` via SplitMix64 stream splitting. Worker threads shard
+//! the index range ([`crate::search::ParallelMapper`]), concurrent metric
+//! jobs share one enumeration of it (`search`'s candidate store), and the
+//! speculative look-ahead enumerates a future layer's range early — none
+//! of which can change which candidates exist, so every configuration
+//! reproduces the single-threaded result bit for bit.
+//! [`MapSpace::prefix_infeasible`] is the equally pure early-exit probe
+//! those layers share.
 
 use crate::arch::Arch;
 use crate::mapping::{Dim, DimMap, Loop, LoopKind, Mapping};
@@ -110,6 +131,18 @@ impl<'a> MapSpace<'a> {
     pub fn sample_indexed(&self, base_seed: u64, index: u64) -> Option<Mapping> {
         let mut rng = SplitMix64::stream(base_seed, index);
         self.sample(&mut rng)
+    }
+
+    /// `true` when the first `draws` indexed draws of `base_seed`'s
+    /// candidate stream all fail validation — the search's infeasibility
+    /// preflight (tiny layers on big machines can make the constrained
+    /// space effectively empty, and each failed draw already retries
+    /// `max_attempts` times inside the sampler). A pure function of
+    /// `(base_seed, draws)`, so every thread count — and both the fused
+    /// and the shared-enumeration search paths — reach the identical
+    /// early exit.
+    pub fn prefix_infeasible(&self, base_seed: u64, draws: u64) -> bool {
+        (0..draws).all(|i| self.sample_indexed(base_seed, i).is_none())
     }
 
     /// Sample one valid mapping, or `None` if `max_attempts` draws all

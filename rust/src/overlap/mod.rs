@@ -21,6 +21,27 @@
 //!   of independent per-dimension digit contributions, so the maximum over
 //!   a box is the sum of per-dimension digit-walk maxima
 //!   ([`LoopTable::max_finish_step_over_box`]).
+//!
+//! # Paper-to-code map
+//!
+//! | paper | here |
+//! |-------|------|
+//! | §IV-G overlapping definition, Fig. 4 | [`overlapped_latency`], [`OverlapResult`] |
+//! | §IV-H Eqs. 3–6 analytical analysis | [`AnalyticalOverlap`] → [`ReadyTimes`] |
+//! | §IV-H O(N·M) baseline (OverlaPIM) | [`ExhaustiveOverlap`] |
+//! | input operation space `I_t^{n+1}` | [`LayerPair::step_input_boxes`] |
+//! | §IV-J repeated fixed-neighbor analyses | [`OverlapCache`] (ready-times table) |
+//! | §IV-I per-job ready queries (step 1) | [`OverlapCache`] (transform table) |
+//!
+//! # Memoization
+//!
+//! [`OverlapCache`] holds two sharded memo tables: ready times per
+//! analyzed pair ([`PairKey`]), and `transform_schedule`'s per-job ready
+//! queries per transformed pair ([`TransformKey`]). Both store the exact
+//! analysis output keyed by stable fingerprints, so enabling either table
+//! is observationally transparent — it can change wall-clock, never a
+//! result. See the memoization section further down for the insert/peek
+//! discipline.
 
 use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range};
 use crate::mapping::Mapping;
@@ -432,17 +453,30 @@ pub fn overlapped_latency(
 }
 
 // ---------------------------------------------------------------------------
-// Overlap-analysis memoization (§IV-J acceleration).
+// Analysis memoization (§IV-J acceleration).
 //
 // The whole-network sweep evaluates N layers × k candidates, and each
 // candidate is scored against a *fixed* neighbor mapping. The same
 // (producer, consumer) pair recurs whenever an incumbent is re-scored — in
 // coordinate-descent refinement passes, in the final forward evaluation
-// pass, and across the baseline-matrix searches — and `ReadyTimes` is a
-// pure function of the pair, so recomputing it is pure waste. The cache
-// below keys entries by stable fingerprints of both sides plus the probe
-// configuration and engine, and is sharded so parallel workers rarely
-// contend on the same lock.
+// pass, and across the baseline-matrix searches — and the expensive halves
+// of both analyses are pure functions of the pair, so recomputing them is
+// pure waste. [`OverlapCache`] therefore holds TWO memo tables over the
+// same sharded skeleton:
+//
+// * the **ready-times table** (`PairKey` → [`ReadyTimes`]) memoizes the
+//   per-step overlap analysis (Eqs. 3–6);
+// * the **transform table** (`TransformKey` → per-job ready queries)
+//   memoizes `transform_schedule`'s `(bank, step)` job queries, which
+//   dominate the Transform-metric hot path (§IV-I step 1 — the sort and
+//   makespan arithmetic after it are cheap and recomputed every time).
+//
+// Both tables key entries by stable fingerprints of the two sides plus the
+// probe configuration (the ready-times table also tags the engine), store
+// the exact analysis output (observational transparency: cache on/off
+// cannot change any result), and follow the same peek/insert discipline:
+// recurring chosen-pair lookups insert, one-shot candidate lookups only
+// peek. Shards keep parallel workers off each other's locks.
 // ---------------------------------------------------------------------------
 
 /// Cache key for one analyzed pair: stable fingerprints of the producer
@@ -482,41 +516,104 @@ pub fn pair_cache_key(pair: &LayerPair<'_>, engine: u64, max_probe_steps: usize)
     }
 }
 
+/// Cache key for the per-job ready queries of one transformed pair
+/// (`transform_schedule`'s step 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TransformKey {
+    pub producer: u64,
+    pub consumer: u64,
+    /// `TransformConfig::max_probe_jobs` the entry was computed with.
+    pub probe_jobs: u64,
+}
+
+/// Build the transform-table key for a pair under a job-probe budget.
+///
+/// No engine tag: the transformation's per-job queries always decode
+/// producer finish steps analytically, whichever engine scores the pair's
+/// plain overlap.
+pub fn transform_cache_key(pair: &LayerPair<'_>, max_probe_jobs: usize) -> TransformKey {
+    TransformKey {
+        producer: side_fingerprint(pair.producer, pair.producer_mapping, pair.producer_stats),
+        consumer: side_fingerprint(pair.consumer, pair.consumer_mapping, pair.consumer_stats),
+        probe_jobs: max_probe_jobs as u64,
+    }
+}
+
+/// Split hit/miss counters of [`OverlapCache`]'s two memo tables.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Ready-times table (per-step overlap analysis) hits.
+    pub ready_hits: u64,
+    /// Ready-times table misses.
+    pub ready_misses: u64,
+    /// Transform table (per-job ready queries) hits.
+    pub transform_hits: u64,
+    /// Transform table misses.
+    pub transform_misses: u64,
+}
+
+impl CacheStats {
+    /// Total hits across both tables.
+    pub fn hits(&self) -> u64 {
+        self.ready_hits + self.transform_hits
+    }
+
+    /// Total misses across both tables.
+    pub fn misses(&self) -> u64 {
+        self.ready_misses + self.transform_misses
+    }
+}
+
 const CACHE_SHARDS: usize = 16;
 
-/// Default per-shard entry cap (total = 16 shards × 256 = 4096 entries).
-/// Recurring-pair lookups ([`OverlapCache::get_or_compute`]) insert on
-/// miss; one-shot candidate lookups ([`OverlapCache::peek_or_compute`])
-/// never do, so the population is O(chain length × passes) in practice
-/// and the cap is a memory backstop — a full shard simply computes
-/// through without inserting, which can cost a recomputation later but
-/// can never change a result.
+/// Default per-shard entry cap (16 shards × 256 = 4096 entries per
+/// table). Recurring-pair lookups ([`OverlapCache::get_or_compute`],
+/// [`OverlapCache::transform_get_or_compute`]) insert on miss; one-shot
+/// candidate lookups ([`OverlapCache::peek_or_compute`] and its transform
+/// twin) never do, so the population is O(chain length × passes) in
+/// practice and the cap is a memory backstop — a full shard simply
+/// computes through without inserting, which can cost a recomputation
+/// later but can never change a result.
 const CACHE_SHARD_CAP: usize = 256;
 
-/// Sharded, thread-safe, bounded memoization cache for [`ReadyTimes`].
+/// Key types that place themselves into a shard deterministically (the
+/// std hasher is randomized per process; fingerprint keys are already
+/// well-mixed words, so a cheap xor-fold suffices).
+trait ShardKey: Eq + std::hash::Hash + Copy {
+    fn shard_hash(&self) -> u64;
+}
+
+impl ShardKey for PairKey {
+    fn shard_hash(&self) -> u64 {
+        self.producer ^ self.consumer.rotate_left(17) ^ self.probe ^ self.engine
+    }
+}
+
+impl ShardKey for TransformKey {
+    fn shard_hash(&self) -> u64 {
+        self.producer ^ self.consumer.rotate_left(17) ^ self.probe_jobs.rotate_left(31)
+    }
+}
+
+/// One sharded, thread-safe, bounded memo table — the locking and
+/// counting skeleton shared by the ready-times and transform tables.
 ///
 /// Lookups take one shard lock for a hash-map probe; the (expensive)
 /// analysis itself always runs outside any lock, so parallel workers never
 /// serialize on each other's computations — at worst two workers race to
 /// compute the same entry and the first insertion wins (both computed the
 /// same pure value, so the race is benign and deterministic).
-pub struct OverlapCache {
-    shards: [Mutex<HashMap<PairKey, Arc<ReadyTimes>>>; CACHE_SHARDS],
+struct ShardedMemo<K, V> {
+    shards: Vec<Mutex<HashMap<K, Arc<V>>>>,
     shard_cap: usize,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
-impl OverlapCache {
-    pub fn new() -> OverlapCache {
-        Self::with_shard_cap(CACHE_SHARD_CAP)
-    }
-
-    /// Cache holding at most `16 × shard_cap` entries (0 = store nothing,
-    /// i.e. a pure pass-through that still counts hits/misses).
-    pub fn with_shard_cap(shard_cap: usize) -> OverlapCache {
-        OverlapCache {
-            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+impl<K: ShardKey, V> ShardedMemo<K, V> {
+    fn new(shard_cap: usize) -> ShardedMemo<K, V> {
+        ShardedMemo {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             shard_cap,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -524,36 +621,13 @@ impl OverlapCache {
     }
 
     #[inline]
-    fn shard(&self, key: &PairKey) -> &Mutex<HashMap<PairKey, Arc<ReadyTimes>>> {
-        let h = key.producer ^ key.consumer.rotate_left(17) ^ key.probe ^ key.engine;
-        &self.shards[(h as usize) % CACHE_SHARDS]
+    fn shard(&self, key: &K) -> &Mutex<HashMap<K, Arc<V>>> {
+        &self.shards[(key.shard_hash() as usize) % CACHE_SHARDS]
     }
 
-    /// Fetch the entry for `key`, computing it on a miss and inserting the
-    /// result while the shard has room. `compute` runs outside the shard
-    /// lock.
-    pub fn get_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
+    fn fetch<F>(&self, key: K, store: bool, compute: F) -> Arc<V>
     where
-        F: FnOnce() -> ReadyTimes,
-    {
-        self.fetch(key, true, compute)
-    }
-
-    /// Fetch the entry for `key`, computing on a miss **without inserting**.
-    /// For lookups whose key is unlikely to recur (each candidate draw of a
-    /// search analyzes a fresh pair exactly once): they still profit from
-    /// entries the recurring paths stored, but must not flush those
-    /// entries out of the bounded shards with write-once garbage.
-    pub fn peek_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
-    where
-        F: FnOnce() -> ReadyTimes,
-    {
-        self.fetch(key, false, compute)
-    }
-
-    fn fetch<F>(&self, key: PairKey, store: bool, compute: F) -> Arc<ReadyTimes>
-    where
-        F: FnOnce() -> ReadyTimes,
+        F: FnOnce() -> V,
     {
         let shard = self.shard(&key);
         if let Some(v) = shard.lock().unwrap().get(&key) {
@@ -576,17 +650,117 @@ impl OverlapCache {
         v
     }
 
-    pub fn hits(&self) -> u64 {
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
-    pub fn misses(&self) -> u64 {
+    fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
+}
 
-    /// Number of distinct entries currently held.
+/// The analysis memoizer: a ready-times table ([`ReadyTimes`] per
+/// [`PairKey`]) and a transform table (per-job ready queries per
+/// [`TransformKey`]) over the same sharded skeleton. Shared by every
+/// metric job of a whole-network search; all methods are `&self` and
+/// thread-safe.
+pub struct OverlapCache {
+    ready: ShardedMemo<PairKey, ReadyTimes>,
+    transform: ShardedMemo<TransformKey, Vec<(u64, u64)>>,
+}
+
+impl OverlapCache {
+    pub fn new() -> OverlapCache {
+        Self::with_shard_cap(CACHE_SHARD_CAP)
+    }
+
+    /// Cache whose tables each hold at most `16 × shard_cap` entries (0 =
+    /// store nothing, i.e. a pure pass-through that still counts
+    /// hits/misses).
+    pub fn with_shard_cap(shard_cap: usize) -> OverlapCache {
+        OverlapCache {
+            ready: ShardedMemo::new(shard_cap),
+            transform: ShardedMemo::new(shard_cap),
+        }
+    }
+
+    /// Fetch the ready-times entry for `key`, computing it on a miss and
+    /// inserting the result while the shard has room. `compute` runs
+    /// outside the shard lock.
+    pub fn get_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
+    where
+        F: FnOnce() -> ReadyTimes,
+    {
+        self.ready.fetch(key, true, compute)
+    }
+
+    /// Fetch the ready-times entry for `key`, computing on a miss
+    /// **without inserting**. For lookups whose key is unlikely to recur
+    /// (each candidate draw of a search analyzes a fresh pair exactly
+    /// once): they still profit from entries the recurring paths stored,
+    /// but must not flush those entries out of the bounded shards with
+    /// write-once garbage.
+    pub fn peek_or_compute<F>(&self, key: PairKey, compute: F) -> Arc<ReadyTimes>
+    where
+        F: FnOnce() -> ReadyTimes,
+    {
+        self.ready.fetch(key, false, compute)
+    }
+
+    /// Fetch the per-job ready queries for `key` (the expensive step 1 of
+    /// `transform_schedule`), computing and inserting on a miss.
+    pub fn transform_get_or_compute<F>(
+        &self,
+        key: TransformKey,
+        compute: F,
+    ) -> Arc<Vec<(u64, u64)>>
+    where
+        F: FnOnce() -> Vec<(u64, u64)>,
+    {
+        self.transform.fetch(key, true, compute)
+    }
+
+    /// Fetch the per-job ready queries for `key`, computing on a miss
+    /// without inserting — the candidate-draw discipline, exactly as
+    /// [`OverlapCache::peek_or_compute`].
+    pub fn transform_peek_or_compute<F>(
+        &self,
+        key: TransformKey,
+        compute: F,
+    ) -> Arc<Vec<(u64, u64)>>
+    where
+        F: FnOnce() -> Vec<(u64, u64)>,
+    {
+        self.transform.fetch(key, false, compute)
+    }
+
+    /// Total hits across both tables.
+    pub fn hits(&self) -> u64 {
+        self.ready.hits() + self.transform.hits()
+    }
+
+    /// Total misses across both tables.
+    pub fn misses(&self) -> u64 {
+        self.ready.misses() + self.transform.misses()
+    }
+
+    /// Split counters of the two tables.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            ready_hits: self.ready.hits(),
+            ready_misses: self.ready.misses(),
+            transform_hits: self.transform.hits(),
+            transform_misses: self.transform.misses(),
+        }
+    }
+
+    /// Number of distinct entries currently held (both tables).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.ready.len() + self.transform.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -919,6 +1093,54 @@ mod tests {
         // Swapping roles must not alias.
         let swapped = LayerPair::new((&lb, &mb, &sb), (&la, &ma, &sa));
         assert_ne!(k1, pair_cache_key(&swapped, 0, 2048));
+    }
+
+    #[test]
+    fn transform_table_memoizes_per_job_ready_queries() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let tcfg = crate::transform::TransformConfig::default();
+        let direct = crate::transform::transform_ready_jobs(&pair, &tcfg);
+        let cache = OverlapCache::new();
+        let key = transform_cache_key(&pair, tcfg.max_probe_jobs);
+        let first = cache.transform_get_or_compute(key, || {
+            crate::transform::transform_ready_jobs(&pair, &tcfg)
+        });
+        let second = cache.transform_get_or_compute(key, || panic!("second lookup must be a hit"));
+        assert_eq!(*first, direct);
+        assert_eq!(*second, direct);
+        let stats = cache.stats();
+        assert_eq!(stats.transform_hits, 1);
+        assert_eq!(stats.transform_misses, 1);
+        // The two tables are independent: no ready-times traffic happened.
+        assert_eq!(stats.ready_hits + stats.ready_misses, 0);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn transform_key_separates_pairs_and_probe_budgets() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let ma2 = simple_mapping(2, 4, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sa2 = eval(&arch, &la, &ma2);
+        let sb = eval(&arch, &lb, &mb);
+        let p1 = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let p2 = LayerPair::new((&la, &ma2, &sa2), (&lb, &mb, &sb));
+        let k1 = transform_cache_key(&p1, 2048);
+        assert_ne!(k1, transform_cache_key(&p2, 2048), "producer mapping must separate");
+        assert_ne!(k1, transform_cache_key(&p1, 64), "job-probe budget must separate");
+        let swapped = LayerPair::new((&lb, &mb, &sb), (&la, &ma, &sa));
+        assert_ne!(k1, transform_cache_key(&swapped, 2048), "roles must not alias");
     }
 
     #[test]

@@ -30,21 +30,59 @@
 //! the hot path, and bit-identical results at any thread count**. Repeated
 //! pair analyses are deduplicated by the [`OverlapCache`] memoizer keyed on
 //! mapping fingerprints (§IV-J: the fixed neighbor recurs across incumbent
-//! re-scores, refinement passes and the final evaluation pass).
+//! re-scores, refinement passes and the final evaluation pass), and the
+//! Transform metric's per-job ready queries by the same cache's transform
+//! table (§IV-I step 1).
+//!
+//! # Pipelined multi-metric search
+//!
+//! The paper's figures all compare the *baseline matrix*: the same network
+//! searched under the Sequential, Overlap and Transform metrics
+//! ([`Algorithm`]). [`NetworkSearch::run_metrics`] runs those sweeps as
+//! **independent pipelined jobs** rather than three serial full-network
+//! passes, exploiting two observations:
+//!
+//! * **Candidate enumeration is metric-independent.** Every metric draws
+//!   the identical candidate sequence (same seed schedule, same layers) —
+//!   only the *scoring* against the metric-specific fixed neighbor
+//!   differs. The jobs therefore share a [`CandidateStore`]: the first job
+//!   to reach a `(base seed, layer)` call enumerates its candidates
+//!   (sampling + per-layer stats) once, and the others score the stored
+//!   set three ways.
+//! * **Enumeration does not depend on the running sweep.** Unlike scoring
+//!   (layer `i+1`'s fixed neighbor is layer `i`'s winner), enumeration
+//!   needs only the layer and its precomputed base seed, so a speculative
+//!   **look-ahead** thread enumerates layer `i+1`'s candidates while layer
+//!   `i`'s winners are still being scored and reduced.
+//!
+//! Both mechanisms hand over pure values keyed by the same deterministic
+//! schedule, so pipelined plans are **bit-identical to the serial
+//! three-pass path at any thread count** (asserted in
+//! `tests/parallel_search.rs`); only wall-clock and the cache's hit/miss
+//! attribution change. Knobs: [`MapperConfig::pipeline`] (concurrent
+//! metric jobs + candidate sharing) and [`MapperConfig::lookahead`]
+//! (speculative enumeration, also active in solo [`NetworkSearch::run`]).
+//! Deadline-mode runs fall back to the serial fused path, which is the
+//! only sound one under a per-layer wall-clock budget.
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
 use crate::overlap::{
-    overlapped_latency, pair_cache_key, AnalyticalOverlap, ExhaustiveOverlap, LayerPair,
-    OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult, ReadyTimes,
+    overlapped_latency, pair_cache_key, transform_cache_key, AnalyticalOverlap, CacheStats,
+    ExhaustiveOverlap, LayerPair, OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
+    ReadyTimes,
 };
 use crate::perf::{LayerStats, PerfModel};
-use crate::transform::{transform_schedule, TransformConfig, TransformResult};
+use crate::transform::{
+    transform_ready_jobs, transform_schedule, transform_schedule_owned,
+    transform_schedule_with_jobs, TransformConfig, TransformResult,
+};
 use crate::util::rng::SplitMix64;
 use crate::workload::{Layer, Network};
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// What the per-layer search optimizes (drives which of the paper's
@@ -199,9 +237,39 @@ pub struct MapperConfig {
     /// Worker threads for per-layer candidate evaluation (1 = run inline).
     /// Results are bit-identical for any value when no deadline is set.
     pub threads: usize,
-    /// Enable the overlap-analysis memoization cache (identical results
-    /// either way; on saves recomputing recurring pair analyses).
+    /// Enable the analysis memoization cache — the ready-times table and
+    /// the transform per-job table (identical results either way; on saves
+    /// recomputing recurring pair analyses).
     pub cache: bool,
+    /// Run the baseline-matrix metrics of
+    /// [`NetworkSearch::run_metrics`] as concurrent jobs sharing one
+    /// candidate enumeration per `(seed, layer)` call, instead of serial
+    /// full-network passes. Plans are bit-identical either way; off
+    /// reproduces the serial reference path. Ignored (serial fallback)
+    /// when a deadline is set.
+    pub pipeline: bool,
+    /// Speculatively enumerate the next layer's candidates while the
+    /// current layer's winners are being scored and reduced (identical
+    /// results either way). The speculative enumeration fans out its own
+    /// `threads`-wide workers, so while it overlaps with scoring the
+    /// active worker count transiently exceeds `threads` (up to 2×) —
+    /// see ROADMAP for the shared-pool follow-up. Ignored when a deadline
+    /// is set.
+    pub lookahead: bool,
+}
+
+impl MapperConfig {
+    /// Whether the shared candidate store — and with it cross-metric
+    /// candidate sharing and speculative look-ahead — is active for this
+    /// configuration: requires no deadline (timing-dependent runs use the
+    /// serial fused path) and a budget within the store's memory cap
+    /// (1024 candidates per call; larger sets would cost more to hold
+    /// than to re-enumerate). Concurrent metric jobs still run when this
+    /// is `false` — only the sharing/speculation is skipped — and results
+    /// are identical either way.
+    pub fn sharing_active(&self) -> bool {
+        self.deadline.is_none() && (self.budget as u64) <= SHARE_BUDGET_CAP
+    }
 }
 
 impl Default for MapperConfig {
@@ -218,6 +286,8 @@ impl Default for MapperConfig {
             refine_passes: 1,
             threads: 1,
             cache: true,
+            pipeline: true,
+            lookahead: true,
         }
     }
 }
@@ -325,6 +395,75 @@ impl ParallelMapper {
         }
         (best.map(|(_, _, em)| em), evaluated)
     }
+
+    /// Evaluate every index in `0..n` through `eval`, collecting the
+    /// results in index order — the *enumeration* half of a search call
+    /// (no reduction, no deadline). Workers drain the same work-stealing
+    /// chunk queue as [`ParallelMapper::run`]; each records its
+    /// `(index, value)` pairs locally and a scatter after the join
+    /// restores index order, so the output is independent of scheduling.
+    pub fn map_collect<T, F>(&self, n: u64, eval: &F) -> Vec<Option<T>>
+    where
+        T: Send,
+        F: Fn(u64) -> Option<T> + Sync,
+    {
+        if self.threads == 1 {
+            return (0..n).map(eval).collect();
+        }
+        let queue = AtomicU64::new(0);
+        let chunk = self.chunk.max(1);
+        let parts: Vec<Vec<(u64, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..self.threads)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut part: Vec<(u64, T)> = Vec::new();
+                        drain_chunks(&queue, n, chunk, |i| {
+                            if let Some(v) = eval(i) {
+                                part.push((i, v));
+                            }
+                            true
+                        });
+                        part
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("enumeration worker panicked"))
+                .collect()
+        });
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n as usize);
+        out.resize_with(n as usize, || None);
+        for part in parts {
+            for (i, v) in part {
+                out[i as usize] = Some(v);
+            }
+        }
+        out
+    }
+}
+
+/// Drain the shared chunk queue over `0..n`, invoking `body` for each
+/// claimed index; stops early when `body` returns `false` (deadline
+/// expiry). The single chunk-claiming loop both [`ParallelMapper::run`]'s
+/// reducing workers and [`ParallelMapper::map_collect`]'s collecting
+/// workers drain.
+fn drain_chunks<F>(queue: &AtomicU64, n: u64, chunk: u64, mut body: F)
+where
+    F: FnMut(u64) -> bool,
+{
+    loop {
+        let start = queue.fetch_add(chunk, Ordering::Relaxed);
+        if start >= n {
+            return;
+        }
+        let end = start.saturating_add(chunk).min(n);
+        for i in start..end {
+            if !body(i) {
+                return;
+            }
+        }
+    }
 }
 
 /// One worker: drain chunks off the shared cursor until the range (or the
@@ -341,31 +480,200 @@ where
 {
     let mut best: BestCandidate = None;
     let mut evaluated = 0usize;
-    'queue: loop {
-        let start = queue.fetch_add(chunk, Ordering::Relaxed);
-        if start >= budget {
-            break;
-        }
-        let end = start.saturating_add(chunk).min(budget);
-        for i in start..end {
-            if let Some(d) = deadline {
-                if Instant::now() >= d {
-                    break 'queue;
-                }
+    drain_chunks(queue, budget, chunk, |i| {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return false;
             }
-            if let Some(em) = eval(i) {
-                evaluated += 1;
-                let better = match &best {
-                    None => true,
-                    Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
-                };
-                if better {
-                    best = Some((em.score, i, em));
+        }
+        if let Some(em) = eval(i) {
+            evaluated += 1;
+            let better = match &best {
+                None => true,
+                Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
+            };
+            if better {
+                best = Some((em.score, i, em));
+            }
+        }
+        true
+    });
+    (best, evaluated)
+}
+
+// ---------------------------------------------------------------------------
+// Shared candidate enumeration (the pipelined multi-metric engine).
+// ---------------------------------------------------------------------------
+
+/// Candidate draws inspected by the infeasibility preflight
+/// ([`MapSpace::prefix_infeasible`]): if this pure prefix of the stream
+/// yields no valid mapping, the call declares the constrained space
+/// effectively exhausted instead of burning the whole draw budget.
+const PREFLIGHT_DRAWS: u64 = 32;
+
+/// Budgets above this cap bypass the shared candidate store: a stored set
+/// holds every drawn mapping plus its stats, and under uneven job
+/// progress (a cheap Sequential job sprinting ahead of an expensive
+/// Transform job) the live window can grow to the whole sweep —
+/// O(chain length × budget) candidates — before the slow consumers catch
+/// up. The cap keeps that worst case to tens of megabytes. Sharing is an
+/// optimization only, so the cutoff cannot change any result.
+const SHARE_BUDGET_CAP: u64 = 1 << 10;
+
+/// The enumerated candidates of one `(base seed, layer)` search call:
+/// every indexed draw with its per-layer stats, *before* any
+/// metric-specific scoring. A pure function of its key — which is what
+/// makes the set safe to share across concurrent metric jobs and to
+/// enumerate speculatively ahead of the sweep.
+pub struct CandidateSet {
+    /// `candidates[i]` is draw `i` of the indexed stream (`None` = the
+    /// draw failed validation within the sampler's attempt budget).
+    pub candidates: Vec<Option<(Mapping, LayerStats)>>,
+    /// The preflight declared the map space effectively exhausted; no
+    /// candidates were enumerated.
+    pub infeasible: bool,
+}
+
+/// Key of one enumeration: the per-call base seed plus the layer shape
+/// fingerprint (seeds are per-call unique in practice; the layer
+/// fingerprint guards the degenerate collision).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CandKey {
+    pub seed: u64,
+    pub layer: u64,
+}
+
+/// Enumerate candidates `0..budget` of `(layer, base_seed)`: sample every
+/// indexed draw and evaluate its per-layer stats, sharded across `threads`
+/// workers. Scoring against fixed neighbors is *not* done here — that is
+/// the metric-specific half each pipelined job performs independently.
+fn enumerate_candidates(
+    arch: &Arch,
+    layer: &Layer,
+    constraint: &MappingConstraint,
+    mapspace: &MapSpaceConfig,
+    budget: u64,
+    base_seed: u64,
+    threads: usize,
+) -> CandidateSet {
+    let ms = MapSpace::new(arch, layer, constraint.clone(), mapspace.clone());
+    if budget >= PREFLIGHT_DRAWS && ms.prefix_infeasible(base_seed, PREFLIGHT_DRAWS) {
+        return CandidateSet { candidates: Vec::new(), infeasible: true };
+    }
+    let pm = PerfModel::new(arch);
+    let eval = |i: u64| -> Option<(Mapping, LayerStats)> {
+        let mapping = ms.sample_indexed(base_seed, i)?;
+        let stats = pm.evaluate(layer, &mapping);
+        Some((mapping, stats))
+    };
+    let candidates = ParallelMapper::new(threads).map_collect(budget, &eval);
+    CandidateSet { candidates, infeasible: false }
+}
+
+struct StoreEntry {
+    cell: Arc<OnceLock<Arc<CandidateSet>>>,
+    /// Fetches left before the entry is dropped. Candidate sets are big,
+    /// and each is consumed a statically-known number of times — once per
+    /// metric job sharing the call — then dead; counting consumers bounds
+    /// the store to the window between the fastest and slowest job (the
+    /// whole sweep in the worst case, which is why [`SHARE_BUDGET_CAP`]
+    /// bounds the per-entry size) instead of the whole run.
+    remaining: u32,
+}
+
+struct StoreState {
+    live: HashMap<CandKey, StoreEntry>,
+    /// Fully-consumed keys: a late speculative prefetch of an entry every
+    /// consumer already drained must not resurrect (and recompute) it.
+    done: HashSet<CandKey>,
+}
+
+/// Hand-off buffer for shared candidate enumeration: concurrent metric
+/// jobs — and each job's speculative look-ahead thread — deduplicate the
+/// enumeration of every `(base seed, layer)` call through a once-cell per
+/// key. Whoever arrives first computes; everyone else waits for (or finds)
+/// the same pure value, so sharing can never change a search result.
+pub struct CandidateStore {
+    state: Mutex<StoreState>,
+}
+
+impl CandidateStore {
+    pub fn new() -> CandidateStore {
+        CandidateStore {
+            state: Mutex::new(StoreState { live: HashMap::new(), done: HashSet::new() }),
+        }
+    }
+
+    /// The once-cell for `key`, creating the entry (expecting `consumers`
+    /// fetches) on first sight; `None` when the key is already fully
+    /// consumed.
+    fn cell(&self, key: CandKey, consumers: u32) -> Option<Arc<OnceLock<Arc<CandidateSet>>>> {
+        let mut st = self.state.lock().unwrap();
+        if st.done.contains(&key) {
+            return None;
+        }
+        let entry = st.live.entry(key).or_insert_with(|| StoreEntry {
+            cell: Arc::new(OnceLock::new()),
+            remaining: consumers.max(1),
+        });
+        Some(Arc::clone(&entry.cell))
+    }
+
+    /// Fetch (and consume) the candidate set for `key`, computing it if no
+    /// producer — speculative or not — has yet. Blocks while another
+    /// thread is mid-computation on the same entry: both would compute the
+    /// same pure value, so waiting is strictly cheaper than duplicating.
+    /// The `consumers`-th fetch drops the entry.
+    pub fn fetch<F>(&self, key: CandKey, consumers: u32, compute: F) -> Arc<CandidateSet>
+    where
+        F: FnOnce() -> CandidateSet,
+    {
+        match self.cell(key, consumers) {
+            // Only reachable through a mismatched consumer count: compute
+            // through without storing (correct, just unshared).
+            None => Arc::new(compute()),
+            Some(cell) => {
+                let set = Arc::clone(cell.get_or_init(|| Arc::new(compute())));
+                let mut st = self.state.lock().unwrap();
+                if let Some(entry) = st.live.get_mut(&key) {
+                    entry.remaining = entry.remaining.saturating_sub(1);
+                    if entry.remaining == 0 {
+                        st.live.remove(&key);
+                        st.done.insert(key);
+                    }
                 }
+                set
             }
         }
     }
-    (best, evaluated)
+
+    /// Speculatively compute the entry for `key` without consuming it —
+    /// the look-ahead path: enumerate layer `i+1`'s candidates while layer
+    /// `i`'s winners are still being reduced. A no-op when the entry was
+    /// already drained.
+    pub fn prefetch<F>(&self, key: CandKey, consumers: u32, compute: F)
+    where
+        F: FnOnce() -> CandidateSet,
+    {
+        if let Some(cell) = self.cell(key, consumers) {
+            cell.get_or_init(|| Arc::new(compute()));
+        }
+    }
+
+    /// Number of live (not yet fully consumed) entries.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for CandidateStore {
+    fn default() -> CandidateStore {
+        CandidateStore::new()
+    }
 }
 
 /// Per-layer mapping searcher.
@@ -396,9 +704,15 @@ impl<'a> Mapper<'a> {
         Mapper { arch, config, rng, cache, last_evaluated: 0 }
     }
 
-    /// `(hits, misses)` of the overlap memoizer (zeros when disabled).
+    /// `(hits, misses)` of the analysis memoizer, totalled across the
+    /// ready-times and transform tables (zeros when disabled).
     pub fn cache_stats(&self) -> (u64, u64) {
         self.cache.as_ref().map_or((0, 0), |c| (c.hits(), c.misses()))
+    }
+
+    /// Split per-table memoizer counters (zeros when disabled).
+    pub fn cache_stats_detailed(&self) -> CacheStats {
+        self.cache.as_ref().map_or_else(CacheStats::default, |c| c.stats())
     }
 
     /// Ready times of a pair under the configured engine, memoized when the
@@ -436,6 +750,37 @@ impl<'a> Mapper<'a> {
         }
     }
 
+    /// Transformed-schedule evaluation of a pair (§IV-I), with the
+    /// per-job ready queries — the dominant term — memoized in the
+    /// cache's transform table when enabled. The cached value is the
+    /// exact query output and the scheduling arithmetic re-runs every
+    /// time, so cache on/off cannot change any result. `store` follows
+    /// the same discipline as the ready-times lookups: chosen-pair
+    /// evaluations insert, one-shot candidate scores only peek.
+    pub fn transform_result(&self, pair: &LayerPair<'_>, store: bool) -> TransformResult {
+        match &self.cache {
+            Some(c) => {
+                let key = transform_cache_key(pair, self.config.transform.max_probe_jobs);
+                let compute = || transform_ready_jobs(pair, &self.config.transform);
+                let jobs = if store {
+                    c.transform_get_or_compute(key, compute)
+                } else {
+                    c.transform_peek_or_compute(key, compute)
+                };
+                // Peek misses hand back a uniquely-owned Arc (the value
+                // never entered the table): unwrap it and sort in place
+                // instead of copying the jobs vector — the common case on
+                // the candidate-scoring hot path. Hits and stored values
+                // stay shared and pay the one copy.
+                match Arc::try_unwrap(jobs) {
+                    Ok(owned) => transform_schedule_owned(pair, owned),
+                    Err(shared) => transform_schedule_with_jobs(pair, &shared),
+                }
+            }
+            None => transform_schedule(pair, &self.config.transform),
+        }
+    }
+
     /// Score one candidate mapping under `metric` against the fixed
     /// neighbors (0, 1 or 2 of them — the refinement pass fixes both).
     /// The score is the candidate's locally-attributable latency: its own
@@ -470,8 +815,7 @@ impl<'a> Mapper<'a> {
             };
             let ready = self.ready_times(&pair, store);
             let ov = overlapped_latency(pair.producer_stats, pair.consumer_stats, &ready);
-            let tr = (metric == Metric::Transform)
-                .then(|| transform_schedule(&pair, &self.config.transform));
+            let tr = (metric == Metric::Transform).then(|| self.transform_result(&pair, store));
             let added = match metric {
                 Metric::Overlap => ov.added_latency,
                 Metric::Transform => tr.unwrap().added_latency,
@@ -514,6 +858,79 @@ impl<'a> Mapper<'a> {
         layer: &Layer,
         ctxs: &[PairContext<'_>],
     ) -> Option<EvaluatedMapping> {
+        // Advance the mapper's sequential stream exactly once per call so
+        // repeated searches of the same layer (refinement passes) explore
+        // fresh candidates, deterministically.
+        let base_seed = self.rng.next_u64();
+        self.search_layer_seeded(metric, layer, ctxs, base_seed, None)
+    }
+
+    /// Core per-layer search at an explicit `base_seed`. The public entry
+    /// points draw the seed from the mapper's sequential stream; the
+    /// whole-network engine precomputes the same seed schedule up front so
+    /// it can share and prefetch enumerations. With `share`, candidate
+    /// enumeration (sampling + per-layer stats) goes through the
+    /// [`CandidateStore`] — computed once per `(seed, layer)` call however
+    /// many metric jobs need it — and only the metric-specific scoring
+    /// runs here; without it the fused sample-and-score path runs. Both
+    /// paths are bit-identical.
+    fn search_layer_seeded(
+        &mut self,
+        metric: Metric,
+        layer: &Layer,
+        ctxs: &[PairContext<'_>],
+        base_seed: u64,
+        share: Option<(&CandidateStore, u32)>,
+    ) -> Option<EvaluatedMapping> {
+        let deadline = self.config.deadline.map(|d| Instant::now() + d);
+        let budget = self.config.budget as u64;
+        let threads = self.config.threads;
+
+        if let Some((store, consumers)) = share {
+            if self.config.sharing_active() {
+                let key = CandKey { seed: base_seed, layer: layer.fingerprint() };
+                let set = store.fetch(key, consumers, || {
+                    enumerate_candidates(
+                        self.arch,
+                        layer,
+                        &self.config.constraint,
+                        &self.config.mapspace,
+                        budget,
+                        base_seed,
+                        threads,
+                    )
+                });
+                if set.infeasible {
+                    self.last_evaluated = 0;
+                    return None;
+                }
+                let this: &Mapper<'a> = &*self;
+                let cands = &set.candidates;
+                let eval_one = |i: u64| -> Option<EvaluatedMapping> {
+                    let (mapping, stats) = cands.get(i as usize)?.as_ref()?;
+                    // Candidate pairs are one-shot: peek the cache, never
+                    // insert.
+                    let (score, overlap, transform) =
+                        this.score(metric, layer, mapping, stats, ctxs, false);
+                    // The clone here replaces the fresh construction the
+                    // fused path performs per candidate (the reduction
+                    // drops losers immediately, so at most one clone per
+                    // worker is ever retained); the pair analysis above
+                    // dominates it by orders of magnitude.
+                    Some(EvaluatedMapping {
+                        mapping: mapping.clone(),
+                        stats: stats.clone(),
+                        overlap,
+                        transform,
+                        score,
+                    })
+                };
+                let (best, evaluated) = ParallelMapper::new(threads).run(budget, None, &eval_one);
+                self.last_evaluated = evaluated;
+                return best;
+            }
+        }
+
         let ms = MapSpace::new(
             self.arch,
             layer,
@@ -521,24 +938,15 @@ impl<'a> Mapper<'a> {
             self.config.mapspace.clone(),
         );
         let pm = PerfModel::new(self.arch);
-        // Advance the mapper's sequential stream exactly once per call so
-        // repeated searches of the same layer (refinement passes) explore
-        // fresh candidates, deterministically.
-        let base_seed = self.rng.next_u64();
-        let deadline = self.config.deadline.map(|d| Instant::now() + d);
-        let budget = self.config.budget as u64;
-        let threads = self.config.threads;
 
         // Infeasibility preflight: if a fixed prefix of the candidate
         // stream fails to produce even one valid mapping, declare the map
         // space effectively exhausted instead of burning the whole draw
         // budget (each failed draw already retries `max_attempts` times
         // inside the sampler). The probe is a pure function of the base
-        // seed, so the early exit is identical at every thread count.
-        const PREFLIGHT_DRAWS: u64 = 32;
-        if budget >= PREFLIGHT_DRAWS
-            && (0..PREFLIGHT_DRAWS).all(|i| ms.sample_indexed(base_seed, i).is_none())
-        {
+        // seed, so the early exit is identical at every thread count — and
+        // identical to the shared-enumeration path's preflight.
+        if budget >= PREFLIGHT_DRAWS && ms.prefix_infeasible(base_seed, PREFLIGHT_DRAWS) {
             self.last_evaluated = 0;
             return None;
         }
@@ -558,6 +966,28 @@ impl<'a> Mapper<'a> {
     }
 
     /// Single-layer search with the default (sequential) metric.
+    ///
+    /// # Examples
+    ///
+    /// Find a valid mapping for the first layer of the tiny end-to-end
+    /// CNN (the workload `exec::tiny` executes functionally):
+    ///
+    /// ```
+    /// use fastoverlapim::prelude::*;
+    /// use fastoverlapim::workload::zoo;
+    ///
+    /// let arch = Arch::dram_pim_small();
+    /// let net = zoo::tiny_cnn();
+    /// let layer = &net.layers[net.chain()[0]];
+    /// let cfg = MapperConfig { budget: 16, seed: 7, ..Default::default() };
+    /// let mut mapper = Mapper::new(&arch, cfg);
+    ///
+    /// let best = mapper.search_layer(layer, &[]).expect("a valid mapping");
+    /// assert!(best.mapping.validate(&arch, layer).is_ok());
+    /// assert!(best.stats.latency_cycles > 0);
+    /// // Without neighbors the score IS the sequential latency.
+    /// assert_eq!(best.score, best.stats.latency_cycles);
+    /// ```
     pub fn search_layer(
         &mut self,
         layer: &Layer,
@@ -614,9 +1044,14 @@ pub struct NetworkPlan {
     pub wallclock: Duration,
     /// Valid mappings evaluated in total.
     pub mappings_evaluated: usize,
-    /// Overlap-memoizer hits during this run (0 when the cache is off).
+    /// Analysis-memoizer hits during this run, both tables (0 when the
+    /// cache is off). Under the pipelined baseline matrix the concurrent
+    /// metric jobs share one cache, so per-plan attribution is
+    /// approximate there — query [`NetworkSearch::cache_stats`] for exact
+    /// batch-level counters.
     pub cache_hits: u64,
-    /// Overlap-memoizer misses during this run (0 when the cache is off).
+    /// Analysis-memoizer misses during this run (same attribution caveat
+    /// as `cache_hits`).
     pub cache_misses: u64,
 }
 
@@ -634,8 +1069,10 @@ pub struct NetworkSearch<'a> {
     pub arch: &'a Arch,
     pub config: MapperConfig,
     pub strategy: SearchStrategy,
-    /// Overlap memoizer shared by every metric run of this searcher (the
-    /// fixed-neighbor pairs recur across the baseline matrix).
+    /// Analysis memoizer (ready-times + transform tables) shared by every
+    /// metric run of this searcher — concurrent pipelined jobs included:
+    /// the fixed-neighbor pairs recur across the baseline matrix, and the
+    /// chosen pairs recur across warm replays.
     cache: Option<Arc<OverlapCache>>,
 }
 
@@ -665,7 +1102,53 @@ impl<'a> NetworkSearch<'a> {
 
     /// Run the whole-network search under `metric`, producing the mapping
     /// set for that metric with all three totals evaluated on it.
+    ///
+    /// With [`MapperConfig::lookahead`] enabled (and no deadline), a
+    /// speculative thread enumerates each upcoming layer's candidates
+    /// while the current layer is being scored; the plan is bit-identical
+    /// either way.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastoverlapim::prelude::*;
+    /// use fastoverlapim::workload::zoo;
+    ///
+    /// let arch = Arch::dram_pim_small();
+    /// let net = zoo::tiny_cnn();
+    /// let cfg = MapperConfig { budget: 12, seed: 5, refine_passes: 0, ..Default::default() };
+    /// let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+    ///     .run(&net, Metric::Overlap);
+    ///
+    /// assert_eq!(plan.layers.len(), net.chain().len());
+    /// // Every chain layer hides some (possibly zero) latency behind its
+    /// // producer, so the overlapped total never exceeds the sequential.
+    /// assert!(plan.total_overlapped <= plan.total_sequential);
+    /// ```
     pub fn run(&self, net: &Network, metric: Metric) -> NetworkPlan {
+        let lookahead = self.config.lookahead && self.config.sharing_active();
+        if lookahead {
+            // A batch of one: the store is purely the hand-off buffer
+            // between the look-ahead thread and this run's own loop.
+            let shared = SharedCandidates {
+                store: CandidateStore::new(),
+                sweep_consumers: 1,
+                refine_consumers: 1,
+            };
+            self.run_shared(net, metric, Some(&shared))
+        } else {
+            self.run_shared(net, metric, None)
+        }
+    }
+
+    /// One whole-network pass under `metric`, optionally drawing candidate
+    /// enumerations from (and speculatively feeding) a shared store.
+    fn run_shared(
+        &self,
+        net: &Network,
+        metric: Metric,
+        shared: Option<&SharedCandidates>,
+    ) -> NetworkPlan {
         let started = Instant::now();
         let (hits0, misses0) = self
             .cache
@@ -706,82 +1189,158 @@ impl<'a> NetworkSearch<'a> {
             }
         };
 
-        let mut mappings_evaluated = 0;
-        for (pos, neighbor) in order {
-            let layer = &net.layers[chain[pos]];
-            let best = {
-                let mut ctxs = Vec::new();
-                if let Some((npos, role)) = neighbor {
-                    let n = plans[npos].as_ref().expect("neighbor searched first");
-                    ctxs.push(PairContext {
-                        role,
-                        layer: &net.layers[chain[npos]],
-                        mapping: &n.mapping,
-                        stats: &n.stats,
-                    });
+        // The whole call schedule — (net layer index, base seed) per
+        // search call — is known before the sweep starts: seeds come from
+        // the deterministic per-call stream (exactly the draws
+        // `search_layer_with` would make), the layer sequence from `order`
+        // plus the refinement passes. Precomputing it is what lets the
+        // look-ahead enumerate a future call early, and what lets
+        // concurrent metric jobs agree on shared keys.
+        let sweep_calls = order.len();
+        let mut seed_stream = SplitMix64::new(self.config.seed);
+        let mut calls: Vec<(usize, u64)> = Vec::new();
+        for &(pos, _) in &order {
+            calls.push((chain[pos], seed_stream.next_u64()));
+        }
+        if metric != Metric::Sequential {
+            for _pass in 0..self.config.refine_passes {
+                for pos in 0..chain.len() {
+                    calls.push((chain[pos], seed_stream.next_u64()));
                 }
-                mapper.search_layer_with(metric, layer, &ctxs)
-            };
-            mappings_evaluated += mapper.last_evaluated;
-            let best = best.unwrap_or_else(|| {
-                panic!("no valid mapping for layer `{}` within budget", layer.name)
-            });
-            plans[pos] = Some(best);
+            }
         }
 
-        // Refinement passes (coordinate descent, §IV-J extension): each
-        // layer is re-searched with BOTH neighbors fixed, accepting the
-        // new mapping only when its locally-attributable contribution
-        // improves. This recovers the pairs the greedy one-directional
-        // sweep sacrifices (every chain layer is both a consumer and a
-        // producer, but the sweep only optimizes one side of it).
-        for _pass in 0..self.config.refine_passes {
-            if metric == Metric::Sequential {
-                break; // nothing pair-dependent to refine
-            }
-            for pos in 0..chain.len() {
+        let mut mappings_evaluated = 0;
+        std::thread::scope(|scope| {
+            // Speculative look-ahead: start enumerating the NEXT call's
+            // candidates while this call's are being scored and reduced.
+            // Enumeration needs only (layer, seed) — never the running
+            // sweep's winners — so speculation cannot change any result;
+            // the store's once-cell hands the set over, or dedups the race
+            // if the main loop gets there first.
+            let prefetch_next = |call: usize| {
+                let Some(sh) = shared else { return };
+                if !self.config.lookahead {
+                    return;
+                }
+                let Some(&(li, seed)) = calls.get(call + 1) else { return };
+                if !self.config.sharing_active() {
+                    return;
+                }
+                let budget = self.config.budget as u64;
+                let consumers = if call + 1 < sweep_calls {
+                    sh.sweep_consumers
+                } else {
+                    sh.refine_consumers
+                };
+                let threads = self.config.threads;
+                let layer = &net.layers[li];
+                let constraint = self.config.constraint.clone();
+                let ms_cfg = self.config.mapspace.clone();
+                let arch = self.arch;
+                let store = &sh.store;
+                scope.spawn(move || {
+                    let key = CandKey { seed, layer: layer.fingerprint() };
+                    store.prefetch(key, consumers, || {
+                        enumerate_candidates(
+                            arch,
+                            layer,
+                            &constraint,
+                            &ms_cfg,
+                            budget,
+                            seed,
+                            threads,
+                        )
+                    });
+                });
+            };
+
+            for (call, &(pos, neighbor)) in order.iter().enumerate() {
+                prefetch_next(call);
                 let layer = &net.layers[chain[pos]];
-                let mut ctxs = Vec::new();
-                if pos > 0 {
-                    let n = plans[pos - 1].as_ref().unwrap();
-                    ctxs.push(PairContext {
-                        role: NeighborRole::Producer,
-                        layer: &net.layers[chain[pos - 1]],
-                        mapping: &n.mapping,
-                        stats: &n.stats,
-                    });
-                }
-                if pos + 1 < chain.len() {
-                    let n = plans[pos + 1].as_ref().unwrap();
-                    ctxs.push(PairContext {
-                        role: NeighborRole::Consumer,
-                        layer: &net.layers[chain[pos + 1]],
-                        mapping: &n.mapping,
-                        stats: &n.stats,
-                    });
-                }
-                // Score the incumbent under the same two-sided objective,
-                // then accept the re-search winner only if strictly better.
-                let incumbent = plans[pos].as_ref().unwrap();
-                // Incumbent pairs are between chosen mappings and recur
-                // across passes and the final evaluation: worth storing.
-                let (inc_score, _, _) = mapper.score(
-                    metric,
-                    layer,
-                    &incumbent.mapping,
-                    &incumbent.stats,
-                    &ctxs,
-                    true,
-                );
-                let challenger = mapper.search_layer_with(metric, layer, &ctxs);
-                mappings_evaluated += mapper.last_evaluated;
-                if let Some(c) = challenger {
-                    if c.score < inc_score {
-                        plans[pos] = Some(c);
+                let share = shared.map(|sh| (&sh.store, sh.sweep_consumers));
+                let best = {
+                    let mut ctxs = Vec::new();
+                    if let Some((npos, role)) = neighbor {
+                        let n = plans[npos].as_ref().expect("neighbor searched first");
+                        ctxs.push(PairContext {
+                            role,
+                            layer: &net.layers[chain[npos]],
+                            mapping: &n.mapping,
+                            stats: &n.stats,
+                        });
                     }
+                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
+                };
+                mappings_evaluated += mapper.last_evaluated;
+                let best = best.unwrap_or_else(|| {
+                    panic!("no valid mapping for layer `{}` within budget", layer.name)
+                });
+                plans[pos] = Some(best);
+            }
+
+            // Refinement passes (coordinate descent, §IV-J extension):
+            // each layer is re-searched with BOTH neighbors fixed,
+            // accepting the new mapping only when its locally-attributable
+            // contribution improves. This recovers the pairs the greedy
+            // one-directional sweep sacrifices (every chain layer is both
+            // a consumer and a producer, but the sweep only optimizes one
+            // side of it).
+            let mut call = sweep_calls;
+            for _pass in 0..self.config.refine_passes {
+                if metric == Metric::Sequential {
+                    break; // nothing pair-dependent to refine
+                }
+                for pos in 0..chain.len() {
+                    prefetch_next(call);
+                    let layer = &net.layers[chain[pos]];
+                    let mut ctxs = Vec::new();
+                    if pos > 0 {
+                        let n = plans[pos - 1].as_ref().unwrap();
+                        ctxs.push(PairContext {
+                            role: NeighborRole::Producer,
+                            layer: &net.layers[chain[pos - 1]],
+                            mapping: &n.mapping,
+                            stats: &n.stats,
+                        });
+                    }
+                    if pos + 1 < chain.len() {
+                        let n = plans[pos + 1].as_ref().unwrap();
+                        ctxs.push(PairContext {
+                            role: NeighborRole::Consumer,
+                            layer: &net.layers[chain[pos + 1]],
+                            mapping: &n.mapping,
+                            stats: &n.stats,
+                        });
+                    }
+                    // Score the incumbent under the same two-sided
+                    // objective, then accept the re-search winner only if
+                    // strictly better.
+                    let incumbent = plans[pos].as_ref().unwrap();
+                    // Incumbent pairs are between chosen mappings and
+                    // recur across passes and the final evaluation: worth
+                    // storing.
+                    let (inc_score, _, _) = mapper.score(
+                        metric,
+                        layer,
+                        &incumbent.mapping,
+                        &incumbent.stats,
+                        &ctxs,
+                        true,
+                    );
+                    let share = shared.map(|sh| (&sh.store, sh.refine_consumers));
+                    let challenger =
+                        mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
+                    mappings_evaluated += mapper.last_evaluated;
+                    if let Some(c) = challenger {
+                        if c.score < inc_score {
+                            plans[pos] = Some(c);
+                        }
+                    }
+                    call += 1;
                 }
             }
-        }
+        });
 
         // Final forward evaluation pass: regardless of how the sweep
         // visited layers, the *reported* pair numbers are producer→consumer
@@ -804,7 +1363,9 @@ impl<'a> NetworkSearch<'a> {
                 );
                 let ready = mapper.ready_times(&pair, true);
                 let ov = overlapped_latency(&prev.stats, &em.stats, &ready);
-                let tr = transform_schedule(&pair, &self.config.transform);
+                // Chosen pairs recur (warm replays, the sibling metric
+                // jobs' final passes): store their transform jobs too.
+                let tr = mapper.transform_result(&pair, true);
                 (Some(ov), Some(tr))
             };
             layer_plans.push(LayerPlan {
@@ -838,16 +1399,128 @@ impl<'a> NetworkSearch<'a> {
         plan
     }
 
-    /// Run every baseline variant needed by the overall-comparison figures:
-    /// returns (sequential-metric plan, overlap-metric plan,
-    /// transform-metric plan).
-    pub fn run_all_metrics(&self, net: &Network) -> (NetworkPlan, NetworkPlan, NetworkPlan) {
-        (
-            self.run(net, Metric::Sequential),
-            self.run(net, Metric::Overlap),
-            self.run(net, Metric::Transform),
-        )
+    /// Run the whole-network search once per metric in `metrics`,
+    /// returning the plans in the same order.
+    ///
+    /// With [`MapperConfig::pipeline`] enabled (and no deadline) the
+    /// metric sweeps run as concurrent jobs sharing one candidate
+    /// enumeration per `(seed, layer)` call — every metric draws the
+    /// identical candidate sequence, so the sets are generated once and
+    /// scored once per metric. Plans are **bit-identical to the serial
+    /// path**: sharing hands over pure values, and each job's sweep logic
+    /// is exactly [`NetworkSearch::run`]'s. Wall-clock, and the hit/miss
+    /// attribution of the shared cache to individual plans, are the only
+    /// observable differences.
+    ///
+    /// [`MapperConfig::threads`] is divided among the concurrent jobs
+    /// (min 1 each), so it keeps meaning "total scoring workers" in both
+    /// modes.
+    pub fn run_metrics(&self, net: &Network, metrics: &[Metric]) -> Vec<NetworkPlan> {
+        if metrics.len() <= 1 || !self.config.pipeline || self.config.deadline.is_some() {
+            // Serial reference path: one full-network pass per metric, in
+            // order. This is the path the pipelined engine must match bit
+            // for bit — and the only sound one under a per-layer
+            // wall-clock deadline, where concurrent jobs would contend for
+            // the very cores the deadline meters.
+            return metrics.iter().map(|&m| self.run(net, m)).collect();
+        }
+        let shared = SharedCandidates {
+            store: CandidateStore::new(),
+            sweep_consumers: metrics.len() as u32,
+            // Sequential-metric jobs skip refinement (nothing
+            // pair-dependent to refine), so refinement-phase entries have
+            // fewer consumers.
+            refine_consumers: metrics.iter().filter(|&&m| m != Metric::Sequential).count() as u32,
+        };
+        // Divide the configured worker budget among the concurrent jobs so
+        // `threads` keeps meaning "total scoring workers", not "workers
+        // per job" — N jobs at full width would oversubscribe the very
+        // cores the pipeline exploits. The remainder goes to the LAST
+        // jobs: callers order metrics cheap-to-expensive (Sequential
+        // before Transform), and the expensive sweeps gate the batch.
+        // Thread count never affects results, only wall-clock.
+        let n_jobs = metrics.len();
+        let (base_threads, extra_threads) =
+            (self.config.threads / n_jobs, self.config.threads % n_jobs);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = metrics
+                .iter()
+                .enumerate()
+                .map(|(j, &m)| {
+                    let sh = &shared;
+                    let per_job =
+                        (base_threads + usize::from(n_jobs - 1 - j < extra_threads)).max(1);
+                    s.spawn(move || {
+                        let mut cfg = self.config.clone();
+                        cfg.threads = per_job;
+                        let job = NetworkSearch {
+                            arch: self.arch,
+                            config: cfg,
+                            strategy: self.strategy,
+                            cache: self.cache.clone(),
+                        };
+                        job.run_shared(net, m, Some(sh))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("metric job panicked"))
+                .collect()
+        })
     }
+
+    /// Run every baseline variant needed by the overall-comparison figures
+    /// (pipelined when [`MapperConfig::pipeline`] is set): returns
+    /// (sequential-metric plan, overlap-metric plan, transform-metric
+    /// plan).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastoverlapim::prelude::*;
+    /// use fastoverlapim::workload::zoo;
+    ///
+    /// let arch = Arch::dram_pim_small();
+    /// let net = zoo::tiny_cnn();
+    /// let cfg = MapperConfig { budget: 10, seed: 2, refine_passes: 0, ..Default::default() };
+    /// let search = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward);
+    /// let (seq, ov, tr) = search.run_all_metrics(&net);
+    ///
+    /// // Each plan reports all three totals evaluated on its mapping set.
+    /// for plan in [&seq, &ov, &tr] {
+    ///     assert_eq!(plan.layers.len(), net.chain().len());
+    ///     assert!(plan.total_sequential > 0);
+    /// }
+    /// ```
+    pub fn run_all_metrics(&self, net: &Network) -> (NetworkPlan, NetworkPlan, NetworkPlan) {
+        let mut plans = self
+            .run_metrics(net, &[Metric::Sequential, Metric::Overlap, Metric::Transform])
+            .into_iter();
+        let seq = plans.next().expect("sequential plan");
+        let ov = plans.next().expect("overlap plan");
+        let tr = plans.next().expect("transform plan");
+        (seq, ov, tr)
+    }
+
+    /// Split counters of this searcher's shared analysis memoizer, both
+    /// tables, cumulative across every run it has performed (zeros when
+    /// the cache is disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map_or_else(CacheStats::default, |c| c.stats())
+    }
+}
+
+/// Cross-metric shared state of one pipelined [`NetworkSearch::run_metrics`]
+/// batch: the candidate store plus how many metric jobs will consume each
+/// phase's entries (the consumer counts bound the store's live window —
+/// see [`CandidateStore::fetch`]).
+struct SharedCandidates {
+    store: CandidateStore,
+    /// Jobs consuming each directional-sweep entry (all of them).
+    sweep_consumers: u32,
+    /// Jobs consuming each refinement-pass entry (the pair-aware ones).
+    refine_consumers: u32,
 }
 
 /// Resolve an [`Algorithm`]'s reported total from the three metric plans.
@@ -1025,6 +1698,79 @@ mod tests {
         let again = search.run(&net, Metric::Overlap);
         assert_eq!(first.total_overlapped, again.total_overlapped);
         assert!(again.cache_hits > 0, "warm replay must hit stored pairs");
+    }
+
+    #[test]
+    fn candidate_store_counts_consumers_and_tombstones() {
+        let arch = Arch::dram_pim_small();
+        let layer = Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1);
+        let cfg = MapSpaceConfig::default();
+        let constraint = MappingConstraint::default();
+        let store = CandidateStore::new();
+        let key = CandKey { seed: 99, layer: layer.fingerprint() };
+        let enumerate = || enumerate_candidates(&arch, &layer, &constraint, &cfg, 8, 99, 1);
+        // Prefetch computes without consuming.
+        store.prefetch(key, 2, enumerate);
+        assert_eq!(store.len(), 1);
+        // First consumer: a hit on the prefetched entry.
+        let a = store.fetch(key, 2, || panic!("prefetched entry must be reused"));
+        assert_eq!(store.len(), 1);
+        // Second (last) consumer drains the entry.
+        let b = store.fetch(key, 2, || panic!("entry must still be live"));
+        assert_eq!(store.len(), 0, "last consumer must drop the entry");
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        // A late prefetch of a drained key must not resurrect it.
+        store.prefetch(key, 2, || panic!("tombstoned key must not recompute"));
+        assert_eq!(store.len(), 0);
+        // The enumeration itself matches a direct one, index for index.
+        let direct = enumerate();
+        for (x, y) in a.candidates.iter().zip(&direct.candidates) {
+            assert_eq!(
+                x.as_ref().map(|(m, _)| m),
+                y.as_ref().map(|(m, _)| m),
+                "stored and direct enumerations must agree"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_matrix_matches_serial_matrix() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let mut serial_cfg = tiny_config(14, 8);
+        serial_cfg.pipeline = false;
+        serial_cfg.lookahead = false;
+        let mut pipe_cfg = tiny_config(14, 8);
+        pipe_cfg.pipeline = true;
+        pipe_cfg.lookahead = true;
+        let (s_seq, s_ov, s_tr) =
+            NetworkSearch::new(&arch, serial_cfg, SearchStrategy::Forward).run_all_metrics(&net);
+        let (p_seq, p_ov, p_tr) =
+            NetworkSearch::new(&arch, pipe_cfg, SearchStrategy::Forward).run_all_metrics(&net);
+        for (s, p) in [(&s_seq, &p_seq), (&s_ov, &p_ov), (&s_tr, &p_tr)] {
+            assert_eq!(s.total_sequential, p.total_sequential, "{:?}", s.metric);
+            assert_eq!(s.total_overlapped, p.total_overlapped, "{:?}", s.metric);
+            assert_eq!(s.total_transformed, p.total_transformed, "{:?}", s.metric);
+            assert_eq!(s.mappings_evaluated, p.mappings_evaluated, "{:?}", s.metric);
+        }
+    }
+
+    #[test]
+    fn run_metrics_preserves_order_and_agrees_with_solo_runs() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let search = NetworkSearch::new(&arch, tiny_config(10, 4), SearchStrategy::Forward);
+        let plans = search.run_metrics(&net, &[Metric::Transform, Metric::Sequential]);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].metric, Metric::Transform);
+        assert_eq!(plans[1].metric, Metric::Sequential);
+        // A subset batch must agree with solo runs of the same searcher
+        // config (fresh searcher to reset the warm cache is not required
+        // for equality — results are cache-independent).
+        let solo = NetworkSearch::new(&arch, tiny_config(10, 4), SearchStrategy::Forward)
+            .run(&net, Metric::Transform);
+        assert_eq!(plans[0].total_transformed, solo.total_transformed);
+        assert!(search.run_metrics(&net, &[]).is_empty());
     }
 
     #[test]

@@ -4,6 +4,15 @@
 //! so the usual suspects (rand, serde, clap, proptest, criterion) are
 //! replaced by minimal in-tree implementations that cover exactly what the
 //! framework needs.
+//!
+//! Role in the search engine: [`rng::SplitMix64`]'s stream splitting is
+//! the purity foundation of every determinism guarantee upstream (thread
+//! sharding, candidate sharing, speculative look-ahead all replay the
+//! same indexed draws); [`Fnv64`] provides the platform-stable
+//! fingerprints the analysis memoizer keys on; [`cli`] plumbs the search
+//! configuration — including the `--threads`/`--cache`/`--pipeline`/
+//! `--lookahead` engine knobs — into the `repro` binary and the figure
+//! benches.
 
 pub mod cli;
 pub mod error;

@@ -1,16 +1,30 @@
-//! Determinism and equivalence guarantees of the parallel search engine:
+//! Determinism and equivalence guarantees of the parallel and pipelined
+//! search engine:
 //!
 //! * a fixed seed produces the exact same `NetworkPlan` — mappings and
 //!   totals — at 1, 2 and 8 threads (sharded SplitMix64 candidate streams
 //!   make every candidate a pure function of `(seed, index)`);
-//! * the overlap-analysis memoization cache is observationally transparent
-//!   (cache-on ≡ cache-off), while actually being exercised (hits > 0).
+//! * the pipelined multi-metric engine (concurrent metric jobs, shared
+//!   candidate enumeration, speculative look-ahead) is bit-identical to
+//!   the serial three-pass baseline matrix at every thread count;
+//! * both memoization tables — ready times and transform per-job ready
+//!   queries — are observationally transparent (cache-on ≡ cache-off),
+//!   while actually being exercised (hits > 0 on warm replays).
 
 use fastoverlapim::prelude::*;
 use fastoverlapim::workload::zoo;
 
 fn cfg(budget: usize, seed: u64, threads: usize, cache: bool) -> MapperConfig {
     MapperConfig { budget, seed, threads, cache, refine_passes: 1, ..Default::default() }
+}
+
+/// The serial reference configuration: no concurrent metric jobs, no
+/// shared enumeration, no speculation — the legacy fused path.
+fn serial_cfg(budget: usize, seed: u64, threads: usize, cache: bool) -> MapperConfig {
+    let mut c = cfg(budget, seed, threads, cache);
+    c.pipeline = false;
+    c.lookahead = false;
+    c
 }
 
 fn assert_plans_identical(a: &NetworkPlan, b: &NetworkPlan, what: &str) {
@@ -23,6 +37,7 @@ fn assert_plans_identical(a: &NetworkPlan, b: &NetworkPlan, what: &str) {
         assert_eq!(x.mapping, y.mapping, "{what}: mapping of `{}`", x.name);
         assert_eq!(x.stats, y.stats, "{what}: stats of `{}`", x.name);
         assert_eq!(x.overlap, y.overlap, "{what}: overlap of `{}`", x.name);
+        assert_eq!(x.transform, y.transform, "{what}: transform of `{}`", x.name);
     }
 }
 
@@ -85,4 +100,102 @@ fn shared_cache_warms_across_metric_runs() {
     assert_eq!(first.total_overlapped, again.total_overlapped);
     assert!(again.cache_hits >= first.cache_hits, "warm run should hit at least as much");
     assert!(again.cache_misses <= first.cache_misses, "warm run should miss less");
+}
+
+// ---------------------------------------------------------------------------
+// Pipelined multi-metric engine.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipelined_matrix_bit_identical_to_serial_at_1_2_4_and_8_threads() {
+    // The acceptance bar of the pipelined engine: at every thread count,
+    // running the three metric sweeps as concurrent jobs over the shared
+    // candidate store (with speculative look-ahead) must reproduce the
+    // serial three-pass plans exactly — mappings, stats, pair results,
+    // totals and evaluated-candidate counts.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    for threads in [1usize, 2, 4, 8] {
+        let serial =
+            NetworkSearch::new(&arch, serial_cfg(16, 11, threads, true), SearchStrategy::Forward);
+        let pipelined =
+            NetworkSearch::new(&arch, cfg(16, 11, threads, true), SearchStrategy::Forward);
+        let (s_seq, s_ov, s_tr) = serial.run_all_metrics(&net);
+        let (p_seq, p_ov, p_tr) = pipelined.run_all_metrics(&net);
+        assert_plans_identical(&s_seq, &p_seq, &format!("{threads}t sequential"));
+        assert_plans_identical(&s_ov, &p_ov, &format!("{threads}t overlap"));
+        assert_plans_identical(&s_tr, &p_tr, &format!("{threads}t transform"));
+    }
+}
+
+#[test]
+fn pipelined_matrix_holds_for_every_strategy() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    for strat in [
+        SearchStrategy::Forward,
+        SearchStrategy::Backward,
+        SearchStrategy::Middle(MiddleHeuristic::LargestOutput),
+    ] {
+        let (s_seq, s_ov, s_tr) =
+            NetworkSearch::new(&arch, serial_cfg(10, 6, 2, true), strat).run_all_metrics(&net);
+        let (p_seq, p_ov, p_tr) =
+            NetworkSearch::new(&arch, cfg(10, 6, 2, true), strat).run_all_metrics(&net);
+        assert_plans_identical(&s_seq, &p_seq, &format!("{strat:?} sequential"));
+        assert_plans_identical(&s_ov, &p_ov, &format!("{strat:?} overlap"));
+        assert_plans_identical(&s_tr, &p_tr, &format!("{strat:?} transform"));
+    }
+}
+
+#[test]
+fn lookahead_and_sharing_do_not_change_solo_plans() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let with = NetworkSearch::new(&arch, cfg(18, 2, 2, true), SearchStrategy::Forward)
+        .run(&net, Metric::Transform);
+    let without = NetworkSearch::new(&arch, serial_cfg(18, 2, 2, true), SearchStrategy::Forward)
+        .run(&net, Metric::Transform);
+    assert_plans_identical(&with, &without, "lookahead on vs off");
+}
+
+// ---------------------------------------------------------------------------
+// Transform-table memoization.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transform_metric_plans_identical_with_cache_on_and_off() {
+    // The transform memo table joins the ready-times table on the
+    // Transform-metric hot path; toggling the cache must not change the
+    // plan in any way.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let cached = NetworkSearch::new(&arch, cfg(18, 13, 2, true), SearchStrategy::Forward)
+        .run(&net, Metric::Transform);
+    let uncached = NetworkSearch::new(&arch, cfg(18, 13, 2, false), SearchStrategy::Forward)
+        .run(&net, Metric::Transform);
+    assert_plans_identical(&cached, &uncached, "transform memo on vs off");
+}
+
+#[test]
+fn transform_table_hits_on_warm_replay() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let search = NetworkSearch::new(&arch, cfg(15, 9, 2, true), SearchStrategy::Forward);
+    let first = search.run(&net, Metric::Transform);
+    let cold = search.cache_stats();
+    // The final evaluation pass stores each chosen pair's job queries, so
+    // a Transform-metric run must populate the table...
+    assert!(cold.transform_misses > 0, "run must populate the transform table");
+    // ...and a deterministic warm replay must hit those entries: the
+    // second run's incumbent re-scores and final pass query exactly the
+    // pairs the first run stored.
+    let again = search.run(&net, Metric::Transform);
+    let warm = search.cache_stats();
+    assert_eq!(first.total_transformed, again.total_transformed);
+    assert!(
+        warm.transform_hits > cold.transform_hits,
+        "warm replay must hit the transform table: {warm:?} vs {cold:?}"
+    );
+    // The ready-times table keeps working alongside the new one.
+    assert!(warm.ready_hits > 0, "ready-times table must also be exercised");
 }
