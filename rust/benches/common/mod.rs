@@ -9,6 +9,10 @@
 //! * `FOPIM_MM_BUDGET` — fig14's pipelined multi-metric matrix budget
 //! * `FOPIM_CSV`       — also print CSV blocks when set
 
+// Each figure bench is its own binary including this module; none uses
+// every helper, so unused-item lints are expected and suppressed here.
+#![allow(dead_code)]
+
 use fastoverlapim::prelude::*;
 use fastoverlapim::report::Table;
 use fastoverlapim::search::algorithm_total;
@@ -77,7 +81,12 @@ pub fn run_algorithms(
     refine_passes: usize,
     strategy: SearchStrategy,
 ) -> AlgTotals {
-    let cfg = MapperConfig { budget, seed, refine_passes, ..Default::default() };
+    let cfg = MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed,
+        refine_passes,
+        ..Default::default()
+    };
     let search = NetworkSearch::new(arch, cfg, strategy);
     let (seq_plan, ov_plan, tr_plan) = search.run_all_metrics(net);
     let totals = Algorithm::ALL

@@ -1,0 +1,121 @@
+//! Convergence: best-score-vs-evaluations for the pluggable search
+//! engines — random sampling vs the genetic algorithm vs simulated
+//! annealing / hill-climb — under the Transform metric on VGG-16 and
+//! ResNet-50 (the paper's §V claim restated for our engines: guided
+//! search reaches equal-quality mappings in a fraction of the
+//! evaluations uniform sampling needs; the OverlaPIM baseline the paper
+//! beats is itself GA-based).
+//!
+//! Method: the random sampler runs at the full per-layer budget
+//! (`FOPIM_CONV_BUDGET`, default 64) and sets the quality bar; every
+//! engine then runs the whole-network Transform search at 1/8, 1/4, 1/2
+//! and 1/1 of that budget. The per-engine rows are the convergence curve
+//! (evals/layer → best Transform total); the headline reports the
+//! smallest budget fraction at which a guided engine matches or beats
+//! the random bar (acceptance target: ≤ 25%). All runs are
+//! `Budget::Evaluations` runs — deterministic, thread-count independent,
+//! reproducible from the printed numbers.
+//!
+//! Knobs: `FOPIM_CONV_BUDGET` (full budget), `FOPIM_SEED`,
+//! `FOPIM_THREADS`, `FOPIM_CONV_NETS=vgg16,resnet50`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::{cycles, Table};
+use fastoverlapim::workload::zoo;
+
+fn plan_total(arch: &Arch, net: &Network, algo: SearchAlgo, budget: usize, threads: usize) -> u64 {
+    let mut cfg = MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed: common::seed(),
+        refine_passes: 0,
+        threads,
+        ..Default::default()
+    };
+    cfg.algo = algo;
+    // Population scales with the budget so even the smallest fraction
+    // gets a couple of generations of guided edits.
+    cfg.optimize.population = (budget / 4).clamp(4, 16);
+    NetworkSearch::new(arch, cfg, SearchStrategy::Forward)
+        .run(net, Metric::Transform)
+        .total_transformed
+}
+
+fn main() {
+    common::header(
+        "Convergence",
+        "best Transform score vs evaluation budget: random vs GA vs SA vs hill-climb",
+    );
+    let arch = Arch::dram_pim();
+    let full = common::env_u64("FOPIM_CONV_BUDGET", 64).max(8) as usize;
+    let threads = common::env_u64("FOPIM_THREADS", 8) as usize;
+    let nets_knob =
+        std::env::var("FOPIM_CONV_NETS").unwrap_or_else(|_| "vgg16,resnet50".to_string());
+    let algos = [SearchAlgo::Genetic, SearchAlgo::Annealing, SearchAlgo::HillClimb];
+    let budgets: Vec<usize> =
+        [full / 8, full / 4, full / 2, full].into_iter().filter(|&b| b >= 4).collect();
+
+    for name in nets_knob.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let net = zoo::by_name(name).unwrap_or_else(|| panic!("unknown zoo net `{name}`"));
+        // The quality bar: uniform random sampling at the full budget.
+        let bar = plan_total(&arch, &net, SearchAlgo::Random, full, threads);
+        let mut t = Table::new(
+            &format!(
+                "{} — Transform-metric total vs evals/layer (random bar: {} @ {full})",
+                net.name,
+                cycles(bar)
+            ),
+            &["algo", "evals/layer", "Best Transform", "vs random bar"],
+        );
+        let mut matched: Vec<(SearchAlgo, Option<usize>)> = Vec::new();
+        for algo in algos {
+            let mut first_match: Option<usize> = None;
+            for &b in &budgets {
+                let total = plan_total(&arch, &net, algo, b, threads);
+                if total <= bar && first_match.is_none() {
+                    first_match = Some(b);
+                }
+                t.row(vec![
+                    algo.name().to_string(),
+                    b.to_string(),
+                    cycles(total),
+                    format!("{:.3}x", total as f64 / bar.max(1) as f64),
+                ]);
+            }
+            matched.push((algo, first_match));
+        }
+        println!("{}", t.render());
+        common::maybe_csv(&t);
+        for (algo, m) in &matched {
+            match m {
+                Some(b) => println!(
+                    "{}: {} reaches the random sampler's best with {b}/{full} evals/layer \
+                     ({:.0}% of the budget; target <= 25%)",
+                    net.name,
+                    algo.name(),
+                    *b as f64 / full as f64 * 100.0
+                ),
+                None => println!(
+                    "{}: {} did not reach the random bar within {full} evals/layer",
+                    net.name,
+                    algo.name()
+                ),
+            }
+        }
+        let best_frac = matched
+            .iter()
+            .filter_map(|(_, m)| *m)
+            .min()
+            .map(|b| b as f64 / full as f64 * 100.0);
+        match best_frac {
+            Some(pct) => println!(
+                "{}: best guided engine matched the random bar at {pct:.0}% of its budget\n",
+                net.name
+            ),
+            None => println!("{}: no guided engine matched the random bar\n", net.name),
+        }
+    }
+    println!("convergence OK");
+}

@@ -23,7 +23,7 @@ fn main() {
     let budget = common::budget(80);
     for net in [zoo::resnet18(), zoo::vgg16()] {
         let cfg = MapperConfig {
-            budget,
+            budget: Budget::Evaluations(budget),
             seed: common::seed(),
             refine_passes: 0, // Best Original: no pair-aware search at all
             ..Default::default()

@@ -1,127 +1,170 @@
-//! Fig. 11: OverlaPIM vs Fast-OverlaPIM at *equal wall-clock runtime*.
+//! Fig. 11: OverlaPIM vs Fast-OverlaPIM at *equal effort*.
 //!
-//! Both tools get the same per-layer deadline. OverlaPIM spends it on the
-//! exhaustive O(N·M) data-space comparison, so it explores far fewer
-//! mappings; Fast-OverlaPIM's analytical analysis converts the same time
-//! into search breadth. Expected shape (paper): Fast-OverlaPIM's Best
-//! Original already beats OverlaPIM's (7.6x/15.1x more search), and Best
-//! Transform compounds it; ResNet-50 is only *feasible* with the
-//! analytical engine.
+//! Both tools historically got the same per-layer wall-clock deadline —
+//! OverlaPIM spends it on the exhaustive O(N·M) data-space comparison, so
+//! it explores far fewer mappings; Fast-OverlaPIM's analytical analysis
+//! converts the same time into search breadth. A raw deadline is
+//! timing-dependent by construction, so this bench now routes the
+//! comparison through `Budget::Calibrated`: each engine's deadline is
+//! converted ONCE into a fixed per-layer evaluation budget by a small
+//! calibration probe (`calibrate_budget`), the resolved budgets are
+//! printed, and the runs themselves are plain `Budget::Evaluations` runs —
+//! reproducible bit-for-bit given the printed budgets (pin them with
+//! `FOPIM_FIG11_EVALS_EXH` / `FOPIM_FIG11_EVALS_ANA` for exact replay),
+//! and free to use the pipelined multi-metric engine.
+//!
+//! Expected shape (paper): Fast-OverlaPIM's Best Original already beats
+//! OverlaPIM's (7.6x/15.1x more search), and Best Transform compounds it;
+//! ResNet-50 is only *feasible* with the analytical engine.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use fastoverlapim::prelude::*;
 use fastoverlapim::report::{cycles, speedup, Table};
+use fastoverlapim::search::calibrate_budget;
 use fastoverlapim::workload::zoo;
 use std::time::Duration;
 
-fn run(
-    arch: &Arch,
-    net: &Network,
-    engine: AnalysisEngine,
-    deadline: Duration,
-) -> (u64, u64, usize) {
+fn engine_config(engine: AnalysisEngine, target: Duration) -> MapperConfig {
     let mut cfg = MapperConfig {
-        budget: usize::MAX / 2,
-        deadline: Some(deadline),
+        budget: Budget::Calibrated {
+            target,
+            probe_draws: common::env_u64("FOPIM_PROBE", 16) as usize,
+        },
         seed: common::seed(),
         refine_passes: 0,
         engine,
         ..Default::default()
     };
     // Modest probe count for BOTH engines so a single exhaustive pair
-    // evaluation cannot blow past the deadline by minutes (the deadline is
-    // checked between evaluations). Identical probing keeps the
-    // comparison fair.
+    // evaluation cannot dominate the calibration probe by minutes.
+    // Identical probing keeps the comparison fair.
     cfg.overlap = fastoverlapim::overlap::OverlapConfig { max_probe_steps: 256 };
+    cfg
+}
+
+/// Resolve this engine's equal-time evaluation budget for `net` (or take
+/// the pinned override), then run the Sequential/Transform pair of sweeps
+/// under plain `Budget::Evaluations`.
+fn run(
+    arch: &Arch,
+    net: &Network,
+    engine: AnalysisEngine,
+    target: Duration,
+) -> (u64, u64, usize, usize) {
+    let mut cfg = engine_config(engine, target);
+    let pin_key = match engine {
+        AnalysisEngine::Exhaustive => "FOPIM_FIG11_EVALS_EXH",
+        AnalysisEngine::Analytical => "FOPIM_FIG11_EVALS_ANA",
+    };
+    let evals = match common::env_u64(pin_key, 0) {
+        0 => calibrate_budget(arch, net, &cfg, Metric::Transform),
+        n => n as usize,
+    };
+    cfg.budget = Budget::Evaluations(evals);
     let search = NetworkSearch::new(arch, cfg, SearchStrategy::Forward);
-    // Deadline mode makes `run_metrics` fall back to serial full-network
-    // passes — the only sound interpretation of a per-layer wall-clock
-    // budget, where concurrent jobs would contend for the metered cores —
-    // so this is exactly the two-run reference flow.
     let mut plans = search.run_metrics(net, &[Metric::Sequential, Metric::Transform]).into_iter();
     let seq = plans.next().expect("sequential plan");
     let tr = plans.next().expect("transform plan");
-    // Report the overlap-aware phase's search breadth: the Sequential
-    // phase never runs pair analysis, so both engines explore equally
-    // there; the contrast the paper measures is in the pair-aware search.
-    (seq.total_sequential, tr.total_transformed, tr.mappings_evaluated)
+    (seq.total_sequential, tr.total_transformed, tr.mappings_evaluated, evals)
 }
 
 fn main() {
-    common::header("Fig. 11", "OverlaPIM vs Fast-OverlaPIM at equal runtime");
+    common::header("Fig. 11", "OverlaPIM vs Fast-OverlaPIM at equal effort");
     let arch = Arch::dram_pim();
-    let deadline = Duration::from_millis(common::env_u64("FOPIM_DEADLINE_MS", 80));
-    println!("per-layer deadline: {deadline:?} per metric\n");
+    let target = Duration::from_millis(common::env_u64("FOPIM_DEADLINE_MS", 80));
+    println!(
+        "per-layer wall-clock target: {target:?} per metric, probe-calibrated to a fixed\n\
+         evaluation budget per engine (reproducible; pin with FOPIM_FIG11_EVALS_*)\n"
+    );
+    let mut r18_analytical_evals = 0usize;
     for net in [zoo::resnet18(), zoo::vgg16()] {
-        let (o_seq, o_tr, o_maps) = run(&arch, &net, AnalysisEngine::Exhaustive, deadline);
-        let (f_seq, f_tr, f_maps) = run(&arch, &net, AnalysisEngine::Analytical, deadline);
+        let (o_seq, o_tr, o_maps, o_evals) = run(&arch, &net, AnalysisEngine::Exhaustive, target);
+        let (f_seq, f_tr, f_maps, f_evals) = run(&arch, &net, AnalysisEngine::Analytical, target);
+        if r18_analytical_evals == 0 {
+            r18_analytical_evals = f_evals;
+        }
         let mut t = Table::new(
-            &format!("{} — equal-runtime comparison", net.name),
-            &["tool", "Best Original", "Best Transform", "mappings explored"],
+            &format!("{} — equal-effort comparison", net.name),
+            &["tool", "evals/layer", "Best Original", "Best Transform", "mappings explored"],
         );
         t.row(vec![
             "OverlaPIM (exhaustive)".into(),
+            o_evals.to_string(),
             cycles(o_seq),
             cycles(o_tr),
             o_maps.to_string(),
         ]);
         t.row(vec![
             "Fast-OverlaPIM (analytical)".into(),
+            f_evals.to_string(),
             cycles(f_seq),
             cycles(f_tr),
             f_maps.to_string(),
         ]);
         println!("{}", t.render());
         println!(
-            "{}: search breadth {} vs {} mappings ({:.1}x); Best Transform {}\n",
+            "{}: calibrated budgets {} vs {} evals/layer ({:.1}x breadth, {} vs {} \
+             mappings); Best Transform {}\n",
             net.name,
+            f_evals,
+            o_evals,
+            f_evals as f64 / o_evals.max(1) as f64,
             f_maps,
             o_maps,
-            f_maps as f64 / o_maps.max(1) as f64,
             speedup(o_tr, f_tr),
         );
         common::maybe_csv(&t);
     }
     println!(
         "ResNet-50 feasibility: the analytical engine completes its sweep; the exhaustive\n\
-         engine at the same deadline explores so few mappings per layer that whole-network\n\
-         optimization degrades to near-arbitrary mappings (run with FOPIM_DEADLINE_MS to probe)."
+         engine at the same target calibrates to so few evaluations per layer that\n\
+         whole-network optimization degrades to near-arbitrary mappings (probe with\n\
+         FOPIM_DEADLINE_MS)."
     );
 
-    // Parallel search at equal runtime: the same per-layer deadline
-    // converts worker threads into search breadth the way the analytical
-    // engine converts cheaper analysis into breadth. (Deadline-mode runs
-    // are timing-dependent, so totals are indicative; the bit-identical
-    // determinism guarantee is exercised in fig14's budget-mode sweep and
-    // in rust/tests/parallel_search.rs.)
+    // Equal-effort parallel search: under a calibrated evaluation budget
+    // the plan is a pure function of the seed, so worker threads convert
+    // directly into wall-clock — and the totals are assertable, which a
+    // raw deadline never allowed. This is the ROADMAP "virtual deadline"
+    // item: deadline-style runs that can use the pipelined engine.
     let threads = common::env_u64("FOPIM_THREADS", 8) as usize;
     let net = zoo::resnet18();
+    let mut cfg = engine_config(AnalysisEngine::Analytical, target);
+    // Reuse the budget already resolved (and printed) for the same
+    // engine/net/target above — re-probing could resolve to a different
+    // count and contradict the first table.
+    let evals = r18_analytical_evals;
+    cfg.budget = Budget::Evaluations(evals);
     let mut t = Table::new(
-        &format!("{} — analytical engine, equal per-layer deadline, 1 vs {threads} threads", net.name),
-        &["threads", "mappings explored", "breadth vs 1 thread", "Best Transform"],
+        &format!(
+            "{} — analytical engine @ calibrated {evals} evals/layer, 1 vs {threads} threads",
+            net.name
+        ),
+        &["threads", "wallclock", "speedup", "Best Transform"],
     );
-    let mut base_maps = 0usize;
+    let mut base_secs = 0.0f64;
+    let mut base_total = 0u64;
     for workers in [1usize, threads] {
-        let mut cfg = MapperConfig {
-            budget: usize::MAX / 2,
-            deadline: Some(deadline),
-            seed: common::seed(),
-            refine_passes: 0,
-            threads: workers,
-            ..Default::default()
-        };
-        cfg.overlap = fastoverlapim::overlap::OverlapConfig { max_probe_steps: 256 };
-        let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
-            .run(&net, Metric::Transform);
+        let mut c = cfg.clone();
+        c.threads = workers;
+        let plan =
+            NetworkSearch::new(&arch, c, SearchStrategy::Forward).run(&net, Metric::Transform);
+        let secs = plan.wallclock.as_secs_f64().max(1e-9);
         if workers == 1 {
-            base_maps = plan.mappings_evaluated;
+            base_secs = secs;
+            base_total = plan.total_transformed;
+        } else {
+            assert_eq!(
+                plan.total_transformed, base_total,
+                "equal-effort runs must be bit-identical across thread counts"
+            );
         }
         t.row(vec![
             workers.to_string(),
-            plan.mappings_evaluated.to_string(),
-            format!("{:.1}x", plan.mappings_evaluated as f64 / base_maps.max(1) as f64),
+            format!("{:.2?}", plan.wallclock),
+            format!("{:.2}x", base_secs / secs),
             cycles(plan.total_transformed),
         ]);
     }

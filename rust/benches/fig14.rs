@@ -170,7 +170,7 @@ fn main() {
     sweep.push(max_threads.max(1));
     for workers in sweep {
         let cfg = fastoverlapim::search::MapperConfig {
-            budget,
+            budget: Budget::Evaluations(budget),
             seed: common::seed(),
             refine_passes: 0,
             threads: workers,
@@ -217,7 +217,7 @@ fn main() {
     let mm_budget = common::env_u64("FOPIM_MM_BUDGET", 12) as usize;
     let vgg = fastoverlapim::workload::zoo::vgg16();
     let base_cfg = fastoverlapim::search::MapperConfig {
-        budget: mm_budget,
+        budget: Budget::Evaluations(mm_budget),
         seed: common::seed(),
         refine_passes: 0,
         threads: max_threads.max(1),

@@ -113,7 +113,7 @@ pub fn plan_layers(
     for (pos, &li) in chain.iter().enumerate() {
         let layer = &net.layers[li];
         let config = MapperConfig {
-            budget,
+            budget: crate::search::Budget::Evaluations(budget),
             seed: seed.wrapping_add(pos as u64),
             constraint: constraints[pos].clone(),
             ..Default::default()

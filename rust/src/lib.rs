@@ -15,7 +15,16 @@
 //! * [`mapping`] — loop-nest mappings: per-level spatial/temporal loops,
 //!   tile shapes, data footprints and validity checks (§IV-E, Fig. 8).
 //! * [`mapspace`] — map-space construction and exploration: index
-//!   factorization, permutations, constraints, deterministic sampling (§IV-J).
+//!   factorization, permutations, constraints, deterministic sampling
+//!   (§IV-J), and the factorization-aware genome encoding + neighbor-move
+//!   generator ([`mapspace::FactorTable`], `MapSpace::neighbor`) the
+//!   guided engines edit mappings through.
+//! * [`optimize`] — pluggable per-layer search engines behind the
+//!   `SearchEngine` trait: budgeted random sampling (the default,
+//!   bit-identical to the original sampler), a genetic algorithm
+//!   (OverlaPIM's search family, §V), and simulated annealing /
+//!   hill-climb — all deterministic at any thread count, metered by
+//!   `search::Budget` evaluation budgets.
 //! * [`perf`] — the bit-serial row-parallel PIM performance model
 //!   (AAP-count arithmetic, HBM2 timing/energy from Table I) (§IV-C).
 //! * [`dataspace`] — fine-grained data-space generation: the reference
@@ -58,6 +67,7 @@ pub mod dataspace;
 pub mod exec;
 pub mod mapping;
 pub mod mapspace;
+pub mod optimize;
 pub mod overlap;
 pub mod perf;
 pub mod report;
@@ -72,15 +82,20 @@ pub mod prelude {
     pub use crate::arch::{Arch, Level, PimOp};
     pub use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range, ReferenceGen};
     pub use crate::mapping::{Dim, Loop, LoopKind, Mapping};
-    pub use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
+    pub use crate::mapspace::{FactorTable, MapSpace, MapSpaceConfig, MappingConstraint};
+    pub use crate::optimize::{
+        GeneticAlgorithm, OptimizeConfig, RandomSearch, Scored, SearchAlgo, SearchEngine,
+        SimulatedAnnealing,
+    };
     pub use crate::overlap::{
         overlapped_latency, AnalyticalOverlap, CacheStats, ExhaustiveOverlap, LayerPair,
         OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
     };
     pub use crate::perf::{LayerStats, PerfModel};
     pub use crate::search::{
-        Algorithm, AnalysisEngine, CandidateStore, EvaluatedMapping, Mapper, MapperConfig,
-        Metric, MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
+        calibrate_budget, Algorithm, AnalysisEngine, Budget, CandidateStore, EvaluatedMapping,
+        Mapper, MapperConfig, Metric, MiddleHeuristic, NetworkPlan, NetworkSearch,
+        ParallelMapper, SearchStrategy,
     };
     pub use crate::transform::{
         transform_ready_jobs, transform_schedule, transform_schedule_owned,

@@ -45,12 +45,19 @@ USAGE: repro <subcommand> [options]
 
 SUBCOMMANDS
   search   --net <zoo|file.yaml> [--arch dram|reram|small|file.yaml]
-           [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
+           [--budget N] [--budget-evals N] [--seed S]
+           [--strategy forward|backward|middle|middle2]
            [--metric seq|overlap|transform|all] [--engine analytical|exhaustive]
-           [--deadline-ms T] [--refine N] [--threads N] [--cache on|off]
+           [--algo random|ga|sa|hill] [--population N] [--generations N]
+           [--deadline-ms T] [--calibrate-ms T [--probe N]]
+           [--refine N] [--threads N] [--cache on|off]
            [--pipeline on|off] [--lookahead on|off] [--per-layer] [--csv]
            (--metric all runs the whole baseline matrix: the three metric
-            sweeps as pipelined jobs sharing candidate enumeration)
+            sweeps as pipelined jobs sharing candidate enumeration;
+            --algo selects the search engine — ga/sa/hill are the guided
+            optimizers, random the Timeloop-style baseline;
+            --calibrate-ms converts a wall-clock target into a fixed
+            evaluation budget via a probe, so the run stays reproducible)
   analyze  --net <zoo> --pair I [--budget N] [--seed S]
   arch     [--config dram|reram|small|file.yaml] [--dump]
   export   --net <zoo> [--out file.yaml]
@@ -61,6 +68,14 @@ SUBCOMMANDS
     );
 }
 
+/// Print a friendly argument error — built on `util::error`'s message
+/// type so load paths can chain context — and exit with code 2, no
+/// panic, no backtrace.
+fn fail(msg: impl std::fmt::Display) -> ! {
+    eprintln!("repro: error: {}", fastoverlapim::util::error::Error::msg(msg));
+    std::process::exit(2);
+}
+
 fn load_arch(args: &Args) -> Arch {
     let name = args.get_or("arch", args.get_or("config", "dram"));
     match name {
@@ -68,9 +83,14 @@ fn load_arch(args: &Args) -> Arch {
         "reram" => Arch::reram_pim(),
         "small" => Arch::dram_pim_small(),
         path => {
-            let text = std::fs::read_to_string(path)
-                .unwrap_or_else(|e| panic!("reading arch config {path}: {e}"));
-            arch_from_yaml(&text).unwrap_or_else(|e| panic!("parsing {path}: {e}"))
+            let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                fail(format!(
+                    "reading arch config `{path}`: {e} (valid presets: dram|reram|small, \
+                     or a YAML file path)"
+                ))
+            });
+            arch_from_yaml(&text)
+                .unwrap_or_else(|e| fail(format!("parsing arch config `{path}`: {e}")))
         }
     }
 }
@@ -80,26 +100,72 @@ fn load_net(args: &Args) -> Network {
     if let Some(net) = zoo::by_name(name) {
         return net;
     }
-    let text = std::fs::read_to_string(name)
-        .unwrap_or_else(|e| panic!("reading network file {name}: {e}"));
-    parser::network_from_yaml(&text).unwrap_or_else(|e| panic!("parsing {name}: {e}"))
+    let text = std::fs::read_to_string(name).unwrap_or_else(|e| {
+        let zoo_names: Vec<&str> = zoo::all().iter().map(|(n, _)| *n).collect();
+        fail(format!(
+            "reading network `{name}`: {e} (valid zoo names: {}, or a YAML file path)",
+            zoo_names.join("|")
+        ))
+    });
+    parser::network_from_yaml(&text)
+        .unwrap_or_else(|e| fail(format!("parsing network file `{name}`: {e}")))
+}
+
+/// Parse an integer-valued option through [`fail`] instead of a panic.
+fn int_arg(args: &Args, key: &str) -> Option<u64> {
+    args.get(key).map(|v| {
+        v.parse().unwrap_or_else(|_| fail(format!("--{key} expects an integer, got `{v}`")))
+    })
 }
 
 fn mapper_config(args: &Args) -> MapperConfig {
     let mut cfg = MapperConfig {
-        budget: args.get_u64("budget", 100) as usize,
-        seed: args.get_u64("seed", 0xFA57),
+        budget: Budget::Evaluations(int_arg(args, "budget").unwrap_or(100) as usize),
+        seed: int_arg(args, "seed").unwrap_or(0xFA57),
         ..Default::default()
     };
-    if let Some(ms) = args.get("deadline-ms") {
-        cfg.deadline = Some(Duration::from_millis(ms.parse().expect("--deadline-ms integer")));
+    // Budget modes: --budget/--budget-evals set a fixed evaluation count,
+    // --calibrate-ms resolves a wall-clock target to a fixed evaluation
+    // count via a probe (reproducible), --deadline-ms is the raw
+    // timing-dependent deadline. They select mutually exclusive variants,
+    // so explicitly passing more than one is an error rather than silent
+    // precedence.
+    let modes: Vec<&str> = ["budget", "budget-evals", "calibrate-ms", "deadline-ms"]
+        .into_iter()
+        .filter(|k| args.get(k).is_some())
+        .collect();
+    if modes.len() > 1 {
+        fail(format!(
+            "conflicting budget flags: --{} (pick one of --budget, --budget-evals, \
+             --calibrate-ms, --deadline-ms)",
+            modes.join(", --")
+        ));
     }
-    cfg.refine_passes = args.get_u64("refine", 1) as usize;
+    if let Some(n) = int_arg(args, "budget-evals") {
+        cfg.budget = Budget::Evaluations(n as usize);
+    } else if let Some(ms) = int_arg(args, "calibrate-ms") {
+        cfg.budget = Budget::Calibrated {
+            target: Duration::from_millis(ms),
+            probe_draws: int_arg(args, "probe").unwrap_or(24) as usize,
+        };
+    } else if let Some(ms) = int_arg(args, "deadline-ms") {
+        cfg.budget = Budget::Deadline(Duration::from_millis(ms));
+    }
+    cfg.refine_passes = int_arg(args, "refine").unwrap_or(1) as usize;
     cfg.engine = match args.get_or("engine", "analytical") {
         "analytical" => AnalysisEngine::Analytical,
         "exhaustive" => AnalysisEngine::Exhaustive,
-        other => panic!("unknown engine `{other}`"),
+        other => fail(format!("unknown engine `{other}` (valid: analytical|exhaustive)")),
     };
+    // Search engine: random (the bit-identical baseline) or a guided
+    // optimizer over factorization genomes.
+    let algo_tag = args.get_or("algo", "random");
+    cfg.algo = SearchAlgo::parse(algo_tag)
+        .unwrap_or_else(|| fail(format!("unknown algo `{algo_tag}` (valid: random|ga|sa|hill)")));
+    cfg.optimize.population =
+        (int_arg(args, "population").unwrap_or(cfg.optimize.population as u64) as usize).max(1);
+    cfg.optimize.generations =
+        int_arg(args, "generations").unwrap_or(cfg.optimize.generations as u64) as usize;
     // Parallel search knobs: worker threads for per-layer candidate
     // evaluation (results are bit-identical at any thread count when no
     // deadline is set) and the analysis memoization cache.
@@ -120,7 +186,9 @@ fn strategy(args: &Args) -> SearchStrategy {
         "backward" => SearchStrategy::Backward,
         "middle" => SearchStrategy::Middle(MiddleHeuristic::LargestOutput),
         "middle2" => SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
-        other => panic!("unknown strategy `{other}`"),
+        other => {
+            fail(format!("unknown strategy `{other}` (valid: forward|backward|middle|middle2)"))
+        }
     }
 }
 
@@ -137,11 +205,17 @@ fn cmd_search(args: &Args) {
             cmd_search_matrix(args, &arch, &net, cfg, strat);
             return;
         }
-        other => panic!("unknown metric `{other}`"),
+        other => fail(format!("unknown metric `{other}` (valid: seq|overlap|transform|all)")),
     };
     eprintln!(
-        "searching {} on {} (budget {}, {:?}, {:?}, {:?} engine)...",
-        net.name, arch.name, cfg.budget, strat, metric, cfg.engine
+        "searching {} on {} (budget {}, algo {}, {:?}, {:?}, {:?} engine)...",
+        net.name,
+        arch.name,
+        cfg.budget,
+        cfg.algo.name(),
+        strat,
+        metric,
+        cfg.engine
     );
     let threads = cfg.threads;
     let search = NetworkSearch::new(&arch, cfg, strat);
@@ -211,12 +285,21 @@ fn cmd_search_matrix(
     strat: SearchStrategy,
 ) {
     use fastoverlapim::search::{algorithm_total, Algorithm};
-    let pipelined = cfg.pipeline && cfg.deadline.is_none();
+    let pipelined = cfg.pipeline && !cfg.deadline_mode();
+    let calibrated = matches!(cfg.budget, Budget::Calibrated { .. });
     let mode = match (pipelined, cfg.sharing_active()) {
         (true, true) => "pipelined jobs + shared enumeration",
-        // Above the store's memory cap the jobs still run concurrently
-        // but each enumerates its own candidates.
-        (true, false) => "pipelined jobs, unshared enumeration (budget above sharing cap)",
+        // A calibrated budget resolves to a concrete evaluation count
+        // inside run_metrics, and only then is the sharing decision made.
+        (true, false) if calibrated => {
+            "pipelined jobs; enumeration sharing decided after budget calibration"
+        }
+        // Above the store's memory cap — or under a guided engine, whose
+        // candidates depend on each metric's own scores — the jobs still
+        // run concurrently but each enumerates its own candidates.
+        (true, false) => {
+            "pipelined jobs, unshared enumeration (guided engine or budget above sharing cap)"
+        }
         (false, _) => "serial passes",
     };
     eprintln!(
@@ -281,8 +364,10 @@ fn cmd_analyze(args: &Args) {
     let arch = load_arch(args);
     let net = load_net(args);
     let chain = net.chain();
-    let i = args.get_u64("pair", 0) as usize;
-    assert!(i + 1 < chain.len(), "--pair {i} out of range (chain len {})", chain.len());
+    let i = int_arg(args, "pair").unwrap_or(0) as usize;
+    if i + 1 >= chain.len() {
+        fail(format!("--pair {i} out of range (chain has {} layers)", chain.len()));
+    }
     let cfg = mapper_config(args);
     let mut mapper = Mapper::new(&arch, cfg);
     let (la, lb) = (&net.layers[chain[i]], &net.layers[chain[i + 1]]);
@@ -375,9 +460,9 @@ fn cmd_exec(args: &Args) {
         eprintln!("artifacts not built: run `make artifacts` first (looked in {})", dir.display());
         std::process::exit(1);
     }
-    let budget = args.get_u64("budget", 60) as usize;
-    let seed = args.get_u64("seed", 7);
-    let workers = args.get_u64("workers", 4) as usize;
+    let budget = int_arg(args, "budget").unwrap_or(60) as usize;
+    let seed = int_arg(args, "seed").unwrap_or(7);
+    let workers = int_arg(args, "workers").unwrap_or(4) as usize;
     let engine = TinyCnnEngine::new(&dir, budget, seed, Metric::Transform)
         .expect("engine construction");
     println!("runtime platform: {}", engine.device.platform().expect("device"));
@@ -385,7 +470,7 @@ fn cmd_exec(args: &Args) {
         "inorder" => vec![SchedulePolicy::InOrder],
         "transformed" => vec![SchedulePolicy::Transformed],
         "both" => vec![SchedulePolicy::InOrder, SchedulePolicy::Transformed],
-        other => panic!("unknown policy `{other}`"),
+        other => fail(format!("unknown policy `{other}` (valid: inorder|transformed|both)")),
     };
     let mut t = Table::new(
         "tiny-cnn end-to-end over PJRT tiles",

@@ -87,8 +87,20 @@ impl fmt::Display for Dim {
 }
 
 /// A dense per-dimension table.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub struct DimMap<T>(pub [T; 7]);
+
+// Clone and Copy are implemented by hand: deriving them together would
+// generate a Clone impl bounded on `T: Copy` (the derive's shallow
+// `*self` optimization), which would deny Clone to non-Copy payloads
+// like the optimizer's `DimMap<Vec<u64>>` factor tables.
+impl<T: Clone> Clone for DimMap<T> {
+    fn clone(&self) -> Self {
+        DimMap(self.0.clone())
+    }
+}
+
+impl<T: Copy> Copy for DimMap<T> {}
 
 impl<T: Copy + Default> Default for DimMap<T> {
     fn default() -> Self {

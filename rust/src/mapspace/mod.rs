@@ -28,10 +28,22 @@
 //! reproduces the single-threaded result bit for bit.
 //! [`MapSpace::prefix_infeasible`] is the equally pure early-exit probe
 //! those layers share.
+//!
+//! # Neighbor moves and the optimizer
+//!
+//! The guided engines in [`crate::optimize`] (genetic algorithm, simulated
+//! annealing, hill-climb) do not draw fresh samples — they *edit* existing
+//! mappings. [`FactorTable`] is the factorization-aware encoding they edit
+//! through (per-dimension divisor splits across hierarchy positions, plus
+//! per-nest loop orders), and [`MapSpace::neighbor`] is the shared
+//! neighbor-move generator: one small structural edit (move a prime factor
+//! between two positions of a dimension's split, or swap two loops within
+//! a nest) re-validated against the architecture and the per-layer
+//! constraints, so every move stays inside the map space by construction.
 
 use crate::arch::Arch;
 use crate::mapping::{Dim, DimMap, Loop, LoopKind, Mapping};
-use crate::util::factor::divisors;
+use crate::util::factor::{divisors, prime_factorization};
 use crate::util::rng::SplitMix64;
 use crate::workload::Layer;
 
@@ -394,6 +406,225 @@ impl<'a> MapSpace<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Factorization-aware genome encoding (the optimizer's edit surface).
+// ---------------------------------------------------------------------------
+
+/// Factorization-aware genome encoding of a [`Mapping`] — the
+/// representation the guided engines in [`crate::optimize`] mutate and
+/// recombine.
+///
+/// A mapping is two orthogonal pieces of information:
+///
+/// * **Splits** — for every problem dimension, how its padded bound
+///   factorizes across *positions*. Position `2·nest` holds the spatial
+///   factor of nest `nest`, position `2·nest + 1` its temporal factor,
+///   nests running `0..=compute` plus the bank interior. The product over
+///   a dimension's positions is its padded bound, so moving a prime
+///   factor between two positions ([`FactorTable::move_factor`]) always
+///   yields another exact factorization — validity against fan-outs and
+///   lane counts is re-checked by the caller, but divisibility can never
+///   break.
+/// * **Orders** — for every nest, the sequence of `(dim, kind)` loops.
+///   Swapping two entries permutes the intra-level loop order without
+///   touching any bound.
+///
+/// `decode(encode(m)) == m` for sampler-produced mappings (at most one
+/// loop per `(dim, kind)` pair per nest); hand-built mappings with
+/// duplicate pairs decode to the merged equivalent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FactorTable {
+    /// `splits[d][pos]` — the factor of dimension `d` at position `pos`
+    /// (see the type-level docs for the position scheme). Length is
+    /// `2 × nest count`, identical for every dimension.
+    pub splits: DimMap<Vec<u64>>,
+    /// Per nest, the recorded `(dim, kind)` loop order. Factors moved
+    /// onto a position with no recorded loop are appended at the inner
+    /// end of the nest in canonical dimension order by
+    /// [`FactorTable::decode`].
+    pub orders: Vec<Vec<(Dim, LoopKind)>>,
+}
+
+impl FactorTable {
+    /// Position of `(nest, kind)` in a dimension's split vector.
+    #[inline]
+    fn pos(nest: usize, kind: LoopKind) -> usize {
+        2 * nest + usize::from(kind == LoopKind::Temporal)
+    }
+
+    /// Encode a mapping. Duplicate `(dim, kind)` loops within one nest
+    /// merge multiplicatively.
+    pub fn encode(m: &Mapping) -> FactorTable {
+        let n_nests = m.nests.len();
+        let mut splits: DimMap<Vec<u64>> = DimMap(std::array::from_fn(|_| vec![1u64; 2 * n_nests]));
+        let mut orders: Vec<Vec<(Dim, LoopKind)>> = vec![Vec::new(); n_nests];
+        for (ni, nest) in m.nests.iter().enumerate() {
+            for l in nest {
+                splits[l.dim][Self::pos(ni, l.kind)] *= l.bound;
+                if !orders[ni].contains(&(l.dim, l.kind)) {
+                    orders[ni].push((l.dim, l.kind));
+                }
+            }
+        }
+        FactorTable { splits, orders }
+    }
+
+    /// Decode back to a mapping: recorded loops in their recorded order,
+    /// then any factor that landed on an unrecorded position appended at
+    /// the inner end (spatial before temporal, canonical dimension
+    /// order) — deterministic, so a decoded genome is a pure function of
+    /// the table.
+    pub fn decode(&self) -> Mapping {
+        let n_nests = self.orders.len();
+        let mut nests: Vec<Vec<Loop>> = Vec::with_capacity(n_nests);
+        for ni in 0..n_nests {
+            let mut nest = Vec::new();
+            for &(d, kind) in &self.orders[ni] {
+                let b = self.splits[d][Self::pos(ni, kind)];
+                if b > 1 {
+                    nest.push(Loop { dim: d, bound: b, kind });
+                }
+            }
+            for kind in [LoopKind::Spatial, LoopKind::Temporal] {
+                for d in Dim::ALL {
+                    if self.orders[ni].contains(&(d, kind)) {
+                        continue;
+                    }
+                    let b = self.splits[d][Self::pos(ni, kind)];
+                    if b > 1 {
+                        nest.push(Loop { dim: d, bound: b, kind });
+                    }
+                }
+            }
+            nests.push(nest);
+        }
+        Mapping::new(nests)
+    }
+
+    /// Move one prime factor `p` of dimension `d` from position `from` to
+    /// position `to`. The per-dimension product — and therefore the
+    /// padded bound — is invariant.
+    pub fn move_factor(&mut self, d: Dim, from: usize, to: usize, p: u64) {
+        debug_assert!(p > 1 && self.splits[d][from] % p == 0);
+        self.splits[d][from] /= p;
+        self.splits[d][to] *= p;
+    }
+
+    /// Apply one random factor move: pick a dimension with a splittable
+    /// factor, a source position, one of its prime factors, and a distinct
+    /// destination position. Returns `false` when the table has no factor
+    /// to move (all bounds 1).
+    pub fn random_factor_move(&mut self, rng: &mut SplitMix64) -> bool {
+        let dims: Vec<Dim> = Dim::ALL
+            .into_iter()
+            .filter(|&d| self.splits[d].iter().any(|&f| f > 1))
+            .collect();
+        if dims.is_empty() {
+            return false;
+        }
+        let d = *rng.choose(&dims);
+        let sources: Vec<usize> =
+            (0..self.splits[d].len()).filter(|&i| self.splits[d][i] > 1).collect();
+        let from = *rng.choose(&sources);
+        let primes: Vec<u64> = prime_factorization(self.splits[d][from])
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+        let p = *rng.choose(&primes);
+        let dests: Vec<usize> = (0..self.splits[d].len()).filter(|&i| i != from).collect();
+        let to = *rng.choose(&dests);
+        self.move_factor(d, from, to, p);
+        true
+    }
+
+    /// Swap two loops within one nest's recorded order. Returns `false`
+    /// when no nest has two loops to swap.
+    pub fn random_order_swap(&mut self, rng: &mut SplitMix64) -> bool {
+        let nests: Vec<usize> =
+            (0..self.orders.len()).filter(|&n| self.orders[n].len() >= 2).collect();
+        if nests.is_empty() {
+            return false;
+        }
+        let ni = *rng.choose(&nests);
+        let len = self.orders[ni].len();
+        let i = rng.below(len as u64) as usize;
+        let mut j = rng.below(len as u64 - 1) as usize;
+        if j >= i {
+            j += 1;
+        }
+        self.orders[ni].swap(i, j);
+        true
+    }
+}
+
+impl<'a> MapSpace<'a> {
+    /// One random structural edit of `m` that stays inside this map space:
+    /// either a prime-factor move between two positions of one dimension's
+    /// split, or a swap of two loops within one nest — re-validated
+    /// against the architecture and the per-layer constraints, retried up
+    /// to `max_attempts` times. The shared neighbor-move generator of the
+    /// simulated-annealing / hill-climb engines and the genetic
+    /// algorithm's mutation operator ([`crate::optimize`]).
+    ///
+    /// Returns `None` when no valid distinct neighbor was found within
+    /// the attempt budget (tightly-constrained spaces can be isolated
+    /// points). A pure function of `(self, m, rng state)`.
+    pub fn neighbor(&self, m: &Mapping, rng: &mut SplitMix64) -> Option<Mapping> {
+        let table = FactorTable::encode(m);
+        for _ in 0..self.config.max_attempts {
+            let mut t = table.clone();
+            let mutated = if rng.below(2) == 0 {
+                t.random_factor_move(rng)
+            } else {
+                t.random_order_swap(rng)
+            };
+            if !mutated {
+                continue;
+            }
+            let cand = t.decode();
+            if cand == *m {
+                continue;
+            }
+            if cand.validate(self.arch, self.layer).is_ok() {
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Recombine two parent mappings: per-dimension uniform crossover of
+    /// the split columns plus per-nest uniform crossover of the loop
+    /// orders, re-validated and retried up to `max_attempts` times.
+    /// Falls back to `None` when no valid child emerged (the genetic
+    /// algorithm then keeps the fitter parent). Both parents must come
+    /// from the same architecture (same nest count).
+    pub fn crossover(&self, a: &Mapping, b: &Mapping, rng: &mut SplitMix64) -> Option<Mapping> {
+        let fa = FactorTable::encode(a);
+        let fb = FactorTable::encode(b);
+        if fa.orders.len() != fb.orders.len() {
+            return None;
+        }
+        for _ in 0..self.config.max_attempts {
+            let mut t = fa.clone();
+            for d in Dim::ALL {
+                if rng.below(2) == 1 {
+                    t.splits[d] = fb.splits[d].clone();
+                }
+            }
+            for ni in 0..t.orders.len() {
+                if rng.below(2) == 1 {
+                    t.orders[ni] = fb.orders[ni].clone();
+                }
+            }
+            let cand = t.decode();
+            if cand.validate(self.arch, self.layer).is_ok() {
+                return Some(cand);
+            }
+        }
+        None
+    }
+}
+
 /// Padding candidates for bound `n`: the exact value plus up to `extra`
 /// smoother values below `2n` (next multiples of 2 and 4, next power of
 /// two), ascending.
@@ -528,6 +759,76 @@ mod tests {
         let seq_a: Vec<_> = (0..8u64).map(|i| ms.sample_indexed(1, i)).collect();
         let seq_b: Vec<_> = (0..8u64).map(|i| ms.sample_indexed(2, i)).collect();
         assert_ne!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn factor_table_roundtrips_sampled_mappings() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(21);
+        for _ in 0..40 {
+            if let Some(m) = ms.sample(&mut rng) {
+                let t = FactorTable::encode(&m);
+                // Split products reproduce the padded bounds.
+                for d in Dim::ALL {
+                    assert_eq!(t.splits[d].iter().product::<u64>(), m.bounds[d], "dim {d}");
+                }
+                assert_eq!(t.decode(), m, "encode/decode must round-trip");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_moves_stay_valid_and_distinct() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(31);
+        let mut moved = 0;
+        for _ in 0..25 {
+            let m = ms.sample(&mut rng).expect("sample");
+            if let Some(n) = ms.neighbor(&m, &mut rng) {
+                n.validate(&arch, &l).unwrap();
+                assert_ne!(n, m, "neighbor must be a distinct mapping");
+                // The padded volume is preserved by factor moves and order
+                // swaps alike (no dimension gains or loses factors).
+                for d in Dim::ALL {
+                    assert_eq!(n.bounds[d], m.bounds[d], "dim {d} bound drifted");
+                }
+                moved += 1;
+            }
+        }
+        assert!(moved >= 15, "neighbor generator should usually succeed, got {moved}");
+    }
+
+    #[test]
+    fn neighbor_is_deterministic_in_rng_state() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let m = ms.sample(&mut SplitMix64::new(5)).expect("sample");
+        let a = ms.neighbor(&m, &mut SplitMix64::stream2(9, 3, 4));
+        let b = ms.neighbor(&m, &mut SplitMix64::stream2(9, 3, 4));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn crossover_children_are_valid() {
+        let arch = Arch::dram_pim_small();
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let mut rng = SplitMix64::new(41);
+        let mut produced = 0;
+        for _ in 0..20 {
+            let a = ms.sample(&mut rng).expect("parent a");
+            let b = ms.sample(&mut rng).expect("parent b");
+            if let Some(c) = ms.crossover(&a, &b, &mut rng) {
+                c.validate(&arch, &l).unwrap();
+                produced += 1;
+            }
+        }
+        assert!(produced >= 15, "crossover should usually succeed, got {produced}");
     }
 
     #[test]

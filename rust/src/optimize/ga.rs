@@ -1,0 +1,100 @@
+//! Genetic algorithm over factorization genomes (the search family of the
+//! OverlaPIM baseline the paper outperforms, §V).
+//!
+//! * **Representation** — a genome is a [`crate::mapspace::FactorTable`]:
+//!   per-dimension divisor splits across hierarchy positions plus
+//!   per-nest loop orders. Crossover and mutation operate on that
+//!   encoding, so offspring always carry exact factorizations; validity
+//!   against fan-outs, lanes and constraints is re-checked on decode.
+//! * **Selection** — tournament of size `tournament` over the current
+//!   population (lowest score wins, ties to the earlier member).
+//! * **Variation** — with probability `crossover_rate` a per-dimension /
+//!   per-nest uniform crossover of two tournament winners
+//!   ([`MapSpace::crossover`]), otherwise a clone of the first winner;
+//!   then with probability `mutation_rate` one neighbor move
+//!   ([`MapSpace::neighbor`]).
+//! * **Survivor selection** — μ+λ: parents and offspring merge and the
+//!   best `population` survive, so elites are never lost.
+//!
+//! Slot `i` of generation `g` draws every random decision from the
+//! grandchild stream `(seed, g, i)` — see the module docs of
+//! [`crate::optimize`] for why that makes the engine deterministic at any
+//! thread count.
+
+use super::{OptimizeConfig, Scored, SearchEngine};
+use crate::mapping::Mapping;
+use crate::mapspace::MapSpace;
+use crate::util::rng::SplitMix64;
+
+/// See the module docs.
+#[derive(Debug, Clone)]
+pub struct GeneticAlgorithm {
+    seed: u64,
+    cfg: OptimizeConfig,
+    /// Current population, ascending by `(score, arrival order)` — the
+    /// stable sort in `observe` keeps earlier arrivals first on ties.
+    population: Vec<Scored>,
+}
+
+impl GeneticAlgorithm {
+    pub fn new(seed: u64, cfg: OptimizeConfig) -> GeneticAlgorithm {
+        GeneticAlgorithm { seed, cfg, population: Vec::new() }
+    }
+
+    /// Tournament selection: the best of `tournament` uniformly drawn
+    /// members (population is score-sorted, so the lowest index wins).
+    fn tournament(&self, rng: &mut SplitMix64) -> usize {
+        let n = self.population.len() as u64;
+        let rounds = self.cfg.tournament.max(1);
+        let mut best = rng.below(n) as usize;
+        for _ in 1..rounds {
+            let c = rng.below(n) as usize;
+            if c < best {
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+impl SearchEngine for GeneticAlgorithm {
+    fn name(&self) -> &'static str {
+        "ga"
+    }
+
+    fn propose(&mut self, ms: &MapSpace<'_>, gen: u64, max: usize) -> Vec<Option<Mapping>> {
+        let mut out = Vec::with_capacity(max);
+        for i in 0..max {
+            let mut rng = SplitMix64::stream2(self.seed, gen, i as u64);
+            if self.population.is_empty() {
+                // Generation 0 (or a wiped-out population): seed with
+                // fresh random samples.
+                out.push(ms.sample(&mut rng));
+                continue;
+            }
+            let a = self.tournament(&mut rng);
+            let b = self.tournament(&mut rng);
+            let mut child = if rng.f64() < self.cfg.crossover_rate {
+                ms.crossover(&self.population[a].mapping, &self.population[b].mapping, &mut rng)
+                    .unwrap_or_else(|| self.population[a.min(b)].mapping.clone())
+            } else {
+                self.population[a.min(b)].mapping.clone()
+            };
+            if rng.f64() < self.cfg.mutation_rate {
+                if let Some(n) = ms.neighbor(&child, &mut rng) {
+                    child = n;
+                }
+            }
+            out.push(Some(child));
+        }
+        out
+    }
+
+    fn observe(&mut self, _gen: u64, scored: &[Option<Scored>]) {
+        self.population.extend(scored.iter().flatten().cloned());
+        // Stable sort: ties keep the earlier member, so survivor
+        // selection is deterministic.
+        self.population.sort_by_key(|s| s.score);
+        self.population.truncate(self.cfg.population.max(1));
+    }
+}

@@ -1,0 +1,102 @@
+//! Simulated annealing and greedy hill-climb over neighbor moves.
+//!
+//! `population` independent chains each hold one current mapping. Per
+//! generation every chain proposes one neighbor move
+//! ([`MapSpace::neighbor`] — the same move generator the GA mutates
+//! with); a chain whose state was never initialized (or whose
+//! neighborhood is exhausted) proposes a fresh random sample instead
+//! (restart). Acceptance is Metropolis on the *relative* score
+//! degradation `r = (new − cur) / cur` with probability `exp(-r / T)`,
+//! `T = sa_t0 · sa_decay^generation` — scale-free, so one temperature
+//! default works across metrics whose magnitudes differ by orders of
+//! magnitude. [`SimulatedAnnealing::hill_climb`] pins `T = 0`: only
+//! improvements (or equal-score plateau moves) are ever accepted.
+//!
+//! Proposal randomness for chain `i` of generation `g` flows from the
+//! grandchild stream `(seed, g, i)`; the acceptance coin flips from a
+//! salted stream of the same key so they can never alias the proposal
+//! draws. Both are pure functions of the engine seed — see
+//! [`crate::optimize`] on determinism.
+
+use super::{OptimizeConfig, Scored, SearchEngine};
+use crate::mapping::Mapping;
+use crate::mapspace::MapSpace;
+use crate::util::rng::SplitMix64;
+
+/// Salt separating acceptance coin flips from proposal draws (both are
+/// keyed by the same `(seed, generation, chain)` triple).
+const ACCEPT_SALT: u64 = 0xACCE_57ED_C01F_F11D;
+
+/// See the module docs.
+#[derive(Debug, Clone)]
+pub struct SimulatedAnnealing {
+    seed: u64,
+    cfg: OptimizeConfig,
+    /// Initial relative temperature; `0` = greedy hill-climb.
+    t0: f64,
+    tag: &'static str,
+    /// Current state per chain (`None` until the chain's first valid
+    /// draw).
+    chains: Vec<Option<Scored>>,
+}
+
+impl SimulatedAnnealing {
+    pub fn new(seed: u64, cfg: OptimizeConfig) -> SimulatedAnnealing {
+        let t0 = cfg.sa_t0;
+        SimulatedAnnealing { seed, cfg, t0, tag: "sa", chains: Vec::new() }
+    }
+
+    /// Greedy hill-climb: annealing at temperature zero.
+    pub fn hill_climb(seed: u64, cfg: OptimizeConfig) -> SimulatedAnnealing {
+        SimulatedAnnealing { seed, cfg, t0: 0.0, tag: "hill", chains: Vec::new() }
+    }
+
+    fn temperature(&self, gen: u64) -> f64 {
+        self.t0 * self.cfg.sa_decay.powi(gen.min(i32::MAX as u64) as i32)
+    }
+}
+
+impl SearchEngine for SimulatedAnnealing {
+    fn name(&self) -> &'static str {
+        self.tag
+    }
+
+    fn propose(&mut self, ms: &MapSpace<'_>, gen: u64, max: usize) -> Vec<Option<Mapping>> {
+        if self.chains.len() < max {
+            self.chains.resize(max, None);
+        }
+        let mut out = Vec::with_capacity(max);
+        for (i, chain) in self.chains.iter().take(max).enumerate() {
+            let mut rng = SplitMix64::stream2(self.seed, gen, i as u64);
+            let prop = match chain {
+                Some(cur) => ms.neighbor(&cur.mapping, &mut rng).or_else(|| ms.sample(&mut rng)),
+                None => ms.sample(&mut rng),
+            };
+            out.push(prop);
+        }
+        out
+    }
+
+    fn observe(&mut self, gen: u64, scored: &[Option<Scored>]) {
+        let temp = self.temperature(gen);
+        for (i, slot) in scored.iter().enumerate() {
+            let Some(new) = slot else { continue };
+            let accept = match &self.chains[i] {
+                None => true,
+                Some(cur) if new.score <= cur.score => true,
+                Some(cur) => {
+                    if temp > 0.0 {
+                        let rel = (new.score - cur.score) as f64 / cur.score.max(1) as f64;
+                        let mut coin = SplitMix64::stream2(self.seed ^ ACCEPT_SALT, gen, i as u64);
+                        coin.f64() < (-rel / temp).exp()
+                    } else {
+                        false
+                    }
+                }
+            };
+            if accept {
+                self.chains[i] = Some(new.clone());
+            }
+        }
+    }
+}

@@ -126,13 +126,17 @@ impl<'a> LayerPair<'a> {
     ) -> LayerPair<'a> {
         let producer_table = LoopTable::new(producer.1);
         let consumer_table = LoopTable::new(consumer.1);
-        let consumer_rep_banks = consumer_table.representative_banks(&[
-            crate::mapping::Dim::P,
-            crate::mapping::Dim::Q,
-            crate::mapping::Dim::C,
-            crate::mapping::Dim::R,
-            crate::mapping::Dim::S,
-        ]);
+        // Banks differing only in K/N spatial digits consume identical
+        // input regions — except for depthwise consumers, whose K digit
+        // *selects* the input channel, so K must stay in the
+        // representative set there.
+        use crate::mapping::Dim;
+        let rep_dims: &[Dim] = if consumer.0.kind == LayerKind::Depthwise {
+            &[Dim::K, Dim::P, Dim::Q, Dim::C, Dim::R, Dim::S]
+        } else {
+            &[Dim::P, Dim::Q, Dim::C, Dim::R, Dim::S]
+        };
+        let consumer_rep_banks = consumer_table.representative_banks(rep_dims);
         let steps = producer.2.temporal_steps.max(1);
         LayerPair {
             producer: producer.0,
@@ -158,16 +162,32 @@ impl<'a> LayerPair<'a> {
             LayerKind::Conv | LayerKind::MatMul => {
                 self.conv_input_boxes(ds).into_iter().collect()
             }
+            LayerKind::Depthwise => self.depthwise_input_boxes(ds).into_iter().collect(),
         }
     }
 
+    /// Depthwise consumers read input channel `k` for output channel `k`
+    /// (their `C` loop is trivial by encoding), so the consumed producer
+    /// channel range is the data space's *K* range; the spatial receptive
+    /// field behaves exactly like a convolution's.
+    fn depthwise_input_boxes(&self, ds: &DataSpace) -> Option<OutBox> {
+        self.conv_like_input_boxes(ds.k, ds)
+    }
+
     fn conv_input_boxes(&self, ds: &DataSpace) -> Option<OutBox> {
-        let (kp, pp, qp) = (self.producer.k, self.producer.p, self.producer.q);
         // Input channels of the consumer are the producer's output channels.
-        let k = ds.c.clamp(kp)?;
-        // Receptive field in padded input coordinates, shifted by padding
-        // and clamped to the consumer's real input extent, then mapped
-        // through pooling to producer output rows.
+        self.conv_like_input_boxes(ds.c, ds)
+    }
+
+    /// Shared conv-shaped receptive-field mapping: `channels` is the
+    /// consumed input-channel range in producer output-channel
+    /// coordinates (the C range for convolutions, the K range for
+    /// depthwise); the spatial region is shifted by padding, clamped to
+    /// the consumer's real input extent, then mapped through pooling to
+    /// producer output rows.
+    fn conv_like_input_boxes(&self, channels: Range, ds: &DataSpace) -> Option<OutBox> {
+        let (kp, pp, qp) = (self.producer.k, self.producer.p, self.producer.q);
+        let k = channels.clamp(kp)?;
         let y = shift_clamp(ds.input_y(self.consumer.stride), self.consumer.pad, pp / self.pool)?;
         let x = shift_clamp(ds.input_x(self.consumer.stride), self.consumer.pad, qp / self.pool)?;
         let p = unpool(y, self.pool).clamp(pp)?;

@@ -2,10 +2,14 @@
 //! (paper §IV-J "Overlap Optimization for the Whole DNN" and
 //! §IV-K "Search Algorithm Optimization").
 //!
-//! The mapper samples valid mappings from the map space and keeps the best
-//! under a chosen metric, terminating after a fixed number of candidate
-//! draws (Timeloop-style) or a wall-clock deadline (for the paper's
-//! equal-runtime OverlaPIM comparison, Fig. 11). Whole-network search runs
+//! The mapper explores the map space with a pluggable engine
+//! ([`crate::optimize`]): budgeted uniform random sampling (the default,
+//! Timeloop-style), a genetic algorithm, or simulated annealing /
+//! hill-climb. Search effort is metered by a [`Budget`]: a fixed number
+//! of candidate draws (§IV-J), a wall-clock target converted to a draw
+//! count by a calibration probe (the reproducible form of the paper's
+//! equal-runtime OverlaPIM comparison, Fig. 11), or a raw wall-clock
+//! deadline (the one timing-dependent mode). Whole-network search runs
 //! layer by layer: a linear `N × k` sweep instead of the intractable `k^N`
 //! joint space (§IV-J), with three traversal strategies:
 //!
@@ -68,6 +72,7 @@
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
+use crate::optimize::{self, OptimizeConfig, SearchAlgo};
 use crate::overlap::{
     overlapped_latency, pair_cache_key, transform_cache_key, AnalyticalOverlap, CacheStats,
     ExhaustiveOverlap, LayerPair, OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
@@ -207,18 +212,61 @@ impl SearchStrategy {
     }
 }
 
+/// How much effort one per-layer search call may spend — the abstraction
+/// that replaced the old `budget: usize` + `deadline: Option<Duration>`
+/// pair (and with it the ROADMAP "virtual deadline" item): wall-clock is
+/// now either converted to a deterministic evaluation count up front
+/// ([`Budget::Calibrated`]) or explicitly opted into as the one
+/// timing-dependent variant ([`Budget::Deadline`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Budget {
+    /// Terminate after `n` candidate draws (the paper's §IV-J
+    /// fixed-valid-mapping criterion; a draw that fails validation within
+    /// the sampler's attempt budget counts toward the draw budget but not
+    /// toward `mappings_evaluated`). The only variant under which plans
+    /// are bit-identical across thread counts.
+    Evaluations(usize),
+    /// An evaluation budget *derived from* a wall-clock target by a
+    /// calibration probe: `probe_draws` candidates of the heaviest chain
+    /// layer are sampled, priced and scored once per run, and `target` is
+    /// converted into a draw count at the measured rate
+    /// ([`calibrate_budget`]). Equal-effort comparisons (Fig. 11) become
+    /// reproducible — given the resolved count (printed by the benches)
+    /// the run is exactly an [`Budget::Evaluations`] run, so pipelining,
+    /// candidate sharing and look-ahead all stay available.
+    Calibrated { target: Duration, probe_draws: usize },
+    /// A raw per-layer wall-clock deadline. Timing-dependent by
+    /// construction: forces the serial fused path and voids the
+    /// bit-identical guarantee. Kept for faithful OverlaPIM-style
+    /// equal-runtime reproductions.
+    Deadline(Duration),
+}
+
+impl std::fmt::Display for Budget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Budget::Evaluations(n) => write!(f, "{n} evals"),
+            Budget::Calibrated { target, probe_draws } => {
+                write!(f, "calibrated {target:?} (probe {probe_draws})")
+            }
+            Budget::Deadline(d) => write!(f, "deadline {d:?}"),
+        }
+    }
+}
+
 /// Mapper configuration.
 #[derive(Debug, Clone)]
 pub struct MapperConfig {
-    /// Candidate draws per layer before terminating (the paper's "fixed
-    /// number of valid mappings" criterion; a draw that fails validation
-    /// within the sampler's attempt budget counts toward the draw budget
-    /// but not toward `mappings_evaluated`).
-    pub budget: usize,
-    /// Optional wall-clock deadline per layer (equal-runtime comparisons).
-    /// Note: a deadline makes results timing-dependent, so the bit-identical
-    /// guarantee across thread counts only holds without one.
-    pub deadline: Option<Duration>,
+    /// Search-effort budget per layer-search call (see [`Budget`]).
+    pub budget: Budget,
+    /// Which search engine explores the map space (see
+    /// [`crate::optimize::SearchAlgo`]). `Random` is the default and the
+    /// reference: it routes through the original fused sampler path and
+    /// is bit-identical to the pre-optimizer behaviour.
+    pub algo: SearchAlgo,
+    /// Guided-engine knobs (population, generations, rates) — unused by
+    /// `Random`.
+    pub optimize: OptimizeConfig,
     /// PRNG seed — fixed seed ⇒ reproducible search.
     pub seed: u64,
     /// Map-space knobs.
@@ -261,22 +309,47 @@ pub struct MapperConfig {
 impl MapperConfig {
     /// Whether the shared candidate store — and with it cross-metric
     /// candidate sharing and speculative look-ahead — is active for this
-    /// configuration: requires no deadline (timing-dependent runs use the
-    /// serial fused path) and a budget within the store's memory cap
+    /// configuration: requires the random engine (guided engines propose
+    /// score-dependent candidates that cannot be shared across metrics),
+    /// a plain evaluation budget (timing-dependent runs use the serial
+    /// fused path; calibrated budgets resolve to evaluations before any
+    /// search starts) and a budget within the store's memory cap
     /// (1024 candidates per call; larger sets would cost more to hold
     /// than to re-enumerate). Concurrent metric jobs still run when this
     /// is `false` — only the sharing/speculation is skipped — and results
     /// are identical either way.
     pub fn sharing_active(&self) -> bool {
-        self.deadline.is_none() && (self.budget as u64) <= SHARE_BUDGET_CAP
+        self.algo == SearchAlgo::Random
+            && matches!(self.budget, Budget::Evaluations(n) if (n as u64) <= SHARE_BUDGET_CAP)
+    }
+
+    /// `true` for the raw wall-clock [`Budget::Deadline`] variant — the
+    /// one timing-dependent mode, which forces the serial fused path.
+    pub fn deadline_mode(&self) -> bool {
+        matches!(self.budget, Budget::Deadline(_))
+    }
+
+    /// The candidate-draw cap this budget implies: the count for
+    /// [`Budget::Evaluations`], effectively unbounded for
+    /// [`Budget::Deadline`] (the clock terminates instead), and the probe
+    /// count as a defensive floor for an unresolved
+    /// [`Budget::Calibrated`] (the search entry points resolve it before
+    /// drawing).
+    pub fn draw_cap(&self) -> usize {
+        match self.budget {
+            Budget::Evaluations(n) => n,
+            Budget::Deadline(_) => usize::MAX / 2,
+            Budget::Calibrated { probe_draws, .. } => probe_draws.max(1),
+        }
     }
 }
 
 impl Default for MapperConfig {
     fn default() -> Self {
         Self {
-            budget: 100,
-            deadline: None,
+            budget: Budget::Evaluations(100),
+            algo: SearchAlgo::Random,
+            optimize: OptimizeConfig::default(),
             seed: 0xFA57,
             mapspace: MapSpaceConfig::default(),
             constraint: MappingConstraint::default(),
@@ -684,6 +757,12 @@ pub struct Mapper<'a> {
     cache: Option<Arc<OverlapCache>>,
     /// Valid mappings evaluated by the last `search_layer` call.
     pub last_evaluated: usize,
+    /// Resolved draw count of a [`Budget::Calibrated`] config, memoized
+    /// after the first search call's probe so every call of this mapper
+    /// uses one consistent budget. (The whole-network engine resolves
+    /// calibration before constructing mappers; this lazy path serves
+    /// standalone `Mapper` users.)
+    calibrated: Option<usize>,
 }
 
 impl<'a> Mapper<'a> {
@@ -701,7 +780,7 @@ impl<'a> Mapper<'a> {
         cache: Option<Arc<OverlapCache>>,
     ) -> Mapper<'a> {
         let rng = SplitMix64::new(config.seed);
-        Mapper { arch, config, rng, cache, last_evaluated: 0 }
+        Mapper { arch, config, rng, cache, last_evaluated: 0, calibrated: None }
     }
 
     /// `(hits, misses)` of the analysis memoizer, totalled across the
@@ -865,15 +944,138 @@ impl<'a> Mapper<'a> {
         self.search_layer_seeded(metric, layer, ctxs, base_seed, None)
     }
 
+    /// Resolve the configured [`Budget`] into a concrete draw cap plus an
+    /// optional wall-clock deadline for one search call. A `Calibrated`
+    /// budget is resolved by a one-time probe against the call's own
+    /// layer/neighbors and memoized for the mapper's lifetime.
+    fn budget_and_deadline(
+        &mut self,
+        metric: Metric,
+        layer: &Layer,
+        ctxs: &[PairContext<'_>],
+    ) -> (u64, Option<Instant>) {
+        match self.config.budget {
+            Budget::Evaluations(n) => (n as u64, None),
+            Budget::Deadline(d) => ((usize::MAX / 2) as u64, Some(Instant::now() + d)),
+            Budget::Calibrated { target, probe_draws } => {
+                let n = match self.calibrated {
+                    Some(n) => n,
+                    None => {
+                        let n = self.calibrate(metric, layer, ctxs, target, probe_draws);
+                        self.calibrated = Some(n);
+                        n
+                    }
+                };
+                (n as u64, None)
+            }
+        }
+    }
+
+    /// Time `probe_draws` full candidate evaluations (sample + price +
+    /// metric score against the fixed neighbors) and convert `target`
+    /// into a draw count at the measured rate. The probe uses a salted
+    /// seed so it cannot perturb the search's own candidate streams, and
+    /// only peeks the cache.
+    fn calibrate(
+        &self,
+        metric: Metric,
+        layer: &Layer,
+        ctxs: &[PairContext<'_>],
+        target: Duration,
+        probe_draws: usize,
+    ) -> usize {
+        const CALIBRATION_SALT: u64 = 0xCA11_B8A7_ED5E_ED00;
+        let probe = probe_draws.max(1);
+        let ms = MapSpace::new(
+            self.arch,
+            layer,
+            self.config.constraint.clone(),
+            self.config.mapspace.clone(),
+        );
+        let pm = PerfModel::new(self.arch);
+        let seed = self.config.seed ^ CALIBRATION_SALT;
+        let t0 = Instant::now();
+        for i in 0..probe as u64 {
+            if let Some(m) = ms.sample_indexed(seed, i) {
+                let stats = pm.evaluate(layer, &m);
+                let _ = self.score(metric, layer, &m, &stats, ctxs, false);
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        let rate = probe as f64 / elapsed;
+        ((target.as_secs_f64() * rate).round() as usize).clamp(probe, 1 << 20)
+    }
+
+    /// Per-layer search driven by a guided engine from
+    /// [`crate::optimize`] (GA / SA / hill-climb): generations of
+    /// propose → batch-score → observe, metered by the same evaluation
+    /// budget the random path draws against. The per-candidate scoring
+    /// closure is exactly the random path's (same metric, same fixed
+    /// neighbors, same cache-peek discipline) and batches through
+    /// [`ParallelMapper::map_collect`], so plans are bit-identical at
+    /// any thread count.
+    fn search_layer_engine(
+        &mut self,
+        metric: Metric,
+        layer: &Layer,
+        ctxs: &[PairContext<'_>],
+        base_seed: u64,
+    ) -> Option<EvaluatedMapping> {
+        let (budget, deadline) = self.budget_and_deadline(metric, layer, ctxs);
+        let ms = MapSpace::new(
+            self.arch,
+            layer,
+            self.config.constraint.clone(),
+            self.config.mapspace.clone(),
+        );
+        // The same infeasibility preflight as the random path (and the
+        // shared-enumeration path): a pure function of the base seed.
+        if budget >= PREFLIGHT_DRAWS && ms.prefix_infeasible(base_seed, PREFLIGHT_DRAWS) {
+            self.last_evaluated = 0;
+            return None;
+        }
+        let pm = PerfModel::new(self.arch);
+        let mut engine = optimize::engine_for(self.config.algo, base_seed, &self.config.optimize);
+        let outcome = {
+            let this: &Mapper<'a> = &*self;
+            let eval = |m: &Mapping| -> u64 {
+                let stats = pm.evaluate(layer, m);
+                // Candidate pairs are one-shot: peek the cache, never
+                // insert.
+                this.score(metric, layer, m, &stats, ctxs, false).0
+            };
+            optimize::run_search(
+                engine.as_mut(),
+                &ms,
+                budget.min((usize::MAX / 2) as u64) as usize,
+                self.config.optimize.population,
+                self.config.optimize.generations,
+                self.config.threads,
+                deadline,
+                &eval,
+            )
+        };
+        self.last_evaluated = outcome.evaluated;
+        let (_, mapping) = outcome.best?;
+        // Re-derive the winner's full evaluation (pure functions —
+        // identical score); the winner's pairs are chosen pairs, worth
+        // storing in the cache.
+        let stats = pm.evaluate(layer, &mapping);
+        let (score, overlap, transform) = self.score(metric, layer, &mapping, &stats, ctxs, true);
+        Some(EvaluatedMapping { mapping, stats, overlap, transform, score })
+    }
+
     /// Core per-layer search at an explicit `base_seed`. The public entry
     /// points draw the seed from the mapper's sequential stream; the
     /// whole-network engine precomputes the same seed schedule up front so
-    /// it can share and prefetch enumerations. With `share`, candidate
-    /// enumeration (sampling + per-layer stats) goes through the
-    /// [`CandidateStore`] — computed once per `(seed, layer)` call however
-    /// many metric jobs need it — and only the metric-specific scoring
-    /// runs here; without it the fused sample-and-score path runs. Both
-    /// paths are bit-identical.
+    /// it can share and prefetch enumerations. Guided engines
+    /// (`algo != Random`) dispatch to [`Mapper::search_layer_engine`];
+    /// the random path below is the original fused sampler, untouched.
+    /// With `share`, candidate enumeration (sampling + per-layer stats)
+    /// goes through the [`CandidateStore`] — computed once per
+    /// `(seed, layer)` call however many metric jobs need it — and only
+    /// the metric-specific scoring runs here; without it the fused
+    /// sample-and-score path runs. Both paths are bit-identical.
     fn search_layer_seeded(
         &mut self,
         metric: Metric,
@@ -882,8 +1084,10 @@ impl<'a> Mapper<'a> {
         base_seed: u64,
         share: Option<(&CandidateStore, u32)>,
     ) -> Option<EvaluatedMapping> {
-        let deadline = self.config.deadline.map(|d| Instant::now() + d);
-        let budget = self.config.budget as u64;
+        if self.config.algo != SearchAlgo::Random {
+            return self.search_layer_engine(metric, layer, ctxs, base_seed);
+        }
+        let (budget, deadline) = self.budget_and_deadline(metric, layer, ctxs);
         let threads = self.config.threads;
 
         if let Some((store, consumers)) = share {
@@ -979,7 +1183,7 @@ impl<'a> Mapper<'a> {
     /// let arch = Arch::dram_pim_small();
     /// let net = zoo::tiny_cnn();
     /// let layer = &net.layers[net.chain()[0]];
-    /// let cfg = MapperConfig { budget: 16, seed: 7, ..Default::default() };
+    /// let cfg = MapperConfig { budget: Budget::Evaluations(16), seed: 7, ..Default::default() };
     /// let mut mapper = Mapper::new(&arch, cfg);
     ///
     /// let best = mapper.search_layer(layer, &[]).expect("a valid mapping");
@@ -1116,7 +1320,7 @@ impl<'a> NetworkSearch<'a> {
     ///
     /// let arch = Arch::dram_pim_small();
     /// let net = zoo::tiny_cnn();
-    /// let cfg = MapperConfig { budget: 12, seed: 5, refine_passes: 0, ..Default::default() };
+    /// let cfg = MapperConfig { budget: Budget::Evaluations(12), seed: 5, refine_passes: 0, ..Default::default() };
     /// let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
     ///     .run(&net, Metric::Overlap);
     ///
@@ -1126,6 +1330,9 @@ impl<'a> NetworkSearch<'a> {
     /// assert!(plan.total_overlapped <= plan.total_sequential);
     /// ```
     pub fn run(&self, net: &Network, metric: Metric) -> NetworkPlan {
+        if matches!(self.config.budget, Budget::Calibrated { .. }) {
+            return self.resolved(net, metric).run(net, metric);
+        }
         let lookahead = self.config.lookahead && self.config.sharing_active();
         if lookahead {
             // A batch of one: the store is purely the hand-off buffer
@@ -1227,7 +1434,7 @@ impl<'a> NetworkSearch<'a> {
                 if !self.config.sharing_active() {
                     return;
                 }
-                let budget = self.config.budget as u64;
+                let budget = self.config.draw_cap() as u64;
                 let consumers = if call + 1 < sweep_calls {
                     sh.sweep_consumers
                 } else {
@@ -1416,7 +1623,22 @@ impl<'a> NetworkSearch<'a> {
     /// (min 1 each), so it keeps meaning "total scoring workers" in both
     /// modes.
     pub fn run_metrics(&self, net: &Network, metrics: &[Metric]) -> Vec<NetworkPlan> {
-        if metrics.len() <= 1 || !self.config.pipeline || self.config.deadline.is_some() {
+        if matches!(self.config.budget, Budget::Calibrated { .. }) && !metrics.is_empty() {
+            // Resolve the calibration ONCE, against the most expensive
+            // metric in the batch, before any job starts: concurrent jobs
+            // share candidate enumerations keyed by (seed, layer), so
+            // they must agree on one draw count.
+            let probe_metric = *metrics
+                .iter()
+                .max_by_key(|m| match m {
+                    Metric::Sequential => 0,
+                    Metric::Overlap => 1,
+                    Metric::Transform => 2,
+                })
+                .expect("non-empty metrics");
+            return self.resolved(net, probe_metric).run_metrics(net, metrics);
+        }
+        if metrics.len() <= 1 || !self.config.pipeline || self.config.deadline_mode() {
             // Serial reference path: one full-network pass per metric, in
             // order. This is the path the pipelined engine must match bit
             // for bit — and the only sound one under a per-layer
@@ -1483,7 +1705,7 @@ impl<'a> NetworkSearch<'a> {
     ///
     /// let arch = Arch::dram_pim_small();
     /// let net = zoo::tiny_cnn();
-    /// let cfg = MapperConfig { budget: 10, seed: 2, refine_passes: 0, ..Default::default() };
+    /// let cfg = MapperConfig { budget: Budget::Evaluations(10), seed: 2, refine_passes: 0, ..Default::default() };
     /// let search = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward);
     /// let (seq, ov, tr) = search.run_all_metrics(&net);
     ///
@@ -1509,6 +1731,78 @@ impl<'a> NetworkSearch<'a> {
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.as_ref().map_or_else(CacheStats::default, |c| c.stats())
     }
+
+    /// A searcher with this one's [`Budget::Calibrated`] resolved to a
+    /// concrete [`Budget::Evaluations`] count for `net` (sharing the same
+    /// analysis cache). No-op clone for the other variants.
+    fn resolved(&self, net: &Network, metric: Metric) -> NetworkSearch<'a> {
+        let mut cfg = self.config.clone();
+        if matches!(cfg.budget, Budget::Calibrated { .. }) {
+            cfg.budget =
+                Budget::Evaluations(calibrate_budget(self.arch, net, &self.config, metric));
+        }
+        NetworkSearch {
+            arch: self.arch,
+            config: cfg,
+            strategy: self.strategy,
+            cache: self.cache.clone(),
+        }
+    }
+}
+
+/// Resolve a [`Budget::Calibrated`] into a concrete per-layer draw count
+/// for `net`: probe the heaviest chain layer (the `Middle` heuristic's
+/// pick) with a representative fixed producer (the previous chain layer
+/// under its deterministic default mapping) and convert the wall-clock
+/// target into draws at the measured rate. An `Evaluations` budget passes
+/// through unchanged; a `Deadline` is treated as a calibration target
+/// with the default probe size — callers that want true wall-clock
+/// cutoffs should keep `Budget::Deadline` in the config instead of
+/// calling this. Benches print the resolved count so equal-effort runs
+/// can be reproduced exactly with `Budget::Evaluations`.
+pub fn calibrate_budget(
+    arch: &Arch,
+    net: &Network,
+    config: &MapperConfig,
+    metric: Metric,
+) -> usize {
+    let (target, probe_draws) = match config.budget {
+        Budget::Calibrated { target, probe_draws } => (target, probe_draws),
+        Budget::Evaluations(n) => return n,
+        Budget::Deadline(d) => (d, 24),
+    };
+    let chain = net.chain();
+    assert!(!chain.is_empty(), "network has no chain layers");
+    let pos = NetworkSearch::middle_start(net, &chain, MiddleHeuristic::LargestOverall);
+    let layer = &net.layers[chain[pos]];
+    let pm = PerfModel::new(arch);
+    // Fixed producer for pair-aware metrics: pair analysis dominates the
+    // per-candidate cost there, so the probe must include it.
+    let prev = if metric != Metric::Sequential && pos > 0 {
+        let prev_layer = &net.layers[chain[pos - 1]];
+        MapSpace::with_defaults(arch, prev_layer)
+            .default_mapping()
+            .map(|m| {
+                let stats = pm.evaluate(prev_layer, &m);
+                (prev_layer, m, stats)
+            })
+    } else {
+        None
+    };
+    let ctxs: Vec<PairContext<'_>> = prev
+        .as_ref()
+        .map(|(l, m, s)| PairContext {
+            role: NeighborRole::Producer,
+            layer: *l,
+            mapping: m,
+            stats: s,
+        })
+        .into_iter()
+        .collect();
+    // Probe through a cache-less mapper so calibration cannot warm (or
+    // be skewed by) the real run's memoizer.
+    let mapper = Mapper::with_cache(arch, config.clone(), None);
+    mapper.calibrate(metric, layer, &ctxs, target, probe_draws)
 }
 
 /// Cross-metric shared state of one pipelined [`NetworkSearch::run_metrics`]
@@ -1545,7 +1839,7 @@ mod tests {
     use crate::workload::zoo;
 
     fn tiny_config(budget: usize, seed: u64) -> MapperConfig {
-        MapperConfig { budget, seed, ..Default::default() }
+        MapperConfig { budget: Budget::Evaluations(budget), seed, ..Default::default() }
     }
 
     #[test]
@@ -1672,7 +1966,7 @@ mod tests {
         let arch = Arch::dram_pim_small();
         let layer = Layer::conv("t", 1, 16, 8, 8, 8, 3, 3, 1, 1);
         let mut cfg = tiny_config(1_000_000, 1);
-        cfg.deadline = Some(Duration::from_millis(30));
+        cfg.budget = Budget::Deadline(Duration::from_millis(30));
         let mut mapper = Mapper::new(&arch, cfg);
         let t0 = Instant::now();
         let best = mapper.search_layer(&layer, &[]);
@@ -1771,6 +2065,59 @@ mod tests {
             .run(&net, Metric::Transform);
         assert_eq!(plans[0].total_transformed, solo.total_transformed);
         assert!(search.run_metrics(&net, &[]).is_empty());
+    }
+
+    #[test]
+    fn calibrated_budget_resolves_and_completes() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let mut cfg = tiny_config(0, 3);
+        cfg.budget = Budget::Calibrated { target: Duration::from_millis(5), probe_draws: 6 };
+        cfg.refine_passes = 0;
+        // The resolver converts the target into a concrete draw count...
+        let n = calibrate_budget(&arch, &net, &cfg, Metric::Transform);
+        assert!(n >= 6, "resolved budget must be at least the probe, got {n}");
+        // ...and the whole-network entry points accept the variant
+        // directly (resolving internally, once per run).
+        let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+            .run(&net, Metric::Overlap);
+        assert_eq!(plan.layers.len(), net.chain().len());
+        assert!(plan.total_sequential > 0);
+    }
+
+    #[test]
+    fn guided_engines_complete_whole_network_search() {
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        for algo in [SearchAlgo::Genetic, SearchAlgo::Annealing, SearchAlgo::HillClimb] {
+            let mut cfg = tiny_config(24, 7);
+            cfg.algo = algo;
+            cfg.optimize.population = 8;
+            let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+                .run(&net, Metric::Transform);
+            assert_eq!(plan.layers.len(), net.chain().len(), "{algo:?}");
+            assert!(plan.total_transformed > 0, "{algo:?}");
+            assert!(plan.mappings_evaluated > 0, "{algo:?}");
+            for l in &plan.layers {
+                l.mapping.validate(&arch, &net.layers[l.layer_index]).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn budget_display_and_caps() {
+        assert_eq!(Budget::Evaluations(42).to_string(), "42 evals");
+        assert!(Budget::Deadline(Duration::from_millis(5)).to_string().contains("deadline"));
+        let mut cfg = tiny_config(12, 1);
+        assert_eq!(cfg.draw_cap(), 12);
+        assert!(!cfg.deadline_mode());
+        assert!(cfg.sharing_active());
+        cfg.budget = Budget::Deadline(Duration::from_millis(1));
+        assert!(cfg.deadline_mode());
+        assert!(!cfg.sharing_active());
+        cfg.budget = Budget::Evaluations(12);
+        cfg.algo = SearchAlgo::Genetic;
+        assert!(!cfg.sharing_active(), "guided engines must not share candidate stores");
     }
 
     #[test]

@@ -123,7 +123,7 @@ pub fn transform_ready_jobs(pair: &LayerPair<'_>, config: &TransformConfig) -> V
 /// let arch = Arch::dram_pim_small();
 /// let net = zoo::tiny_cnn();
 /// let chain = net.chain();
-/// let cfg = MapperConfig { budget: 16, seed: 3, ..Default::default() };
+/// let cfg = MapperConfig { budget: Budget::Evaluations(16), seed: 3, ..Default::default() };
 /// let mut mapper = Mapper::new(&arch, cfg);
 /// let (la, lb) = (&net.layers[chain[0]], &net.layers[chain[1]]);
 /// let ea = mapper.search_layer(la, &[]).expect("producer mapping");

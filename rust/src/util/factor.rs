@@ -28,12 +28,6 @@ pub fn divisors(n: u64) -> Vec<u64> {
 /// (each factor >= 1, product == n). The number of results is
 /// multiplicative over prime powers: for p^e it is C(e + parts - 1, parts - 1).
 pub fn ordered_factorizations(n: u64, parts: usize) -> Vec<Vec<u64>> {
-    assert!(parts >= 1);
-    let mut out = Vec::new();
-    let mut cur = Vec::with_capacity(parts);
-    rec(n, parts, &mut cur, &mut out);
-    return out;
-
     fn rec(n: u64, parts: usize, cur: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
         if parts == 1 {
             cur.push(n);
@@ -47,6 +41,11 @@ pub fn ordered_factorizations(n: u64, parts: usize) -> Vec<Vec<u64>> {
             cur.pop();
         }
     }
+    assert!(parts >= 1);
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(parts);
+    rec(n, parts, &mut cur, &mut out);
+    out
 }
 
 /// Count of ordered factorizations without materializing them

@@ -18,6 +18,15 @@ pub enum LayerKind {
     Fc,
     /// Matrix multiply A[P,C]·W[C,K] expressed with Q=R=S=1 (BERT §VI).
     MatMul,
+    /// Depthwise convolution (MobileNet-style): each of the `K` output
+    /// channels convolves exactly its own input channel. Encoded in the
+    /// 7D space with `C = 1` — the loop nest then computes exactly
+    /// `N·K·P·Q·R·S` MACs — while the *data* sizes account for the real
+    /// `K` input channels ([`Layer::input_size`]) and the per-channel
+    /// `K·R·S` filter bank ([`Layer::weight_size`]). The channel-identity
+    /// input dependence (output channel `k` reads input channel `k`) is
+    /// modelled by the overlap analysis's depthwise input-box arm.
+    Depthwise,
 }
 
 /// One DNN layer in the 7D representation.
@@ -126,6 +135,37 @@ impl Layer {
         }
     }
 
+    /// Depthwise convolution: `k` channels, each filtering its own input
+    /// channel (`C = 1` in the 7D encoding — see [`LayerKind::Depthwise`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise(
+        name: &str,
+        n: u64,
+        k: u64,
+        p: u64,
+        q: u64,
+        r: u64,
+        s: u64,
+        stride: u64,
+        pad: u64,
+    ) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Depthwise,
+            n,
+            k,
+            c: 1,
+            p,
+            q,
+            r,
+            s,
+            stride,
+            pad,
+            pool_after: 1,
+            skip: false,
+        }
+    }
+
     /// Builder: mark a pooling stage after this layer.
     pub fn with_pool(mut self, factor: u64) -> Layer {
         self.pool_after = factor;
@@ -159,12 +199,19 @@ impl Layer {
     }
 
     /// Input tensor element count (paper §IV-E: `[N, C, P+R−1, Q+S−1]` for
-    /// stride 1; generalized to the strided receptive extent).
+    /// stride 1; generalized to the strided receptive extent). A depthwise
+    /// layer reads its full `K`-channel input despite `C = 1` in the loop
+    /// encoding.
     pub fn input_size(&self) -> u64 {
-        self.n * self.c * self.input_h().max(1) * self.input_w().max(1)
+        let channels = match self.kind {
+            LayerKind::Depthwise => self.k,
+            _ => self.c,
+        };
+        self.n * channels * self.input_h().max(1) * self.input_w().max(1)
     }
 
-    /// Weight tensor element count `K·C·R·S`.
+    /// Weight tensor element count `K·C·R·S` (`K·R·S` for depthwise,
+    /// where `C = 1` by encoding).
     pub fn weight_size(&self) -> u64 {
         self.k * self.c * self.r * self.s
     }
@@ -203,6 +250,7 @@ impl Layer {
             LayerKind::Conv => 1,
             LayerKind::Fc => 2,
             LayerKind::MatMul => 3,
+            LayerKind::Depthwise => 4,
         });
         for v in [
             self.n,
@@ -237,6 +285,12 @@ impl Layer {
             if v == 0 {
                 return Err(format!("layer `{}`: {nm} must be >= 1", self.name));
             }
+        }
+        if self.kind == LayerKind::Depthwise && self.c != 1 {
+            return Err(format!(
+                "layer `{}`: depthwise layers encode C = 1, got {}",
+                self.name, self.c
+            ));
         }
         Ok(())
     }
@@ -286,7 +340,13 @@ impl Network {
                 }
                 _ => a.k,
             };
-            let consumed = b.c;
+            // A depthwise consumer maps input channel k to output channel
+            // k, so it consumes K channels even though its loop encoding
+            // has C = 1.
+            let consumed = match b.kind {
+                LayerKind::Depthwise => b.k,
+                _ => b.c,
+            };
             if produced != consumed {
                 return Err(format!(
                     "network `{}`: `{}` produces {} channels but `{}` consumes {}",
@@ -356,6 +416,41 @@ mod tests {
         let fc = Layer::fc("a", 1, 8, 8);
         let mm = Layer::matmul("a", 8, 8, 8);
         assert_ne!(fc.fingerprint(), mm.fingerprint());
+    }
+
+    #[test]
+    fn depthwise_shapes_and_chains() {
+        let dw = Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1, 1);
+        dw.validate().unwrap();
+        assert_eq!(dw.c, 1);
+        // MACs: one filter application per output channel (no C reduction).
+        assert_eq!(dw.macs(), 32 * 56 * 56 * 9);
+        // Data sizes: the full K-channel input and the per-channel filters.
+        assert_eq!(dw.input_size(), 32 * dw.input_h() * dw.input_w());
+        assert_eq!(dw.weight_size(), 32 * 9);
+        // Chains: conv(K=32) → dw(K=32) → conv(C=32) must validate...
+        let net = Network::new(
+            "dwchain",
+            vec![
+                Layer::conv("pw0", 1, 32, 8, 56, 56, 1, 1, 1, 0),
+                Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1, 1),
+                Layer::conv("pw1", 1, 64, 32, 56, 56, 1, 1, 1, 0),
+            ],
+        );
+        net.validate().unwrap();
+        // ...and a channel-count mismatch into a depthwise is caught.
+        let bad = Network::new(
+            "dwbad",
+            vec![
+                Layer::conv("pw0", 1, 16, 8, 56, 56, 1, 1, 1, 0),
+                Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1, 1),
+            ],
+        );
+        assert!(bad.validate().is_err());
+        // A depthwise with C != 1 is malformed by construction.
+        let mut broken = Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1, 1);
+        broken.c = 32;
+        assert!(broken.validate().is_err());
     }
 
     #[test]

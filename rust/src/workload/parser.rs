@@ -49,6 +49,7 @@ fn layer_from_value(v: &Value) -> Result<Layer, String> {
         "conv" => LayerKind::Conv,
         "fc" => LayerKind::Fc,
         "matmul" => LayerKind::MatMul,
+        "depthwise" => LayerKind::Depthwise,
         other => return Err(format!("unknown kind `{other}`")),
     };
     let g = |key: &str, default: u64| v.get(key).and_then(Value::as_u64).unwrap_or(default);
@@ -85,6 +86,7 @@ pub fn network_to_yaml(net: &Network) -> String {
             LayerKind::Conv => "conv",
             LayerKind::Fc => "fc",
             LayerKind::MatMul => "matmul",
+            LayerKind::Depthwise => "depthwise",
         };
         let _ = writeln!(s, "  - name: {}", l.name);
         let _ = writeln!(s, "    kind: {kind}");

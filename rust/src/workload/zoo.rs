@@ -170,6 +170,47 @@ pub fn bert_encoder() -> Network {
     net
 }
 
+/// MobileNetV1 (Howard et al. 2017) at 224×224, width 1.0: conv1 plus 13
+/// depthwise-separable blocks (depthwise 3×3 + pointwise 1×1) and the
+/// classifier. The depthwise layers carry `C = 1` in the 7D encoding
+/// ([`crate::workload::LayerKind::Depthwise`]) — the small-C extreme that
+/// stresses factorization-aware split encodings: almost all factors live
+/// on K/P/Q, and the reduction is just the 3×3 window.
+pub fn mobilenet() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::conv("conv1", 1, 32, 3, 112, 112, 3, 3, 2, 1));
+    // (block, dw stride, dw output spatial, dw channels, pw output channels)
+    let blocks: &[(usize, u64, u64, u64, u64)] = &[
+        (1, 1, 112, 32, 64),
+        (2, 2, 56, 64, 128),
+        (3, 1, 56, 128, 128),
+        (4, 2, 28, 128, 256),
+        (5, 1, 28, 256, 256),
+        (6, 2, 14, 256, 512),
+        (7, 1, 14, 512, 512),
+        (8, 1, 14, 512, 512),
+        (9, 1, 14, 512, 512),
+        (10, 1, 14, 512, 512),
+        (11, 1, 14, 512, 512),
+        (12, 2, 7, 512, 1024),
+        (13, 1, 7, 1024, 1024),
+    ];
+    for &(b, stride, hw, ch, out) in blocks {
+        layers.push(Layer::depthwise(&format!("dw{b}"), 1, ch, hw, hw, 3, 3, stride, 1));
+        let mut pw = Layer::conv(&format!("pw{b}"), 1, out, ch, hw, hw, 1, 1, 1, 0);
+        if b == 13 {
+            // Global average pool before the classifier.
+            pw = pw.with_pool(7);
+        }
+        layers.push(pw);
+    }
+    layers.push(Layer::fc("fc", 1, 1000, 1024));
+
+    let net = Network::new("mobilenet", layers);
+    net.validate().expect("mobilenet must validate");
+    net
+}
+
 /// A tiny CNN for the functional end-to-end driver: small enough that its
 /// AOT tile executables compile quickly, large enough to exercise multi-step
 /// overlap schedules on the small DRAM-PIM preset.
@@ -191,6 +232,7 @@ pub fn by_name(name: &str) -> Option<Network> {
         "resnet18" => Some(resnet18()),
         "vgg16" => Some(vgg16()),
         "resnet50" => Some(resnet50()),
+        "mobilenet" | "mobilenetv1" => Some(mobilenet()),
         "bert" | "bert-encoder" => Some(bert_encoder()),
         "tiny" | "tiny-cnn" => Some(tiny_cnn()),
         _ => None,
@@ -203,6 +245,7 @@ pub fn all() -> Vec<(&'static str, Network)> {
         ("resnet18", resnet18()),
         ("vgg16", vgg16()),
         ("resnet50", resnet50()),
+        ("mobilenet", mobilenet()),
         ("bert-encoder", bert_encoder()),
         ("tiny-cnn", tiny_cnn()),
     ]
@@ -233,6 +276,24 @@ mod tests {
         // conv1 + 16 blocks x 3 convs + fc = 50 main-chain layers.
         assert_eq!(net.chain().len(), 50);
         assert_eq!(net.layers.iter().filter(|l| l.skip).count(), 4);
+    }
+
+    #[test]
+    fn mobilenet_layer_counts() {
+        let net = mobilenet();
+        // conv1 + 13 × (dw + pw) + fc, no skip branches.
+        assert_eq!(net.layers.len(), 28);
+        assert_eq!(net.chain().len(), 28);
+        let dw: Vec<_> = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == crate::workload::LayerKind::Depthwise)
+            .collect();
+        assert_eq!(dw.len(), 13);
+        assert!(dw.iter().all(|l| l.c == 1), "depthwise layers encode C = 1");
+        // Published MACs for MobileNetV1-224: ~0.57G.
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((0.5..0.65).contains(&g), "mobilenet GMACs = {g}");
     }
 
     #[test]

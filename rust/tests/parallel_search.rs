@@ -15,7 +15,14 @@ use fastoverlapim::prelude::*;
 use fastoverlapim::workload::zoo;
 
 fn cfg(budget: usize, seed: u64, threads: usize, cache: bool) -> MapperConfig {
-    MapperConfig { budget, seed, threads, cache, refine_passes: 1, ..Default::default() }
+    MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed,
+        threads,
+        cache,
+        refine_passes: 1,
+        ..Default::default()
+    }
 }
 
 /// The serial reference configuration: no concurrent metric jobs, no

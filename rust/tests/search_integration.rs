@@ -9,7 +9,12 @@ use fastoverlapim::workload::{parser, zoo};
 use std::time::Duration;
 
 fn cfg(budget: usize, seed: u64) -> MapperConfig {
-    MapperConfig { budget, seed, refine_passes: 1, ..Default::default() }
+    MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed,
+        refine_passes: 1,
+        ..Default::default()
+    }
 }
 
 #[test]
@@ -136,7 +141,7 @@ fn deadline_bounds_runtime() {
     let arch = Arch::dram_pim();
     let net = zoo::vgg16();
     let mut c = cfg(usize::MAX / 2, 1);
-    c.deadline = Some(Duration::from_millis(20));
+    c.budget = Budget::Deadline(Duration::from_millis(20));
     c.refine_passes = 0;
     let t0 = std::time::Instant::now();
     let plan = NetworkSearch::new(&arch, c, SearchStrategy::Forward).run(&net, Metric::Sequential);
