@@ -10,8 +10,12 @@
 //!
 //! * [`arch`] — PIM architecture descriptions (DRAM-PIM, ReRAM-PIM) and a
 //!   YAML-subset configuration parser (paper §IV-B, Figs. 6–7).
-//! * [`workload`] — 7D DNN layer descriptors and the model zoo the paper
-//!   evaluates (ResNet-18/50, VGG-16, a BERT encoder block) (§IV-E).
+//! * [`workload`] — 7D DNN layer descriptors, the model zoo the paper
+//!   evaluates (ResNet-18/50, VGG-16, a BERT encoder block) (§IV-E), and
+//!   the [`workload::NetworkGraph`] computation-DAG representation
+//!   (explicit producer→consumer edges, validated acyclicity, a
+//!   deterministic topological order) with graph zoo presets (ResNet-18
+//!   with true skip edges, a BERT-style attention block).
 //! * [`mapping`] — loop-nest mappings: per-level spatial/temporal loops,
 //!   tile shapes, data footprints and validity checks (§IV-E, Fig. 8).
 //! * [`mapspace`] — map-space construction and exploration: index
@@ -88,19 +92,20 @@ pub mod prelude {
         SimulatedAnnealing,
     };
     pub use crate::overlap::{
-        overlapped_latency, AnalyticalOverlap, CacheStats, ExhaustiveOverlap, LayerPair,
-        OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
+        merge_ready_times, overlapped_latency, overlapped_latency_at, AnalyticalOverlap,
+        CacheStats, ExhaustiveOverlap, LayerPair, OverlapAnalysis, OverlapCache, OverlapConfig,
+        OverlapResult,
     };
     pub use crate::perf::{LayerStats, PerfModel};
     pub use crate::search::{
-        calibrate_budget, Algorithm, AnalysisEngine, Budget, CandidateStore, EvaluatedMapping,
-        Mapper, MapperConfig, Metric, MiddleHeuristic, NetworkPlan, NetworkSearch,
-        ParallelMapper, SearchStrategy,
+        calibrate_budget, calibrate_budget_graph, Algorithm, AnalysisEngine, Budget,
+        CandidateStore, EdgeOverlap, EvaluatedMapping, Mapper, MapperConfig, Metric,
+        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
     };
     pub use crate::transform::{
-        transform_ready_jobs, transform_schedule, transform_schedule_owned,
-        transform_schedule_with_jobs, TransformConfig, TransformResult,
+        merge_ready_jobs, transform_ready_jobs, transform_schedule, transform_schedule_multi,
+        transform_schedule_owned, transform_schedule_with_jobs, TransformConfig, TransformResult,
     };
     pub use crate::util::rng::SplitMix64;
-    pub use crate::workload::{Layer, LayerKind, Network};
+    pub use crate::workload::{Layer, LayerKind, Network, NetworkGraph};
 }

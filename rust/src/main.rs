@@ -2,12 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `search`    — whole-network mapping optimization (the paper's flow)
+//! * `search`    — whole-network mapping optimization (the paper's flow);
+//!   chain and graph workloads alike (graphs get per-edge overlap reports)
 //! * `analyze`   — overlap analysis of one consecutive-layer pair
+//! * `graph`     — inspect a graph workload; `--dot` emits Graphviz DOT
 //! * `arch`      — dump/validate architecture configurations
 //! * `export`    — write a zoo network as a workload description file
 //! * `exec`      — run the tiny-CNN end-to-end engine over PJRT artifacts
-//! * `list`      — list zoo networks and their layers
+//! * `list`      — list zoo networks (chains and graph presets)
 //!
 //! Run `repro help` for usage.
 
@@ -23,6 +25,7 @@ fn main() {
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
         Some("analyze") => cmd_analyze(&args),
+        Some("graph") => cmd_graph(&args),
         Some("arch") => cmd_arch(&args),
         Some("export") => cmd_export(&args),
         Some("exec") => cmd_exec(&args),
@@ -44,7 +47,7 @@ repro — Fast-OverlaPIM reproduction driver
 USAGE: repro <subcommand> [options]
 
 SUBCOMMANDS
-  search   --net <zoo|file.yaml> [--arch dram|reram|small|file.yaml]
+  search   --net <zoo|graph-zoo|file.yaml> [--arch dram|reram|small|file.yaml]
            [--budget N] [--budget-evals N] [--seed S]
            [--strategy forward|backward|middle|middle2]
            [--metric seq|overlap|transform|all] [--engine analytical|exhaustive]
@@ -57,8 +60,13 @@ SUBCOMMANDS
             --algo selects the search engine — ga/sa/hill are the guided
             optimizers, random the Timeloop-style baseline;
             --calibrate-ms converts a wall-clock target into a fixed
-            evaluation budget via a probe, so the run stays reproducible)
+            evaluation budget via a probe, so the run stays reproducible;
+            graph workloads — graph zoo presets like resnet18-graph or a
+            YAML file using `inputs:` edges — search with the branch-aware
+            topological engine and report per-edge overlap)
   analyze  --net <zoo> --pair I [--budget N] [--seed S]
+  graph    --net <graph-zoo|zoo|file.yaml> [--dot]
+           (chains are viewed as linear graphs; --dot emits Graphviz DOT)
   arch     [--config dram|reram|small|file.yaml] [--dump]
   export   --net <zoo> [--out file.yaml]
   exec     [--policy inorder|transformed|both] [--budget N] [--seed S]
@@ -109,6 +117,47 @@ fn load_net(args: &Args) -> Network {
     });
     parser::network_from_yaml(&text)
         .unwrap_or_else(|e| fail(format!("parsing network file `{name}`: {e}")))
+}
+
+/// A `--net` argument resolved to its workload representation: a layer
+/// chain or a computation graph.
+enum Workload {
+    Chain(Network),
+    Graph(NetworkGraph),
+}
+
+/// Resolve `--net` graph-aware: graph zoo presets and YAML files using
+/// the graph syntax (`inputs:` edges or a top-level `output:`) load as
+/// [`NetworkGraph`]s; everything else stays a chain.
+fn load_workload(args: &Args) -> Workload {
+    let name = args.get("net").unwrap_or("resnet18");
+    if let Some(g) = zoo::graph_by_name(name) {
+        return Workload::Graph(g);
+    }
+    if let Some(net) = zoo::by_name(name) {
+        return Workload::Chain(net);
+    }
+    let text = std::fs::read_to_string(name).unwrap_or_else(|e| {
+        let zoo_names: Vec<&str> = zoo::all().iter().map(|(n, _)| *n).collect();
+        let graph_names: Vec<&str> = zoo::graphs().iter().map(|(n, _)| *n).collect();
+        fail(format!(
+            "reading network `{name}`: {e} (valid zoo names: {}, graph presets: {}, \
+             or a YAML file path)",
+            zoo_names.join("|"),
+            graph_names.join("|")
+        ))
+    });
+    if parser::yaml_is_graph(&text) {
+        Workload::Graph(
+            parser::graph_from_yaml(&text)
+                .unwrap_or_else(|e| fail(format!("parsing network file `{name}`: {e}"))),
+        )
+    } else {
+        Workload::Chain(
+            parser::network_from_yaml(&text)
+                .unwrap_or_else(|e| fail(format!("parsing network file `{name}`: {e}"))),
+        )
+    }
 }
 
 /// Parse an integer-valued option through [`fail`] instead of a panic.
@@ -192,20 +241,37 @@ fn strategy(args: &Args) -> SearchStrategy {
     }
 }
 
+/// Parse `--metric`; `None` means `all` (the baseline matrix).
+fn metric_arg(args: &Args) -> Option<Metric> {
+    match args.get_or("metric", "transform") {
+        "seq" | "sequential" => Some(Metric::Sequential),
+        "overlap" => Some(Metric::Overlap),
+        "transform" => Some(Metric::Transform),
+        "all" => None,
+        other => fail(format!("unknown metric `{other}` (valid: seq|overlap|transform|all)")),
+    }
+}
+
 fn cmd_search(args: &Args) {
     let arch = load_arch(args);
-    let net = load_net(args);
     let cfg = mapper_config(args);
     let strat = strategy(args);
-    let metric = match args.get_or("metric", "transform") {
-        "seq" | "sequential" => Metric::Sequential,
-        "overlap" => Metric::Overlap,
-        "transform" => Metric::Transform,
-        "all" => {
-            cmd_search_matrix(args, &arch, &net, cfg, strat);
-            return;
-        }
-        other => fail(format!("unknown metric `{other}` (valid: seq|overlap|transform|all)")),
+    match load_workload(args) {
+        Workload::Chain(net) => cmd_search_chain(args, &arch, &net, cfg, strat),
+        Workload::Graph(g) => cmd_search_graph(args, &arch, &g, cfg, strat),
+    }
+}
+
+fn cmd_search_chain(
+    args: &Args,
+    arch: &Arch,
+    net: &Network,
+    cfg: MapperConfig,
+    strat: SearchStrategy,
+) {
+    let Some(metric) = metric_arg(args) else {
+        cmd_search_matrix(args, arch, net, cfg, strat);
+        return;
     };
     eprintln!(
         "searching {} on {} (budget {}, algo {}, {:?}, {:?}, {:?} engine)...",
@@ -252,24 +318,7 @@ fn cmd_search(args: &Args) {
     }
 
     if args.has_flag("per-layer") {
-        let mut t = Table::new(
-            "per-layer contributions (cycles)",
-            &["layer", "sequential", "overlapped", "transformed", "overlap frac"],
-        );
-        for l in &plan.layers {
-            t.row(vec![
-                l.name.clone(),
-                cycles(l.sequential_contribution()),
-                cycles(l.overlapped_contribution()),
-                cycles(l.transformed_contribution()),
-                format!("{:.2}", l.overlap.map_or(0.0, |o| o.overlap_fraction)),
-            ]);
-        }
-        if args.has_flag("csv") {
-            print!("{}", t.to_csv());
-        } else {
-            println!("{}", t.render());
-        }
+        print_per_layer(args, &plan, "per-layer contributions (cycles)");
     }
 }
 
@@ -338,25 +387,221 @@ fn cmd_search_matrix(
 
     if args.has_flag("per-layer") {
         for plan in [&seq, &ov, &tr] {
-            let mut t = Table::new(
+            print_per_layer(
+                args,
+                plan,
                 &format!("per-layer contributions — {:?}-metric plan (cycles)", plan.metric),
-                &["layer", "sequential", "overlapped", "transformed", "overlap frac"],
             );
-            for l in &plan.layers {
-                t.row(vec![
-                    l.name.clone(),
-                    cycles(l.sequential_contribution()),
-                    cycles(l.overlapped_contribution()),
-                    cycles(l.transformed_contribution()),
-                    format!("{:.2}", l.overlap.map_or(0.0, |o| o.overlap_fraction)),
-                ]);
-            }
-            if args.has_flag("csv") {
-                print!("{}", t.to_csv());
-            } else {
-                println!("{}", t.render());
-            }
         }
+    }
+}
+
+fn cmd_search_graph(
+    args: &Args,
+    arch: &Arch,
+    g: &NetworkGraph,
+    cfg: MapperConfig,
+    strat: SearchStrategy,
+) {
+    let Some(metric) = metric_arg(args) else {
+        cmd_search_matrix_graph(args, arch, g, cfg, strat);
+        return;
+    };
+    eprintln!(
+        "searching {} ({} nodes, {} edges) on {} (budget {}, algo {}, {:?}, {:?}, {:?} engine)...",
+        g.name,
+        g.len(),
+        g.edges.len(),
+        arch.name,
+        cfg.budget,
+        cfg.algo.name(),
+        strat,
+        metric,
+        cfg.engine
+    );
+    let threads = cfg.threads;
+    let search = NetworkSearch::new(arch, cfg, strat);
+    let plan = search.run_graph(g, metric);
+
+    let mut t = Table::new(
+        &format!("{} / {} / {:?}", g.name, arch.name, metric),
+        &["total", "cycles", "vs sequential"],
+    );
+    t.row(vec!["sequential".into(), cycles(plan.total_sequential), "1.0x".into()]);
+    t.row(vec![
+        "overlapped".into(),
+        cycles(plan.total_overlapped),
+        speedup(plan.total_sequential, plan.total_overlapped),
+    ]);
+    t.row(vec![
+        "transformed".into(),
+        cycles(plan.total_transformed),
+        speedup(plan.total_sequential, plan.total_transformed),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "search: {} mappings evaluated in {:.2?} ({} thread{})",
+        plan.mappings_evaluated,
+        plan.wallclock,
+        threads,
+        if threads == 1 { "" } else { "s" }
+    );
+    if plan.cache_hits + plan.cache_misses > 0 {
+        println!(
+            "overlap cache: {} hits / {} misses",
+            plan.cache_hits, plan.cache_misses
+        );
+    }
+    print_edge_overlaps(args, &plan);
+    if args.has_flag("per-layer") {
+        print_per_layer(args, &plan, "per-layer contributions (cycles)");
+    }
+}
+
+/// `search --metric all` on a graph workload: the baseline matrix under
+/// the branch-aware topological engine.
+fn cmd_search_matrix_graph(
+    args: &Args,
+    arch: &Arch,
+    g: &NetworkGraph,
+    cfg: MapperConfig,
+    strat: SearchStrategy,
+) {
+    use fastoverlapim::search::{algorithm_total, Algorithm};
+    eprintln!(
+        "searching {} ({} nodes, {} edges) on {} under all three metrics (budget {}, {:?})...",
+        g.name,
+        g.len(),
+        g.edges.len(),
+        arch.name,
+        cfg.budget,
+        strat
+    );
+    let search = NetworkSearch::new(arch, cfg, strat);
+    let started = std::time::Instant::now();
+    let (seq, ov, tr) = search.run_graph_all_metrics(g);
+    let wallclock = started.elapsed();
+
+    let mut t = Table::new(
+        &format!("{} / {} / baseline matrix", g.name, arch.name),
+        &["algorithm", "cycles", "vs Best Original"],
+    );
+    let base = seq.total_sequential;
+    for alg in Algorithm::ALL {
+        let v = algorithm_total(alg, &seq, &ov, &tr);
+        t.row(vec![alg.name().to_string(), cycles(v), speedup(base, v)]);
+    }
+    println!("{}", t.render());
+    if args.has_flag("csv") {
+        print!("{}", t.to_csv());
+    }
+    println!(
+        "matrix wall-clock: {wallclock:.2?} ({} mappings evaluated across 3 metric runs)",
+        seq.mappings_evaluated + ov.mappings_evaluated + tr.mappings_evaluated
+    );
+    let stats = search.cache_stats();
+    if stats.hits() + stats.misses() > 0 {
+        println!(
+            "analysis cache: ready {}h/{}m, transform {}h/{}m",
+            stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses
+        );
+    }
+    print_edge_overlaps(args, &tr);
+    if args.has_flag("per-layer") {
+        for plan in [&seq, &ov, &tr] {
+            print_per_layer(
+                args,
+                plan,
+                &format!("per-layer contributions — {:?}-metric plan (cycles)", plan.metric),
+            );
+        }
+    }
+}
+
+/// Per-edge pairwise overlap report for a graph plan (each
+/// producer→consumer edge between the chosen mappings).
+fn print_edge_overlaps(args: &Args, plan: &NetworkPlan) {
+    let mut t = Table::new(
+        "per-edge overlap (pairwise, cycles)",
+        &["edge", "overlap added", "transform added", "saving", "overlap frac"],
+    );
+    for e in &plan.edge_overlaps {
+        t.row(vec![
+            format!("{} -> {}", plan.layers[e.from].name, plan.layers[e.to].name),
+            cycles(e.overlap.added_latency),
+            cycles(e.transform.added_latency),
+            cycles(e.overlap.saving),
+            format!("{:.2}", e.overlap.overlap_fraction),
+        ]);
+    }
+    if args.has_flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+fn print_per_layer(args: &Args, plan: &NetworkPlan, title: &str) {
+    let mut t = Table::new(
+        title,
+        &["layer", "sequential", "overlapped", "transformed", "overlap frac"],
+    );
+    for l in &plan.layers {
+        t.row(vec![
+            l.name.clone(),
+            cycles(l.sequential_contribution()),
+            cycles(l.overlapped_contribution()),
+            cycles(l.transformed_contribution()),
+            format!("{:.2}", l.overlap.map_or(0.0, |o| o.overlap_fraction)),
+        ]);
+    }
+    if args.has_flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+    }
+}
+
+/// `repro graph`: inspect a workload as a computation graph. Chains are
+/// promoted to linear graphs, so every `--net` value works here.
+fn cmd_graph(args: &Args) {
+    let g = match load_workload(args) {
+        Workload::Graph(g) => g,
+        Workload::Chain(net) => NetworkGraph::from_network(&net),
+    };
+    if args.has_flag("dot") {
+        print!("{}", g.to_dot());
+        return;
+    }
+    println!(
+        "graph `{}`: {} nodes, {} edges, {} source{}, {} sink{}, {:.2} GMACs{}",
+        g.name,
+        g.len(),
+        g.edges.len(),
+        g.sources().len(),
+        if g.sources().len() == 1 { "" } else { "s" },
+        g.sinks().len(),
+        if g.sinks().len() == 1 { "" } else { "s" },
+        g.total_macs() as f64 / 1e9,
+        if g.is_linear() { " (linear)" } else { "" },
+    );
+    let mut t = Table::new("nodes (topological order)", &["node", "kind", "inputs", "outputs"]);
+    for &v in g.topo() {
+        let l = &g.layers[v];
+        let names = |idxs: &[usize]| {
+            idxs.iter().map(|&i| g.layers[i].name.as_str()).collect::<Vec<_>>().join(" ")
+        };
+        t.row(vec![
+            l.name.clone(),
+            format!("{:?}", l.kind),
+            names(g.preds(v)),
+            names(g.succs(v)),
+        ]);
+    }
+    if args.has_flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
     }
 }
 
@@ -431,8 +676,10 @@ fn cmd_arch(args: &Args) {
 }
 
 fn cmd_export(args: &Args) {
-    let net = load_net(args);
-    let text = parser::network_to_yaml(&net);
+    let text = match load_workload(args) {
+        Workload::Chain(net) => parser::network_to_yaml(&net),
+        Workload::Graph(g) => parser::graph_to_yaml(&g),
+    };
     match args.get("out") {
         Some(path) => {
             std::fs::write(path, &text).expect("writing network file");
@@ -499,6 +746,16 @@ fn cmd_list() {
             net.layers.len().to_string(),
             net.chain().len().to_string(),
             format!("{:.2}", net.total_macs() as f64 / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    let mut t = Table::new("graph zoo", &["name", "nodes", "edges", "GMACs"]);
+    for (name, g) in zoo::graphs() {
+        t.row(vec![
+            name.to_string(),
+            g.len().to_string(),
+            g.edges.len().to_string(),
+            format!("{:.2}", g.total_macs() as f64 / 1e9),
         ]);
     }
     println!("{}", t.render());

@@ -95,6 +95,37 @@ impl ReadyTimes {
     }
 }
 
+/// Merge per-predecessor ready times into the consumer's effective ready
+/// times (graph workloads, §IV-G generalized): each part is `(producer
+/// start offset, pairwise ready times)` and a consumer step is ready only
+/// when *every* predecessor has produced its region — the max over
+/// `offset + ready`. A ready time of 0 means the region lies wholly in
+/// padding (no dependence), so it contributes 0 rather than the offset.
+///
+/// The probe schedules of all parts align by construction: probe steps
+/// are a pure function of the consumer's step count and the probe budget,
+/// both shared across the predecessor set.
+pub fn merge_ready_times(parts: &[(u64, &ReadyTimes)]) -> ReadyTimes {
+    assert!(!parts.is_empty(), "merge needs at least one predecessor");
+    let (off0, first) = parts[0];
+    let mut probes: Vec<(u64, u64)> = first
+        .probes
+        .iter()
+        .map(|&(t, r)| (t, if r == 0 { 0 } else { off0 + r }))
+        .collect();
+    for &(off, rt) in &parts[1..] {
+        debug_assert_eq!(rt.total_steps, first.total_steps, "probe schedules must align");
+        debug_assert_eq!(rt.probes.len(), probes.len(), "probe schedules must align");
+        for (acc, &(t, r)) in probes.iter_mut().zip(&rt.probes) {
+            debug_assert_eq!(acc.0, t, "probe schedules must align");
+            if r > 0 {
+                acc.1 = acc.1.max(off + r);
+            }
+        }
+    }
+    ReadyTimes { probes, total_steps: first.total_steps }
+}
+
 /// A producer/consumer pair under analysis: layers, mappings, performance
 /// stats, and the precomputed coordinate transform between the consumer's
 /// input space and the producer's output space.
@@ -131,7 +162,10 @@ impl<'a> LayerPair<'a> {
         // *selects* the input channel, so K must stay in the
         // representative set there.
         use crate::mapping::Dim;
-        let rep_dims: &[Dim] = if consumer.0.kind == LayerKind::Depthwise {
+        let rep_dims: &[Dim] = if matches!(
+            consumer.0.kind,
+            LayerKind::Depthwise | LayerKind::Elementwise
+        ) {
             &[Dim::K, Dim::P, Dim::Q, Dim::C, Dim::R, Dim::S]
         } else {
             &[Dim::P, Dim::Q, Dim::C, Dim::R, Dim::S]
@@ -162,7 +196,12 @@ impl<'a> LayerPair<'a> {
             LayerKind::Conv | LayerKind::MatMul => {
                 self.conv_input_boxes(ds).into_iter().collect()
             }
-            LayerKind::Depthwise => self.depthwise_input_boxes(ds).into_iter().collect(),
+            // Elementwise joins share the depthwise channel-identity rule:
+            // output channel k reads input channel k (their C loop is
+            // trivial by encoding), with a 1×1 receptive field.
+            LayerKind::Depthwise | LayerKind::Elementwise => {
+                self.depthwise_input_boxes(ds).into_iter().collect()
+            }
         }
     }
 
@@ -453,6 +492,19 @@ pub fn overlapped_latency(
     consumer_stats: &LayerStats,
     ready: &ReadyTimes,
 ) -> OverlapResult {
+    overlapped_latency_at(producer_stats.latency_cycles, consumer_stats, ready)
+}
+
+/// [`overlapped_latency`] against an explicit producer end time instead of
+/// a single producer's stats — the graph generalization, where the
+/// "producer end" is the latest finish across the whole predecessor set
+/// and `ready` is their merged ready times ([`merge_ready_times`]), all on
+/// one shared clock.
+pub fn overlapped_latency_at(
+    producer_end: u64,
+    consumer_stats: &LayerStats,
+    ready: &ReadyTimes,
+) -> OverlapResult {
     let c = consumer_stats.step_cycles.max(1);
     let t_total = ready.total_steps.max(1);
     let mut end = t_total * c; // all-ready-at-0 floor
@@ -460,7 +512,6 @@ pub fn overlapped_latency(
         end = end.max(r + (t_total - t) * c);
     }
     let overlapped_end = end + consumer_stats.movement_cycles;
-    let producer_end = producer_stats.latency_cycles;
     let sequential_end = producer_end + consumer_stats.latency_cycles;
     let added_latency = overlapped_end.saturating_sub(producer_end);
     let saving = sequential_end.saturating_sub(overlapped_end);
@@ -511,6 +562,12 @@ pub struct PairKey {
     /// apart keeps the cache observationally transparent even if one
     /// regresses).
     pub engine: u64,
+    /// Predecessor-set tag: 0 for a plain producer→consumer pair; for a
+    /// merged multi-predecessor entry ([`merged_pair_cache_key`]) the
+    /// predecessor count, with the offset-aware set fingerprint folded
+    /// into `producer`. Keying the set apart keeps merged entries from
+    /// aliasing any pairwise entry.
+    pub pred_set: u64,
 }
 
 /// Fingerprint of one side of a pair: everything `ready_times` reads from
@@ -533,6 +590,38 @@ pub fn pair_cache_key(pair: &LayerPair<'_>, engine: u64, max_probe_steps: usize)
         consumer: side_fingerprint(pair.consumer, pair.consumer_mapping, pair.consumer_stats),
         probe: max_probe_steps as u64,
         engine,
+        pred_set: 0,
+    }
+}
+
+/// Build the cache key for a *merged* multi-predecessor analysis
+/// ([`merge_ready_times`]): `parts` pairs each predecessor's start offset
+/// with its pairwise analysis. The producer fingerprint covers every
+/// predecessor side *and* its offset (merged ready times depend on both);
+/// `pred_set` carries the set size so merged entries can never alias
+/// plain pairs.
+pub fn merged_pair_cache_key(
+    parts: &[(u64, &LayerPair<'_>)],
+    engine: u64,
+    max_probe_steps: usize,
+) -> PairKey {
+    assert!(!parts.is_empty(), "merged key needs at least one predecessor");
+    let mut h = Fnv64::new();
+    for &(offset, pair) in parts {
+        h.write(side_fingerprint(pair.producer, pair.producer_mapping, pair.producer_stats));
+        h.write(offset);
+    }
+    let consumer = parts[0].1;
+    PairKey {
+        producer: h.finish(),
+        consumer: side_fingerprint(
+            consumer.consumer,
+            consumer.consumer_mapping,
+            consumer.consumer_stats,
+        ),
+        probe: max_probe_steps as u64,
+        engine,
+        pred_set: parts.len() as u64,
     }
 }
 
@@ -544,6 +633,9 @@ pub struct TransformKey {
     pub consumer: u64,
     /// `TransformConfig::max_probe_jobs` the entry was computed with.
     pub probe_jobs: u64,
+    /// Predecessor-set tag, exactly as [`PairKey::pred_set`]: 0 for plain
+    /// pairs, the set size for merged multi-predecessor job queries.
+    pub pred_set: u64,
 }
 
 /// Build the transform-table key for a pair under a job-probe budget.
@@ -556,6 +648,32 @@ pub fn transform_cache_key(pair: &LayerPair<'_>, max_probe_jobs: usize) -> Trans
         producer: side_fingerprint(pair.producer, pair.producer_mapping, pair.producer_stats),
         consumer: side_fingerprint(pair.consumer, pair.consumer_mapping, pair.consumer_stats),
         probe_jobs: max_probe_jobs as u64,
+        pred_set: 0,
+    }
+}
+
+/// Transform-table key for a merged multi-predecessor job query, mirroring
+/// [`merged_pair_cache_key`].
+pub fn merged_transform_cache_key(
+    parts: &[(u64, &LayerPair<'_>)],
+    max_probe_jobs: usize,
+) -> TransformKey {
+    assert!(!parts.is_empty(), "merged key needs at least one predecessor");
+    let mut h = Fnv64::new();
+    for &(offset, pair) in parts {
+        h.write(side_fingerprint(pair.producer, pair.producer_mapping, pair.producer_stats));
+        h.write(offset);
+    }
+    let consumer = parts[0].1;
+    TransformKey {
+        producer: h.finish(),
+        consumer: side_fingerprint(
+            consumer.consumer,
+            consumer.consumer_mapping,
+            consumer.consumer_stats,
+        ),
+        probe_jobs: max_probe_jobs as u64,
+        pred_set: parts.len() as u64,
     }
 }
 
@@ -605,13 +723,20 @@ trait ShardKey: Eq + std::hash::Hash + Copy {
 
 impl ShardKey for PairKey {
     fn shard_hash(&self) -> u64 {
-        self.producer ^ self.consumer.rotate_left(17) ^ self.probe ^ self.engine
+        self.producer
+            ^ self.consumer.rotate_left(17)
+            ^ self.probe
+            ^ self.engine
+            ^ self.pred_set.rotate_left(41)
     }
 }
 
 impl ShardKey for TransformKey {
     fn shard_hash(&self) -> u64 {
-        self.producer ^ self.consumer.rotate_left(17) ^ self.probe_jobs.rotate_left(31)
+        self.producer
+            ^ self.consumer.rotate_left(17)
+            ^ self.probe_jobs.rotate_left(31)
+            ^ self.pred_set.rotate_left(41)
     }
 }
 
@@ -1161,6 +1286,91 @@ mod tests {
         assert_ne!(k1, transform_cache_key(&p1, 64), "job-probe budget must separate");
         let swapped = LayerPair::new((&lb, &mb, &sb), (&la, &ma, &sa));
         assert_ne!(k1, transform_cache_key(&swapped, 2048), "roles must not alias");
+    }
+
+    #[test]
+    fn merge_ready_times_takes_predecessor_max() {
+        let a = ReadyTimes { probes: vec![(0, 10), (4, 50), (7, 0)], total_steps: 8 };
+        let b = ReadyTimes { probes: vec![(0, 30), (4, 20), (7, 0)], total_steps: 8 };
+        // Single part with zero offset: identity.
+        let solo = merge_ready_times(&[(0, &a)]);
+        assert_eq!(solo.probes, a.probes);
+        assert_eq!(solo.total_steps, 8);
+        // Two parts with offsets: per-probe max of offset + ready, with
+        // padding-only probes (ready 0) contributing nothing.
+        let merged = merge_ready_times(&[(100, &a), (0, &b)]);
+        assert_eq!(merged.probes, vec![(0, 110), (4, 150), (7, 0)]);
+    }
+
+    #[test]
+    fn overlapped_latency_at_matches_pairwise_form() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ready = AnalyticalOverlap::default().ready_times(&pair);
+        let pairwise = overlapped_latency(&sa, &sb, &ready);
+        let at = overlapped_latency_at(sa.latency_cycles, &sb, &ready);
+        assert_eq!(pairwise, at);
+        // A later producer end leaves the absolute end alone but shrinks
+        // the added latency.
+        let later = overlapped_latency_at(sa.latency_cycles + 1000, &sb, &ready);
+        assert_eq!(later.overlapped_end, at.overlapped_end);
+        assert_eq!(later.added_latency, at.added_latency.saturating_sub(1000));
+    }
+
+    #[test]
+    fn merged_keys_never_alias_pairwise_keys() {
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = simple_mapping(2, 4, 1, 8);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let plain = pair_cache_key(&pair, 0, 2048);
+        assert_eq!(plain.pred_set, 0);
+        let merged1 = merged_pair_cache_key(&[(0, &pair)], 0, 2048);
+        assert_ne!(plain, merged1, "merged singleton must not alias the plain pair");
+        let merged2 = merged_pair_cache_key(&[(0, &pair), (7, &pair)], 0, 2048);
+        assert_eq!(merged2.pred_set, 2);
+        assert_ne!(merged1, merged2);
+        // Offsets are part of the fingerprint.
+        let shifted = merged_pair_cache_key(&[(1, &pair)], 0, 2048);
+        assert_ne!(merged1, shifted);
+        // The transform twin follows the same rules.
+        let tplain = transform_cache_key(&pair, 2048);
+        assert_eq!(tplain.pred_set, 0);
+        let tmerged = merged_transform_cache_key(&[(0, &pair)], 2048);
+        assert_ne!(tplain, tmerged);
+    }
+
+    #[test]
+    fn elementwise_consumer_ready_matches_exhaustive() {
+        // Residual join: producer conv feeding an elementwise add with the
+        // channel-identity input rule.
+        let arch = Arch::dram_pim_small();
+        let la = Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1);
+        let lb = Layer::elementwise("add", 1, 8, 8, 8);
+        let ma = simple_mapping(4, 2, 1, 8);
+        let mb = Mapping::new(vec![
+            vec![],
+            vec![],
+            vec![Loop::temporal(Dim::K, 2), Loop::temporal(Dim::P, 8)],
+            vec![Loop::spatial(Dim::K, 4), Loop::spatial(Dim::Q, 8)],
+        ]);
+        let sa = eval(&arch, &la, &ma);
+        let sb = eval(&arch, &lb, &mb);
+        let pair = LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let ana = AnalyticalOverlap::default().ready_times(&pair);
+        let exh = ExhaustiveOverlap::default().ready_times(&pair);
+        assert_eq!(ana.probes, exh.probes);
+        // The join's K digit selects the producer channel: early K steps
+        // must not wait for the full producer.
+        assert!(ana.probes[0].1 < sa.latency_cycles, "{ana:?}");
     }
 
     #[test]

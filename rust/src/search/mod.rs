@@ -74,17 +74,18 @@ use crate::mapping::Mapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
 use crate::optimize::{self, OptimizeConfig, SearchAlgo};
 use crate::overlap::{
-    overlapped_latency, pair_cache_key, transform_cache_key, AnalyticalOverlap, CacheStats,
+    merge_ready_times, merged_pair_cache_key, merged_transform_cache_key, overlapped_latency,
+    overlapped_latency_at, pair_cache_key, transform_cache_key, AnalyticalOverlap, CacheStats,
     ExhaustiveOverlap, LayerPair, OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
     ReadyTimes,
 };
 use crate::perf::{LayerStats, PerfModel};
 use crate::transform::{
-    transform_ready_jobs, transform_schedule, transform_schedule_owned,
-    transform_schedule_with_jobs, TransformConfig, TransformResult,
+    merge_ready_jobs, transform_ready_jobs, transform_schedule, transform_schedule_multi,
+    transform_schedule_owned, transform_schedule_with_jobs, TransformConfig, TransformResult,
 };
 use crate::util::rng::SplitMix64;
-use crate::workload::{Layer, Network};
+use crate::workload::{Layer, Network, NetworkGraph};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -860,11 +861,107 @@ impl<'a> Mapper<'a> {
         }
     }
 
+    /// Merged ready times of a consumer against its whole predecessor set
+    /// (graph joins): each part is `(producer start offset, producer →
+    /// consumer pair)` on one shared clock, the per-pair analyses go
+    /// through the pairwise cache, and the per-step predecessor max
+    /// ([`merge_ready_times`]) is itself memoized under a
+    /// predecessor-set key (`pred_set` ≠ 0, so merged entries can never
+    /// alias pairwise ones).
+    fn merged_ready_times(&self, parts: &[(u64, &LayerPair<'_>)], store: bool) -> Arc<ReadyTimes> {
+        let compute = || {
+            let singles: Vec<(u64, Arc<ReadyTimes>)> = parts
+                .iter()
+                .map(|&(off, pair)| (off, self.ready_times(pair, store)))
+                .collect();
+            let refs: Vec<(u64, &ReadyTimes)> =
+                singles.iter().map(|(off, rt)| (*off, &**rt)).collect();
+            merge_ready_times(&refs)
+        };
+        match &self.cache {
+            Some(c) => {
+                let key = merged_pair_cache_key(
+                    parts,
+                    self.config.engine.tag(),
+                    self.config.overlap.max_probe_steps,
+                );
+                if store {
+                    c.get_or_compute(key, compute)
+                } else {
+                    c.peek_or_compute(key, compute)
+                }
+            }
+            None => Arc::new(compute()),
+        }
+    }
+
+    /// The memoized per-job ready queries of one pair — the §IV-I step-1
+    /// half of [`Mapper::transform_result`], without the scheduling
+    /// arithmetic (same cache table, same peek/insert discipline).
+    fn transform_jobs(&self, pair: &LayerPair<'_>, store: bool) -> Arc<Vec<(u64, u64)>> {
+        match &self.cache {
+            Some(c) => {
+                let key = transform_cache_key(pair, self.config.transform.max_probe_jobs);
+                let compute = || transform_ready_jobs(pair, &self.config.transform);
+                if store {
+                    c.transform_get_or_compute(key, compute)
+                } else {
+                    c.transform_peek_or_compute(key, compute)
+                }
+            }
+            None => Arc::new(transform_ready_jobs(pair, &self.config.transform)),
+        }
+    }
+
+    /// Transformed schedule of a consumer against its whole predecessor
+    /// set on one shared clock: the per-pair job queries merge by
+    /// [`merge_ready_jobs`] (memoized under a predecessor-set key) and
+    /// the scheduling arithmetic runs against `producer_end`, the latest
+    /// predecessor finish. Every part must share the same consumer.
+    pub fn transform_result_merged(
+        &self,
+        parts: &[(u64, &LayerPair<'_>)],
+        producer_end: u64,
+        store: bool,
+    ) -> TransformResult {
+        assert!(!parts.is_empty(), "merge needs at least one predecessor");
+        let compute = || {
+            let singles: Vec<(u64, Arc<Vec<(u64, u64)>>)> = parts
+                .iter()
+                .map(|&(off, pair)| (off, self.transform_jobs(pair, store)))
+                .collect();
+            let refs: Vec<(u64, &[(u64, u64)])> =
+                singles.iter().map(|(off, jobs)| (*off, jobs.as_slice())).collect();
+            merge_ready_jobs(&refs)
+        };
+        let jobs = match &self.cache {
+            Some(c) => {
+                let key = merged_transform_cache_key(parts, self.config.transform.max_probe_jobs);
+                if store {
+                    c.transform_get_or_compute(key, compute)
+                } else {
+                    c.transform_peek_or_compute(key, compute)
+                }
+            }
+            None => Arc::new(compute()),
+        };
+        let pair = parts[0].1;
+        let owned = Arc::try_unwrap(jobs).unwrap_or_else(|shared| (*shared).clone());
+        transform_schedule_multi(
+            pair.consumer_table.total_banks,
+            pair.consumer_table.total_steps,
+            pair.consumer_stats,
+            producer_end,
+            owned,
+        )
+    }
+
     /// Score one candidate mapping under `metric` against the fixed
-    /// neighbors (0, 1 or 2 of them — the refinement pass fixes both).
+    /// neighbors (any mix of producers and consumers — the chain sweeps
+    /// fix 0–2 of them, graph sweeps a whole predecessor/successor set).
     /// The score is the candidate's locally-attributable latency: its own
-    /// pair contribution given a fixed producer, plus the fixed consumer's
-    /// contribution given the candidate as producer.
+    /// pair contribution given the fixed producers, plus each fixed
+    /// consumer's contribution given the candidate as producer.
     fn score(
         &self,
         metric: Metric,
@@ -881,7 +978,47 @@ impl<'a> Mapper<'a> {
         let mut own_counted = false;
         let mut out_ov = None;
         let mut out_tr = None;
+        // Multiple fixed producers (a graph join): the candidate's own
+        // contribution is ONE merged analysis over the whole predecessor
+        // set — a consumer step is ready only when every producer has
+        // delivered its inputs. The sweep scores producers start-aligned
+        // (offset 0); the final evaluation pass re-runs the merge with
+        // the true finish-time offsets. A single producer falls through
+        // to the exact pairwise path below, which keeps chain sweeps and
+        // linear graphs bit-identical by construction.
+        let producers = ctxs.iter().filter(|c| c.role == NeighborRole::Producer).count();
+        if producers >= 2 {
+            let pairs: Vec<LayerPair<'_>> = ctxs
+                .iter()
+                .filter(|c| c.role == NeighborRole::Producer)
+                .map(|ctx| {
+                    LayerPair::new((ctx.layer, ctx.mapping, ctx.stats), (layer, mapping, stats))
+                })
+                .collect();
+            let parts: Vec<(u64, &LayerPair<'_>)> = pairs.iter().map(|p| (0u64, p)).collect();
+            let producer_end = pairs
+                .iter()
+                .map(|p| p.producer_stats.latency_cycles)
+                .max()
+                .expect("at least two producers");
+            let ready = self.merged_ready_times(&parts, store);
+            let ov = overlapped_latency_at(producer_end, stats, &ready);
+            let tr = (metric == Metric::Transform)
+                .then(|| self.transform_result_merged(&parts, producer_end, store));
+            let added = match metric {
+                Metric::Overlap => ov.added_latency,
+                Metric::Transform => tr.unwrap().added_latency,
+                Metric::Sequential => unreachable!(),
+            };
+            score += added;
+            own_counted = true;
+            out_ov = Some(ov);
+            out_tr = tr;
+        }
         for ctx in ctxs {
+            if producers >= 2 && ctx.role == NeighborRole::Producer {
+                continue; // folded into the merged analysis above
+            }
             let pair = match ctx.role {
                 NeighborRole::Producer => LayerPair::new(
                     (ctx.layer, ctx.mapping, ctx.stats),
@@ -1230,6 +1367,18 @@ impl LayerPlan {
     }
 }
 
+/// Pairwise overlap/transform analysis of one producer→consumer edge
+/// between the chosen mappings — the per-edge report of a plan.
+/// `from`/`to` index into [`NetworkPlan::layers`] (execution order), not
+/// into the workload's layer list.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeOverlap {
+    pub from: usize,
+    pub to: usize,
+    pub overlap: OverlapResult,
+    pub transform: TransformResult,
+}
+
 /// The result of whole-network optimization.
 #[derive(Debug, Clone)]
 pub struct NetworkPlan {
@@ -1257,6 +1406,11 @@ pub struct NetworkPlan {
     /// Analysis-memoizer misses during this run (same attribution caveat
     /// as `cache_hits`).
     pub cache_misses: u64,
+    /// Pairwise analysis of every producer→consumer edge between the
+    /// chosen mappings (chain plans: the consecutive pairs). A join's
+    /// contribution to the totals comes from the *merged* analysis in its
+    /// [`LayerPlan`], not from summing these.
+    pub edge_overlaps: Vec<EdgeOverlap>,
 }
 
 impl NetworkPlan {
@@ -1298,6 +1452,27 @@ impl<'a> NetworkSearch<'a> {
             };
             if v > best_v {
                 best_v = v;
+                best = pos;
+            }
+        }
+        best
+    }
+
+    /// Pick the Middle start position (index into the topological order)
+    /// per heuristic — the graph counterpart of
+    /// [`NetworkSearch::middle_start`]. Ties keep the earliest topological
+    /// position, so a linear graph picks exactly the chain's start.
+    pub fn middle_start_graph(g: &NetworkGraph, h: MiddleHeuristic) -> usize {
+        let mut best = 0;
+        let mut best_v = 0u64;
+        for (pos, &v) in g.topo().iter().enumerate() {
+            let l = &g.layers[v];
+            let val = match h {
+                MiddleHeuristic::LargestOutput => l.output_heuristic(),
+                MiddleHeuristic::LargestOverall => l.overall_heuristic(),
+            };
+            if val > best_v {
+                best_v = val;
                 best = pos;
             }
         }
@@ -1557,6 +1732,7 @@ impl<'a> NetworkSearch<'a> {
         let chosen: Vec<EvaluatedMapping> =
             plans.into_iter().map(Option::unwrap).collect();
         let mut layer_plans = Vec::with_capacity(chosen.len());
+        let mut edge_overlaps = Vec::with_capacity(chosen.len().saturating_sub(1));
         for (pos, em) in chosen.iter().enumerate() {
             let layer = &net.layers[chain[pos]];
             let (overlap, transform) = if pos == 0 {
@@ -1573,6 +1749,12 @@ impl<'a> NetworkSearch<'a> {
                 // Chosen pairs recur (warm replays, the sibling metric
                 // jobs' final passes): store their transform jobs too.
                 let tr = mapper.transform_result(&pair, true);
+                edge_overlaps.push(EdgeOverlap {
+                    from: pos - 1,
+                    to: pos,
+                    overlap: ov,
+                    transform: tr,
+                });
                 (Some(ov), Some(tr))
             };
             layer_plans.push(LayerPlan {
@@ -1601,6 +1783,7 @@ impl<'a> NetworkSearch<'a> {
             mappings_evaluated,
             cache_hits: hits1 - hits0,
             cache_misses: misses1 - misses0,
+            edge_overlaps,
         };
         plan.compute_totals();
         plan
@@ -1725,6 +1908,459 @@ impl<'a> NetworkSearch<'a> {
         (seq, ov, tr)
     }
 
+    /// Run the whole-graph search under `metric` — the DAG counterpart of
+    /// [`NetworkSearch::run`]: the sweep walks the graph's deterministic
+    /// topological order pairing each node against its whole predecessor
+    /// set (successor set for Backward), and the final evaluation places
+    /// every node on one shared clock where a consumer step starts only
+    /// when ALL its producers have delivered (per-step max over the
+    /// predecessor set). On a linear graph every node has at most one
+    /// neighbor on each side, so every analysis takes the exact pairwise
+    /// code path and the plan is bit-identical to [`NetworkSearch::run`]
+    /// on the equivalent chain — at any thread count.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use fastoverlapim::prelude::*;
+    /// use fastoverlapim::workload::zoo;
+    ///
+    /// let arch = Arch::dram_pim_small();
+    /// let net = zoo::tiny_cnn();
+    /// let g = NetworkGraph::from_network(&net);
+    /// let cfg = MapperConfig { budget: Budget::Evaluations(12), seed: 5, refine_passes: 0, ..Default::default() };
+    /// let search = NetworkSearch::new(&arch, cfg.clone(), SearchStrategy::Forward);
+    /// let plan = search.run_graph(&g, Metric::Overlap);
+    /// let chain_plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+    ///     .run(&net, Metric::Overlap);
+    ///
+    /// // A linear graph reproduces the chain path bit for bit.
+    /// assert_eq!(plan.total_overlapped, chain_plan.total_overlapped);
+    /// ```
+    pub fn run_graph(&self, g: &NetworkGraph, metric: Metric) -> NetworkPlan {
+        if matches!(self.config.budget, Budget::Calibrated { .. }) {
+            return self.resolved_graph(g, metric).run_graph(g, metric);
+        }
+        let lookahead = self.config.lookahead && self.config.sharing_active();
+        if lookahead {
+            let shared = SharedCandidates {
+                store: CandidateStore::new(),
+                sweep_consumers: 1,
+                refine_consumers: 1,
+            };
+            self.run_graph_shared(g, metric, Some(&shared))
+        } else {
+            self.run_graph_shared(g, metric, None)
+        }
+    }
+
+    /// One whole-graph pass under `metric`, optionally drawing candidate
+    /// enumerations from (and speculatively feeding) a shared store —
+    /// [`NetworkSearch::run_shared`] generalized from `chain[pos - 1]` to
+    /// predecessor sets.
+    fn run_graph_shared(
+        &self,
+        g: &NetworkGraph,
+        metric: Metric,
+        shared: Option<&SharedCandidates>,
+    ) -> NetworkPlan {
+        let started = Instant::now();
+        let (hits0, misses0) = self
+            .cache
+            .as_ref()
+            .map_or((0, 0), |c| (c.hits(), c.misses()));
+        let topo = g.topo();
+        let n = topo.len();
+        assert!(n > 0, "graph has no layers");
+        // Node index → position in the topological order (the sweep, the
+        // plan's layer list and the finish-time tracks all run over
+        // positions).
+        let mut pos_of = vec![0usize; n];
+        for (pos, &v) in topo.iter().enumerate() {
+            pos_of[v] = pos;
+        }
+        let mut mapper =
+            Mapper::with_cache(self.arch, self.config.clone(), self.cache.clone());
+        let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; n];
+
+        // Sweep order: (position, fixed neighbors as (position, role)).
+        // Forward fixes the whole predecessor set, Backward the whole
+        // successor set; Middle sweeps backward then forward from the
+        // bottleneck, fixing only the already-searched side of each node
+        // (successors past the bottleneck are unsearched during the
+        // backward phase and are skipped, exactly as the chain's Middle
+        // never looks past its own start).
+        let to_ctx = |nodes: &[usize], role: NeighborRole| -> Vec<(usize, NeighborRole)> {
+            nodes.iter().map(|&v| (pos_of[v], role)).collect()
+        };
+        let order: Vec<(usize, Vec<(usize, NeighborRole)>)> = match self.strategy {
+            SearchStrategy::Forward => (0..n)
+                .map(|i| (i, to_ctx(g.preds(topo[i]), NeighborRole::Producer)))
+                .collect(),
+            SearchStrategy::Backward => (0..n)
+                .rev()
+                .map(|i| (i, to_ctx(g.succs(topo[i]), NeighborRole::Consumer)))
+                .collect(),
+            SearchStrategy::Middle(h) => {
+                let mid = Self::middle_start_graph(g, h);
+                let mut o = vec![(mid, Vec::new())];
+                o.extend((0..mid).rev().map(|i| {
+                    let ctx = to_ctx(g.succs(topo[i]), NeighborRole::Consumer)
+                        .into_iter()
+                        .filter(|&(p, _)| p <= mid)
+                        .collect();
+                    (i, ctx)
+                }));
+                o.extend(
+                    (mid + 1..n).map(|i| (i, to_ctx(g.preds(topo[i]), NeighborRole::Producer))),
+                );
+                o
+            }
+        };
+
+        // The whole call schedule, exactly as the chain path precomputes
+        // it: one seed per order entry, plus the refinement passes. On a
+        // linear graph the schedule — and with it every candidate stream
+        // and shared-store key — is identical to the chain's.
+        let sweep_calls = order.len();
+        let mut seed_stream = SplitMix64::new(self.config.seed);
+        let mut calls: Vec<(usize, u64)> = Vec::new();
+        for &(pos, _) in &order {
+            calls.push((topo[pos], seed_stream.next_u64()));
+        }
+        if metric != Metric::Sequential {
+            for _pass in 0..self.config.refine_passes {
+                for pos in 0..n {
+                    calls.push((topo[pos], seed_stream.next_u64()));
+                }
+            }
+        }
+
+        let mut mappings_evaluated = 0;
+        std::thread::scope(|scope| {
+            // Speculative look-ahead, identical to the chain path's:
+            // enumeration needs only (layer, seed), never the sweep's
+            // winners, so it cannot change any result.
+            let prefetch_next = |call: usize| {
+                let Some(sh) = shared else { return };
+                if !self.config.lookahead {
+                    return;
+                }
+                let Some(&(li, seed)) = calls.get(call + 1) else { return };
+                if !self.config.sharing_active() {
+                    return;
+                }
+                let budget = self.config.draw_cap() as u64;
+                let consumers = if call + 1 < sweep_calls {
+                    sh.sweep_consumers
+                } else {
+                    sh.refine_consumers
+                };
+                let threads = self.config.threads;
+                let layer = &g.layers[li];
+                let constraint = self.config.constraint.clone();
+                let ms_cfg = self.config.mapspace.clone();
+                let arch = self.arch;
+                let store = &sh.store;
+                scope.spawn(move || {
+                    let key = CandKey { seed, layer: layer.fingerprint() };
+                    store.prefetch(key, consumers, || {
+                        enumerate_candidates(
+                            arch,
+                            layer,
+                            &constraint,
+                            &ms_cfg,
+                            budget,
+                            seed,
+                            threads,
+                        )
+                    });
+                });
+            };
+
+            for (call, (pos, neighbors)) in order.iter().enumerate() {
+                prefetch_next(call);
+                let layer = &g.layers[topo[*pos]];
+                let share = shared.map(|sh| (&sh.store, sh.sweep_consumers));
+                let best = {
+                    let ctxs: Vec<PairContext<'_>> = neighbors
+                        .iter()
+                        .map(|&(npos, role)| {
+                            let nb = plans[npos].as_ref().expect("neighbor searched first");
+                            PairContext {
+                                role,
+                                layer: &g.layers[topo[npos]],
+                                mapping: &nb.mapping,
+                                stats: &nb.stats,
+                            }
+                        })
+                        .collect();
+                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
+                };
+                mappings_evaluated += mapper.last_evaluated;
+                let best = best.unwrap_or_else(|| {
+                    panic!("no valid mapping for layer `{}` within budget", layer.name)
+                });
+                plans[*pos] = Some(best);
+            }
+
+            // Refinement: each node re-searched with its whole searched
+            // neighborhood fixed — all predecessors as producers, all
+            // successors as consumers (the chain's two-neighbor special
+            // case, generalized).
+            let mut call = sweep_calls;
+            for _pass in 0..self.config.refine_passes {
+                if metric == Metric::Sequential {
+                    break; // nothing pair-dependent to refine
+                }
+                for pos in 0..n {
+                    prefetch_next(call);
+                    let v = topo[pos];
+                    let layer = &g.layers[v];
+                    let mut ctxs = Vec::new();
+                    for &p in g.preds(v) {
+                        let nb = plans[pos_of[p]].as_ref().unwrap();
+                        ctxs.push(PairContext {
+                            role: NeighborRole::Producer,
+                            layer: &g.layers[p],
+                            mapping: &nb.mapping,
+                            stats: &nb.stats,
+                        });
+                    }
+                    for &s in g.succs(v) {
+                        let nb = plans[pos_of[s]].as_ref().unwrap();
+                        ctxs.push(PairContext {
+                            role: NeighborRole::Consumer,
+                            layer: &g.layers[s],
+                            mapping: &nb.mapping,
+                            stats: &nb.stats,
+                        });
+                    }
+                    let incumbent = plans[pos].as_ref().unwrap();
+                    let (inc_score, _, _) = mapper.score(
+                        metric,
+                        layer,
+                        &incumbent.mapping,
+                        &incumbent.stats,
+                        &ctxs,
+                        true,
+                    );
+                    let share = shared.map(|sh| (&sh.store, sh.refine_consumers));
+                    let challenger =
+                        mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
+                    mappings_evaluated += mapper.last_evaluated;
+                    if let Some(c) = challenger {
+                        if c.score < inc_score {
+                            plans[pos] = Some(c);
+                        }
+                    }
+                    call += 1;
+                }
+            }
+        });
+
+        // Final evaluation pass in topological order: place every chosen
+        // mapping on one shared clock, tracking absolute finish times per
+        // metric. A source finishes at its own latency; a single-pred
+        // node takes the exact pairwise path (finish = pred finish +
+        // added); a join merges its predecessors' ready times at their
+        // true start offsets (start = finish − latency) and finishes at
+        // (latest pred finish) + merged added. A linear graph telescopes
+        // to the chain path's first-layer-latency + Σ added.
+        let chosen: Vec<EvaluatedMapping> = plans.into_iter().map(Option::unwrap).collect();
+        let mut layer_plans = Vec::with_capacity(n);
+        let mut edge_overlaps = Vec::with_capacity(g.edges.len());
+        let mut finish_ov = vec![0u64; n];
+        let mut finish_tr = vec![0u64; n];
+        for pos in 0..n {
+            let v = topo[pos];
+            let layer = &g.layers[v];
+            let em = &chosen[pos];
+            let preds = g.preds(v);
+            let (overlap, transform) = if preds.is_empty() {
+                finish_ov[pos] = em.stats.latency_cycles;
+                finish_tr[pos] = em.stats.latency_cycles;
+                (None, None)
+            } else {
+                let pairs: Vec<(usize, LayerPair<'_>)> = preds
+                    .iter()
+                    .map(|&p| {
+                        let ppos = pos_of[p];
+                        let pe = &chosen[ppos];
+                        (
+                            ppos,
+                            LayerPair::new(
+                                (&g.layers[p], &pe.mapping, &pe.stats),
+                                (layer, &em.mapping, &em.stats),
+                            ),
+                        )
+                    })
+                    .collect();
+                // Per-edge pairwise report (and, for single-pred nodes,
+                // the exact numbers the finish times advance by). Chosen
+                // pairs recur across metric jobs' final passes: store.
+                for (ppos, pair) in &pairs {
+                    let ready = mapper.ready_times(pair, true);
+                    let ov =
+                        overlapped_latency(pair.producer_stats, pair.consumer_stats, &ready);
+                    let tr = mapper.transform_result(pair, true);
+                    edge_overlaps.push(EdgeOverlap {
+                        from: *ppos,
+                        to: pos,
+                        overlap: ov,
+                        transform: tr,
+                    });
+                }
+                if pairs.len() == 1 {
+                    let e = *edge_overlaps.last().expect("edge just pushed");
+                    finish_ov[pos] = finish_ov[pairs[0].0] + e.overlap.added_latency;
+                    finish_tr[pos] = finish_tr[pairs[0].0] + e.transform.added_latency;
+                    (Some(e.overlap), Some(e.transform))
+                } else {
+                    let producer_end_ov =
+                        pairs.iter().map(|&(p, _)| finish_ov[p]).max().expect("non-empty");
+                    let parts_ov: Vec<(u64, &LayerPair<'_>)> = pairs
+                        .iter()
+                        .map(|(p, pair)| {
+                            let off = finish_ov[*p]
+                                .saturating_sub(pair.producer_stats.latency_cycles);
+                            (off, pair)
+                        })
+                        .collect();
+                    let ready = mapper.merged_ready_times(&parts_ov, true);
+                    let ov = overlapped_latency_at(producer_end_ov, &em.stats, &ready);
+                    finish_ov[pos] = producer_end_ov + ov.added_latency;
+                    let producer_end_tr =
+                        pairs.iter().map(|&(p, _)| finish_tr[p]).max().expect("non-empty");
+                    let parts_tr: Vec<(u64, &LayerPair<'_>)> = pairs
+                        .iter()
+                        .map(|(p, pair)| {
+                            let off = finish_tr[*p]
+                                .saturating_sub(pair.producer_stats.latency_cycles);
+                            (off, pair)
+                        })
+                        .collect();
+                    let tr = mapper.transform_result_merged(&parts_tr, producer_end_tr, true);
+                    finish_tr[pos] = producer_end_tr + tr.added_latency;
+                    (Some(ov), Some(tr))
+                }
+            };
+            layer_plans.push(LayerPlan {
+                layer_index: v,
+                name: layer.name.clone(),
+                mapping: em.mapping.clone(),
+                stats: em.stats.clone(),
+                overlap,
+                transform,
+            });
+        }
+
+        let (hits1, misses1) = self
+            .cache
+            .as_ref()
+            .map_or((0, 0), |c| (c.hits(), c.misses()));
+        NetworkPlan {
+            network: g.name.clone(),
+            strategy: self.strategy,
+            metric,
+            layers: layer_plans,
+            total_sequential: chosen.iter().map(|em| em.stats.latency_cycles).sum(),
+            total_overlapped: finish_ov.iter().copied().max().unwrap_or(0),
+            total_transformed: finish_tr.iter().copied().max().unwrap_or(0),
+            wallclock: started.elapsed(),
+            mappings_evaluated,
+            cache_hits: hits1 - hits0,
+            cache_misses: misses1 - misses0,
+            edge_overlaps,
+        }
+    }
+
+    /// Run the whole-graph search once per metric — the DAG counterpart
+    /// of [`NetworkSearch::run_metrics`], with the same pipelined
+    /// candidate-sharing engine, the same thread split and the same
+    /// bit-identity guarantee against the serial path.
+    pub fn run_graph_metrics(&self, g: &NetworkGraph, metrics: &[Metric]) -> Vec<NetworkPlan> {
+        if matches!(self.config.budget, Budget::Calibrated { .. }) && !metrics.is_empty() {
+            let probe_metric = *metrics
+                .iter()
+                .max_by_key(|m| match m {
+                    Metric::Sequential => 0,
+                    Metric::Overlap => 1,
+                    Metric::Transform => 2,
+                })
+                .expect("non-empty metrics");
+            return self.resolved_graph(g, probe_metric).run_graph_metrics(g, metrics);
+        }
+        if metrics.len() <= 1 || !self.config.pipeline || self.config.deadline_mode() {
+            return metrics.iter().map(|&m| self.run_graph(g, m)).collect();
+        }
+        let shared = SharedCandidates {
+            store: CandidateStore::new(),
+            sweep_consumers: metrics.len() as u32,
+            refine_consumers: metrics.iter().filter(|&&m| m != Metric::Sequential).count() as u32,
+        };
+        let n_jobs = metrics.len();
+        let (base_threads, extra_threads) =
+            (self.config.threads / n_jobs, self.config.threads % n_jobs);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = metrics
+                .iter()
+                .enumerate()
+                .map(|(j, &m)| {
+                    let sh = &shared;
+                    let per_job =
+                        (base_threads + usize::from(n_jobs - 1 - j < extra_threads)).max(1);
+                    s.spawn(move || {
+                        let mut cfg = self.config.clone();
+                        cfg.threads = per_job;
+                        let job = NetworkSearch {
+                            arch: self.arch,
+                            config: cfg,
+                            strategy: self.strategy,
+                            cache: self.cache.clone(),
+                        };
+                        job.run_graph_shared(g, m, Some(sh))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("metric job panicked"))
+                .collect()
+        })
+    }
+
+    /// Every baseline variant for a graph workload: (sequential-metric
+    /// plan, overlap-metric plan, transform-metric plan).
+    pub fn run_graph_all_metrics(
+        &self,
+        g: &NetworkGraph,
+    ) -> (NetworkPlan, NetworkPlan, NetworkPlan) {
+        let mut plans = self
+            .run_graph_metrics(g, &[Metric::Sequential, Metric::Overlap, Metric::Transform])
+            .into_iter();
+        let seq = plans.next().expect("sequential plan");
+        let ov = plans.next().expect("overlap plan");
+        let tr = plans.next().expect("transform plan");
+        (seq, ov, tr)
+    }
+
+    /// A searcher with this one's [`Budget::Calibrated`] resolved against
+    /// a graph workload (see [`calibrate_budget_graph`]).
+    fn resolved_graph(&self, g: &NetworkGraph, metric: Metric) -> NetworkSearch<'a> {
+        let mut cfg = self.config.clone();
+        if matches!(cfg.budget, Budget::Calibrated { .. }) {
+            cfg.budget =
+                Budget::Evaluations(calibrate_budget_graph(self.arch, g, &self.config, metric));
+        }
+        NetworkSearch {
+            arch: self.arch,
+            config: cfg,
+            strategy: self.strategy,
+            cache: self.cache.clone(),
+        }
+    }
+
     /// Split counters of this searcher's shared analysis memoizer, both
     /// tables, cumulative across every run it has performed (zeros when
     /// the cache is disabled).
@@ -1801,6 +2437,63 @@ pub fn calibrate_budget(
         .collect();
     // Probe through a cache-less mapper so calibration cannot warm (or
     // be skewed by) the real run's memoizer.
+    let mapper = Mapper::with_cache(arch, config.clone(), None);
+    mapper.calibrate(metric, layer, &ctxs, target, probe_draws)
+}
+
+/// Resolve a [`Budget::Calibrated`] for a graph workload — the DAG
+/// counterpart of [`calibrate_budget`]. The chain version's implicit
+/// assumption ("the layer before the probe layer is its producer") does
+/// not survive the generalization: in a topological order the node
+/// preceding the bottleneck need not feed it at all, so the
+/// representative producer is drawn from the bottleneck's actual
+/// predecessor set — and asserted to be a real graph edge. On a linear
+/// graph that predecessor is exactly the previous chain layer, so the
+/// probe matches the chain path's.
+pub fn calibrate_budget_graph(
+    arch: &Arch,
+    g: &NetworkGraph,
+    config: &MapperConfig,
+    metric: Metric,
+) -> usize {
+    let (target, probe_draws) = match config.budget {
+        Budget::Calibrated { target, probe_draws } => (target, probe_draws),
+        Budget::Evaluations(n) => return n,
+        Budget::Deadline(d) => (d, 24),
+    };
+    let pos = NetworkSearch::middle_start_graph(g, MiddleHeuristic::LargestOverall);
+    let v = g.topo()[pos];
+    let layer = &g.layers[v];
+    let pm = PerfModel::new(arch);
+    let prev = if metric != Metric::Sequential {
+        g.preds(v).last().copied().and_then(|p| {
+            assert!(
+                g.edges.contains(&(p, v)),
+                "calibration producer `{}` is not a graph predecessor of `{}`",
+                g.layers[p].name,
+                layer.name
+            );
+            let prev_layer = &g.layers[p];
+            MapSpace::with_defaults(arch, prev_layer)
+                .default_mapping()
+                .map(|m| {
+                    let stats = pm.evaluate(prev_layer, &m);
+                    (prev_layer, m, stats)
+                })
+        })
+    } else {
+        None
+    };
+    let ctxs: Vec<PairContext<'_>> = prev
+        .as_ref()
+        .map(|(l, m, s)| PairContext {
+            role: NeighborRole::Producer,
+            layer: *l,
+            mapping: m,
+            stats: s,
+        })
+        .into_iter()
+        .collect();
     let mapper = Mapper::with_cache(arch, config.clone(), None);
     mapper.calibrate(metric, layer, &ctxs, target, probe_draws)
 }
@@ -2118,6 +2811,128 @@ mod tests {
         cfg.budget = Budget::Evaluations(12);
         cfg.algo = SearchAlgo::Genetic;
         assert!(!cfg.sharing_active(), "guided engines must not share candidate stores");
+    }
+
+    /// A diamond with an elementwise join: a → {b, c} → add.
+    fn diamond() -> NetworkGraph {
+        let layers = vec![
+            Layer::conv("a", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+            Layer::conv("b", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+            Layer::conv("c", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+            Layer::elementwise("add", 1, 8, 8, 8),
+        ];
+        NetworkGraph::new("diamond", layers, vec![(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap()
+    }
+
+    #[test]
+    fn linear_graph_plan_matches_chain_plan() {
+        // The acceptance invariant in miniature (the zoo-wide matrix
+        // lives in tests/graph_search.rs): a chain viewed as a linear
+        // graph produces the bit-identical plan.
+        let arch = Arch::dram_pim_small();
+        let net = zoo::tiny_cnn();
+        let g = NetworkGraph::from_network(&net);
+        for metric in [Metric::Sequential, Metric::Overlap, Metric::Transform] {
+            let chain_plan = NetworkSearch::new(&arch, tiny_config(12, 7), SearchStrategy::Forward)
+                .run(&net, metric);
+            let graph_plan = NetworkSearch::new(&arch, tiny_config(12, 7), SearchStrategy::Forward)
+                .run_graph(&g, metric);
+            assert_eq!(chain_plan.total_sequential, graph_plan.total_sequential, "{metric:?}");
+            assert_eq!(chain_plan.total_overlapped, graph_plan.total_overlapped, "{metric:?}");
+            assert_eq!(chain_plan.total_transformed, graph_plan.total_transformed, "{metric:?}");
+            assert_eq!(
+                chain_plan.mappings_evaluated, graph_plan.mappings_evaluated,
+                "{metric:?}"
+            );
+            assert_eq!(chain_plan.layers.len(), graph_plan.layers.len());
+            for (c, gl) in chain_plan.layers.iter().zip(&graph_plan.layers) {
+                assert_eq!(c.name, gl.name);
+                assert_eq!(c.mapping, gl.mapping, "{metric:?} layer {}", c.name);
+                assert_eq!(c.overlap, gl.overlap, "{metric:?} layer {}", c.name);
+                assert_eq!(c.transform, gl.transform, "{metric:?} layer {}", c.name);
+            }
+            assert_eq!(chain_plan.edge_overlaps, graph_plan.edge_overlaps, "{metric:?}");
+        }
+    }
+
+    #[test]
+    fn graph_join_search_completes_under_every_strategy() {
+        let arch = Arch::dram_pim_small();
+        let g = diamond();
+        for strat in [
+            SearchStrategy::Forward,
+            SearchStrategy::Backward,
+            SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
+        ] {
+            let plan = NetworkSearch::new(&arch, tiny_config(10, 5), strat)
+                .run_graph(&g, Metric::Transform);
+            assert_eq!(plan.layers.len(), 4, "{strat:?}");
+            // One pairwise report per graph edge, every endpoint valid.
+            assert_eq!(plan.edge_overlaps.len(), g.edges.len(), "{strat:?}");
+            for e in &plan.edge_overlaps {
+                assert!(e.from < plan.layers.len() && e.to < plan.layers.len());
+            }
+            // The join waits for BOTH branches, but overlapping still
+            // cannot be slower than fully sequential execution.
+            assert!(plan.total_overlapped <= plan.total_sequential, "{strat:?}");
+            assert!(plan.total_overlapped > 0, "{strat:?}");
+            // The join's merged added latency covers at least the gap
+            // over its slowest predecessor; totals are max-finish, not a
+            // sum over parallel branches.
+            assert!(plan.total_overlapped >= plan.layers[0].stats.latency_cycles);
+        }
+    }
+
+    #[test]
+    fn graph_metrics_pipeline_matches_serial() {
+        let arch = Arch::dram_pim_small();
+        let g = diamond();
+        let mut serial_cfg = tiny_config(10, 8);
+        serial_cfg.pipeline = false;
+        serial_cfg.lookahead = false;
+        let mut pipe_cfg = tiny_config(10, 8);
+        pipe_cfg.pipeline = true;
+        pipe_cfg.lookahead = true;
+        pipe_cfg.threads = 2;
+        let s = NetworkSearch::new(&arch, serial_cfg, SearchStrategy::Forward)
+            .run_graph_all_metrics(&g);
+        let p = NetworkSearch::new(&arch, pipe_cfg, SearchStrategy::Forward)
+            .run_graph_all_metrics(&g);
+        for (a, b) in [(&s.0, &p.0), (&s.1, &p.1), (&s.2, &p.2)] {
+            assert_eq!(a.total_sequential, b.total_sequential, "{:?}", a.metric);
+            assert_eq!(a.total_overlapped, b.total_overlapped, "{:?}", a.metric);
+            assert_eq!(a.total_transformed, b.total_transformed, "{:?}", a.metric);
+            assert_eq!(a.mappings_evaluated, b.mappings_evaluated, "{:?}", a.metric);
+        }
+    }
+
+    #[test]
+    fn middle_start_graph_matches_chain_on_linear() {
+        let net = zoo::tiny_cnn();
+        let g = NetworkGraph::from_network(&net);
+        let chain = net.chain();
+        for h in [MiddleHeuristic::LargestOutput, MiddleHeuristic::LargestOverall] {
+            assert_eq!(
+                NetworkSearch::middle_start(&net, &chain, h),
+                NetworkSearch::middle_start_graph(&g, h),
+                "{h:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn calibrate_budget_graph_resolves_and_completes() {
+        let arch = Arch::dram_pim_small();
+        let g = diamond();
+        let mut cfg = tiny_config(0, 3);
+        cfg.budget = Budget::Calibrated { target: Duration::from_millis(5), probe_draws: 6 };
+        cfg.refine_passes = 0;
+        let n = calibrate_budget_graph(&arch, &g, &cfg, Metric::Transform);
+        assert!(n >= 6, "resolved budget must be at least the probe, got {n}");
+        let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
+            .run_graph(&g, Metric::Overlap);
+        assert_eq!(plan.layers.len(), 4);
+        assert!(plan.total_sequential > 0);
     }
 
     #[test]

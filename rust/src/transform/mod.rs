@@ -167,12 +167,34 @@ pub fn transform_schedule_with_jobs(
 /// [`transform_schedule_with_jobs`].
 pub fn transform_schedule_owned(
     pair: &LayerPair<'_>,
+    jobs: Vec<(u64, u64)>,
+) -> TransformResult {
+    transform_schedule_multi(
+        pair.consumer_table.total_banks,
+        pair.consumer_table.total_steps,
+        pair.consumer_stats,
+        pair.producer_stats.latency_cycles,
+        jobs,
+    )
+}
+
+/// The scheduling arithmetic against an explicit producer end time — the
+/// graph generalization, where the "producer end" is the latest finish
+/// across the consumer's whole predecessor set and `jobs` carries the
+/// merged per-job ready times ([`merge_ready_jobs`]), all on one shared
+/// clock. [`transform_schedule_owned`] is the single-producer special
+/// case (`producer_end = producer.latency_cycles`, offsets 0).
+pub fn transform_schedule_multi(
+    banks: u64,
+    steps: u64,
+    consumer_stats: &LayerStats,
+    producer_end: u64,
     mut jobs: Vec<(u64, u64)>,
 ) -> TransformResult {
-    let banks = pair.consumer_table.total_banks.max(1);
-    let steps = pair.consumer_table.total_steps.max(1);
+    let banks = banks.max(1);
+    let steps = steps.max(1);
     let total_jobs = banks * steps;
-    let c = pair.consumer_stats.step_cycles.max(1);
+    let c = consumer_stats.step_cycles.max(1);
     let m = jobs.len() as u64;
 
     // 2. Sort by ready time (stable: equal-ready jobs keep bank order,
@@ -200,11 +222,10 @@ pub fn transform_schedule_owned(
     // rewrites through the bank link (paper: partial sums "require data
     // movements for reduction").
     let penalty_cycles =
-        (moved_fraction * pair.consumer_stats.movement_cycles as f64).round() as u64;
+        (moved_fraction * consumer_stats.movement_cycles as f64).round() as u64;
 
-    let transformed_end = end + pair.consumer_stats.movement_cycles + penalty_cycles;
-    let producer_end = pair.producer_stats.latency_cycles;
-    let sequential_end = producer_end + pair.consumer_stats.latency_cycles;
+    let transformed_end = end + consumer_stats.movement_cycles + penalty_cycles;
+    let sequential_end = producer_end + consumer_stats.latency_cycles;
     TransformResult {
         transformed_end,
         added_latency: transformed_end.saturating_sub(producer_end),
@@ -212,6 +233,32 @@ pub fn transform_schedule_owned(
         moved_fraction,
         penalty_cycles,
     }
+}
+
+/// Merge per-predecessor job ready queries into the consumer's effective
+/// per-job ready times: each part is `(producer start offset, pairwise
+/// [`transform_ready_jobs`] output)`, and a job is ready only when every
+/// predecessor has produced its inputs — the max over `offset + ready`,
+/// with padding-only queries (ready 0, no dependence) contributing
+/// nothing. The job schedules align across parts by construction (same
+/// consumer, same probe budget), including each job's original bank.
+pub fn merge_ready_jobs(parts: &[(u64, &[(u64, u64)])]) -> Vec<(u64, u64)> {
+    assert!(!parts.is_empty(), "merge needs at least one predecessor");
+    let (off0, first) = parts[0];
+    let mut jobs: Vec<(u64, u64)> = first
+        .iter()
+        .map(|&(r, b)| (if r == 0 { 0 } else { off0 + r }, b))
+        .collect();
+    for &(off, part) in &parts[1..] {
+        debug_assert_eq!(part.len(), jobs.len(), "job schedules must align");
+        for (acc, &(r, b)) in jobs.iter_mut().zip(part) {
+            debug_assert_eq!(acc.1, b, "job banks must align");
+            if r > 0 {
+                acc.0 = acc.0.max(off + r);
+            }
+        }
+    }
+    jobs
 }
 
 /// Convenience: transform with default config.
@@ -410,6 +457,45 @@ mod tests {
             let via_jobs = transform_schedule_with_jobs(&pair, &jobs);
             assert_eq!(direct, via_jobs);
         }
+    }
+
+    #[test]
+    fn multi_schedule_generalizes_single_producer() {
+        // transform_schedule_owned must be exactly the single-producer
+        // special case of transform_schedule_multi, and a zero-offset
+        // single-part merge must be the identity on the jobs vector —
+        // together these make a linear graph bit-identical to the chain.
+        let arch = Arch::dram_pim_small();
+        let (la, lb) = conv_pair();
+        let pm = PerfModel::new(&arch);
+        let ma = mapping_kpq(2, 2, 1);
+        let mb = mapping_kpq(1, 4, 8);
+        let sa = pm.evaluate(&la, &ma);
+        let sb = pm.evaluate(&lb, &mb);
+        let pair = crate::overlap::LayerPair::new((&la, &ma, &sa), (&lb, &mb, &sb));
+        let jobs = transform_ready_jobs(&pair, &TransformConfig::default());
+        let merged = merge_ready_jobs(&[(0, jobs.as_slice())]);
+        assert_eq!(merged, jobs);
+        let direct = transform_schedule_owned(&pair, jobs.clone());
+        let multi = transform_schedule_multi(
+            pair.consumer_table.total_banks,
+            pair.consumer_table.total_steps,
+            pair.consumer_stats,
+            sa.latency_cycles,
+            merged,
+        );
+        assert_eq!(direct, multi);
+    }
+
+    #[test]
+    fn merged_jobs_take_predecessor_max() {
+        // Two predecessors on offsets 100 and 0: each job waits for the
+        // later of the two shifted ready times, and padding-only queries
+        // (ready 0) never acquire an offset.
+        let a: Vec<(u64, u64)> = vec![(10, 0), (50, 1), (0, 2)];
+        let b: Vec<(u64, u64)> = vec![(30, 0), (20, 1), (0, 2)];
+        let merged = merge_ready_jobs(&[(100, a.as_slice()), (0, b.as_slice())]);
+        assert_eq!(merged, vec![(110, 0), (150, 1), (0, 2)]);
     }
 
     #[test]

@@ -1,0 +1,441 @@
+//! Computation-graph workloads — `Network` generalized from a layer chain
+//! to a DAG.
+//!
+//! Real targets are graphs, not chains: ResNet basic blocks re-join a
+//! residual branch with an elementwise add, BERT attention fans one
+//! embedding out into per-head matmul chains and concatenates them back.
+//! A [`NetworkGraph`] makes that structure explicit: nodes are [`Layer`]s,
+//! edges carry producer→consumer tensor flow, and construction validates
+//! acyclicity plus per-edge channel consistency and fixes a
+//! *deterministic* topological order (ties broken by insertion index) so
+//! branch-aware searches stay reproducible at any thread count.
+//!
+//! A linear graph — [`NetworkGraph::from_network`] — degenerates to
+//! exactly today's chain: the search engine's graph sweep is bit-identical
+//! to the chain path on it (asserted by `tests/graph_search.rs`).
+
+use super::{Layer, LayerKind, Network};
+
+/// A DNN workload as a directed acyclic graph of layers.
+///
+/// Construction ([`NetworkGraph::new`]) validates the edge list (bounds,
+/// no self/duplicate edges), acyclicity, and per-consumer channel
+/// consistency, then freezes a deterministic topological order. All
+/// downstream machinery (overlap analysis, transformation, whole-network
+/// search) walks that order and reasons about the *predecessor set* of
+/// each node instead of the single layer `i-1`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkGraph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Producer→consumer edges, in insertion order.
+    pub edges: Vec<(usize, usize)>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+    topo: Vec<usize>,
+}
+
+impl NetworkGraph {
+    /// Build and validate a graph. Edges are `(producer, consumer)` pairs
+    /// indexing into `layers`.
+    pub fn new(
+        name: &str,
+        layers: Vec<Layer>,
+        edges: Vec<(usize, usize)>,
+    ) -> Result<NetworkGraph, String> {
+        if layers.is_empty() {
+            return Err(format!("network `{name}` has no layers"));
+        }
+        for l in &layers {
+            l.validate()?;
+        }
+        let n = layers.len();
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b) in &edges {
+            if a >= n || b >= n {
+                return Err(format!(
+                    "network `{name}`: edge ({a} -> {b}) references a layer index out of range (have {n} layers)"
+                ));
+            }
+            if a == b {
+                return Err(format!(
+                    "network `{name}`: layer `{}` depends on itself",
+                    layers[a].name
+                ));
+            }
+            if !seen.insert((a, b)) {
+                return Err(format!(
+                    "network `{name}`: duplicate edge `{}` -> `{}`",
+                    layers[a].name, layers[b].name
+                ));
+            }
+        }
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            preds[b].push(a);
+            succs[a].push(b);
+        }
+        // Predecessor/successor lists in insertion-index order, so every
+        // per-node iteration downstream is deterministic.
+        for v in preds.iter_mut().chain(succs.iter_mut()) {
+            v.sort_unstable();
+        }
+        let topo = toposort(name, &layers, &preds, &succs)?;
+        let g = NetworkGraph { name: name.into(), layers, edges, preds, succs, topo };
+        g.validate_channels()?;
+        Ok(g)
+    }
+
+    /// A chain [`Network`] as a linear graph: its non-skip layers in
+    /// order, with one edge between each consecutive pair. Skip-marked
+    /// layers are dropped — in a graph they are expressed as real branch
+    /// edges instead.
+    pub fn from_network(net: &Network) -> NetworkGraph {
+        let layers: Vec<Layer> =
+            net.chain().into_iter().map(|i| net.layers[i].clone()).collect();
+        let edges = (1..layers.len()).map(|i| (i - 1, i)).collect();
+        NetworkGraph::new(&net.name, layers, edges)
+            .expect("a validated chain network is a valid linear graph")
+    }
+
+    /// The chain-flattened equivalent: the same nodes serialized in
+    /// topological order with an edge between *every* consecutive pair —
+    /// the strict layer chain the pre-refactor path executed. True
+    /// dependence edges that happen to be consecutive keep their exact
+    /// pairwise analysis; residual edges whose producer is further back
+    /// (skip connections, a join's second arm) vanish, and the false
+    /// consecutive pairs that replace them analyze against input regions
+    /// clamped to the adjacent producer's extents. The flattened plan
+    /// therefore serializes branch arms a real graph runs off one shared
+    /// producer — strictly less overlap opportunity. Channel validation
+    /// is skipped (flattening a branch breaks the channel rules by
+    /// construction).
+    pub fn chain_flattened(&self) -> NetworkGraph {
+        let n = self.layers.len();
+        let layers: Vec<Layer> =
+            self.topo.iter().map(|&i| self.layers[i].clone()).collect();
+        let edges: Vec<(usize, usize)> = (1..n).map(|j| (j - 1, j)).collect();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            preds[b].push(a);
+            succs[a].push(b);
+        }
+        NetworkGraph {
+            name: format!("{}-flat", self.name),
+            layers,
+            edges,
+            preds,
+            succs,
+            topo: (0..n).collect(),
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// True when the graph has no nodes (unreachable via [`NetworkGraph::new`]).
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// The frozen deterministic topological order (node indices).
+    pub fn topo(&self) -> &[usize] {
+        &self.topo
+    }
+
+    /// Predecessors of node `i`, ascending.
+    pub fn preds(&self, i: usize) -> &[usize] {
+        &self.preds[i]
+    }
+
+    /// Successors of node `i`, ascending.
+    pub fn succs(&self, i: usize) -> &[usize] {
+        &self.succs[i]
+    }
+
+    /// Nodes with no incoming edges, ascending.
+    pub fn sources(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.preds[i].is_empty()).collect()
+    }
+
+    /// Nodes with no outgoing edges, ascending.
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.succs[i].is_empty()).collect()
+    }
+
+    /// True when every node has ≤ 1 predecessor and ≤ 1 successor — the
+    /// degenerate case that must match the chain path bit for bit.
+    pub fn is_linear(&self) -> bool {
+        (0..self.len()).all(|i| self.preds[i].len() <= 1 && self.succs[i].len() <= 1)
+    }
+
+    /// Node index by layer name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    /// Total MACs across the graph.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Per-edge channel consistency, the graph generalization of
+    /// [`Network::validate`]'s chain rule:
+    ///
+    /// * an **elementwise** consumer requires *every* incoming edge to
+    ///   produce its full `K` channels (residual add);
+    /// * any other consumer requires the *sum* of its producers'
+    ///   contributions (with the FC flattening rule per producer) to equal
+    ///   its input channels (single producer degenerates to the chain
+    ///   rule; multiple producers model concatenation).
+    fn validate_channels(&self) -> Result<(), String> {
+        for (i, b) in self.layers.iter().enumerate() {
+            if self.preds[i].is_empty() {
+                continue;
+            }
+            if b.kind == LayerKind::Elementwise {
+                for &p in &self.preds[i] {
+                    let a = &self.layers[p];
+                    if a.k != b.k {
+                        return Err(format!(
+                            "network `{}`: join `{}` expects {} channels on every input but `{}` produces {}",
+                            self.name, b.name, b.k, a.name, a.k
+                        ));
+                    }
+                }
+                continue;
+            }
+            let consumed = match b.kind {
+                LayerKind::Depthwise => b.k,
+                _ => b.c,
+            };
+            let produced: u64 = self
+                .preds[i]
+                .iter()
+                .map(|&p| {
+                    let a = &self.layers[p];
+                    match b.kind {
+                        // An FC consumer flattens K·P·Q of each producer.
+                        LayerKind::Fc => {
+                            a.k * (a.p / a.pool_after).max(1) * (a.q / a.pool_after).max(1)
+                        }
+                        _ => a.k,
+                    }
+                })
+                .sum();
+            if produced != consumed {
+                let names: Vec<&str> =
+                    self.preds[i].iter().map(|&p| self.layers[p].name.as_str()).collect();
+                return Err(format!(
+                    "network `{}`: `{}` produce {} channels but `{}` consumes {}",
+                    self.name,
+                    names.join("` + `"),
+                    produced,
+                    b.name,
+                    consumed
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Graphviz DOT rendering: nodes labeled with layer kind and
+    /// dimensions, edges with the producer's (post-pooling) output tensor
+    /// shape. Deterministic — snapshot-tested for ResNet-18.
+    pub fn to_dot(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "digraph \"{}\" {{", self.name);
+        let _ = writeln!(s, "  rankdir=TB;");
+        let _ = writeln!(s, "  node [shape=box, fontname=\"monospace\"];");
+        for (i, l) in self.layers.iter().enumerate() {
+            let _ = writeln!(s, "  n{i} [label=\"{}\\n{}\"];", l.name, dot_dims(l));
+        }
+        for &(a, b) in &self.edges {
+            let p = &self.layers[a];
+            let _ = writeln!(
+                s,
+                "  n{a} -> n{b} [label=\"{}x{}x{}\"];",
+                p.k,
+                (p.p / p.pool_after).max(1),
+                (p.q / p.pool_after).max(1)
+            );
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Kind + dimension summary for a DOT node label.
+fn dot_dims(l: &Layer) -> String {
+    match l.kind {
+        LayerKind::Conv => format!(
+            "conv K{} C{} {}x{} {}x{}/s{}",
+            l.k, l.c, l.p, l.q, l.r, l.s, l.stride
+        ),
+        LayerKind::Fc => format!("fc K{} C{}", l.k, l.c),
+        LayerKind::MatMul => format!("matmul {}x{}x{}", l.p, l.c, l.k),
+        LayerKind::Depthwise => {
+            format!("dw K{} {}x{} {}x{}/s{}", l.k, l.p, l.q, l.r, l.s, l.stride)
+        }
+        LayerKind::Elementwise => format!("add K{} {}x{}", l.k, l.p, l.q),
+    }
+}
+
+/// Kahn's algorithm with the smallest-insertion-index node always drawn
+/// first: the topological order is a pure function of the construction
+/// arguments, never of hashing or iteration incidentals.
+fn toposort(
+    name: &str,
+    layers: &[Layer],
+    preds: &[Vec<usize>],
+    succs: &[Vec<usize>],
+) -> Result<Vec<usize>, String> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = layers.len();
+    let mut indegree: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut ready: BinaryHeap<Reverse<usize>> = (0..n)
+        .filter(|&i| indegree[i] == 0)
+        .map(Reverse)
+        .collect();
+    let mut topo = Vec::with_capacity(n);
+    while let Some(Reverse(i)) = ready.pop() {
+        topo.push(i);
+        for &s in &succs[i] {
+            indegree[s] -= 1;
+            if indegree[s] == 0 {
+                ready.push(Reverse(s));
+            }
+        }
+    }
+    if topo.len() != n {
+        let mut stuck: Vec<&str> = (0..n)
+            .filter(|&i| indegree[i] > 0)
+            .map(|i| layers[i].name.as_str())
+            .collect();
+        stuck.sort_unstable();
+        return Err(format!(
+            "network `{name}`: dependency cycle involving `{}`",
+            stuck.join("`, `")
+        ));
+    }
+    Ok(topo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l(name: &str, k: u64, c: u64) -> Layer {
+        Layer::conv(name, 1, k, c, 8, 8, 3, 3, 1, 1)
+    }
+
+    #[test]
+    fn linear_graph_matches_chain() {
+        let net = Network::new(
+            "t",
+            vec![l("a", 8, 3), l("sk", 8, 8).as_skip(), l("b", 8, 8), l("c", 4, 8)],
+        );
+        net.validate().unwrap();
+        let g = NetworkGraph::from_network(&net);
+        assert_eq!(g.len(), 3, "skip layers are dropped");
+        assert_eq!(g.topo(), &[0, 1, 2]);
+        assert_eq!(g.edges, vec![(0, 1), (1, 2)]);
+        assert!(g.is_linear());
+        assert_eq!(g.preds(1), &[0]);
+        assert_eq!(g.succs(1), &[2]);
+    }
+
+    #[test]
+    fn topo_breaks_ties_by_insertion_index() {
+        // Diamond: a → {b, c} → add. b and c become ready together; the
+        // smaller insertion index must always come first.
+        let layers = vec![
+            l("a", 8, 3),
+            l("b", 8, 8),
+            l("c", 8, 8),
+            Layer::elementwise("add", 1, 8, 8, 8),
+        ];
+        let g = NetworkGraph::new("d", layers, vec![(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        assert_eq!(g.topo(), &[0, 1, 2, 3]);
+        assert!(!g.is_linear());
+        assert_eq!(g.preds(3), &[1, 2]);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![3]);
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let layers = vec![l("a", 8, 8), l("b", 8, 8), l("c", 8, 8)];
+        let err = NetworkGraph::new("cyc", layers, vec![(0, 1), (1, 2), (2, 0)])
+            .unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+        assert!(err.contains("`a`"), "{err}");
+    }
+
+    #[test]
+    fn bad_edges_rejected() {
+        let layers = vec![l("a", 8, 3), l("b", 8, 8)];
+        assert!(NetworkGraph::new("e", layers.clone(), vec![(0, 7)])
+            .unwrap_err()
+            .contains("out of range"));
+        assert!(NetworkGraph::new("e", layers.clone(), vec![(0, 0)])
+            .unwrap_err()
+            .contains("depends on itself"));
+        assert!(NetworkGraph::new("e", layers, vec![(0, 1), (0, 1)])
+            .unwrap_err()
+            .contains("duplicate edge"));
+    }
+
+    #[test]
+    fn join_channel_rule() {
+        // Every input of an elementwise join must carry its K channels.
+        let layers = vec![l("a", 8, 3), l("b", 16, 8), Layer::elementwise("add", 1, 8, 8, 8)];
+        let err = NetworkGraph::new("j", layers, vec![(0, 1), (0, 2), (1, 2)]).unwrap_err();
+        assert!(err.contains("join `add`"), "{err}");
+        // Concat: the sum of producers must match the consumer's C.
+        let layers = vec![l("a", 8, 3), l("b", 8, 3), l("cat", 4, 16)];
+        NetworkGraph::new("cat", layers.clone(), vec![(0, 2), (1, 2)]).unwrap();
+        let err = NetworkGraph::new("cat", layers, vec![(0, 2)]).unwrap_err();
+        assert!(err.contains("consumes 16"), "{err}");
+    }
+
+    #[test]
+    fn chain_flattened_serializes_the_topological_order() {
+        // Diamond: a feeds both arms b and c; add joins them.
+        let layers = vec![
+            l("a", 8, 3),
+            l("b", 8, 8),
+            l("c", 8, 8),
+            Layer::elementwise("add", 1, 8, 8, 8),
+        ];
+        let g = NetworkGraph::new("d", layers, vec![(0, 1), (0, 2), (1, 3), (2, 3)]).unwrap();
+        let flat = g.chain_flattened();
+        assert_eq!(flat.len(), g.len());
+        // Every consecutive pair becomes an edge: a→b and c→add are true
+        // edges, b→c is a false pair standing in for the residual a→c,
+        // and the b→add arm of the join is lost — exactly the chain
+        // path's blind spot.
+        assert_eq!(flat.edges, vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(flat.topo(), &[0, 1, 2, 3]);
+        assert!(flat.is_linear());
+        assert_eq!(flat.sources(), vec![0]);
+    }
+
+    #[test]
+    fn dot_is_deterministic_and_labelled() {
+        let layers = vec![l("a", 8, 3), Layer::elementwise("add", 1, 8, 8, 8)];
+        let g = NetworkGraph::new("d", layers, vec![(0, 1)]).unwrap();
+        let dot = g.to_dot();
+        assert_eq!(dot, g.to_dot());
+        assert!(dot.contains("digraph \"d\""));
+        assert!(dot.contains("conv K8 C3"));
+        assert!(dot.contains("add K8 8x8"));
+        assert!(dot.contains("n0 -> n1 [label=\"8x8x8\"]"));
+    }
+}

@@ -6,8 +6,11 @@
 //! DNN compute; FC and matrix multiplication are expressed by collapsing
 //! dimensions to 1 exactly as the paper's §VI case study does.
 
+pub mod graph;
 pub mod parser;
 pub mod zoo;
+
+pub use graph::NetworkGraph;
 
 /// The seven problem dimensions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -27,6 +30,15 @@ pub enum LayerKind {
     /// input dependence (output channel `k` reads input channel `k`) is
     /// modelled by the overlap analysis's depthwise input-box arm.
     Depthwise,
+    /// Elementwise join (residual add / concat): output channel `k` at
+    /// `(p, q)` reads exactly the same coordinate of every input tensor.
+    /// Encoded with `C = R = S = 1` so the loop nest computes one op per
+    /// output element (`N·K·P·Q`), while [`Layer::input_size`] accounts
+    /// for the real `K`-channel input read per incoming edge. The
+    /// channel-identity dependence reuses the depthwise input-box arm of
+    /// the overlap analysis. Joins are where residual branches meet, so
+    /// in a [`NetworkGraph`] they typically carry ≥ 2 incoming edges.
+    Elementwise,
 }
 
 /// One DNN layer in the 7D representation.
@@ -166,6 +178,27 @@ impl Layer {
         }
     }
 
+    /// Elementwise join over `k` channels of a `p × q` feature map
+    /// (`C = R = S = 1` in the 7D encoding — see
+    /// [`LayerKind::Elementwise`]).
+    pub fn elementwise(name: &str, n: u64, k: u64, p: u64, q: u64) -> Layer {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Elementwise,
+            n,
+            k,
+            c: 1,
+            p,
+            q,
+            r: 1,
+            s: 1,
+            stride: 1,
+            pad: 0,
+            pool_after: 1,
+            skip: false,
+        }
+    }
+
     /// Builder: mark a pooling stage after this layer.
     pub fn with_pool(mut self, factor: u64) -> Layer {
         self.pool_after = factor;
@@ -204,7 +237,7 @@ impl Layer {
     /// encoding.
     pub fn input_size(&self) -> u64 {
         let channels = match self.kind {
-            LayerKind::Depthwise => self.k,
+            LayerKind::Depthwise | LayerKind::Elementwise => self.k,
             _ => self.c,
         };
         self.n * channels * self.input_h().max(1) * self.input_w().max(1)
@@ -251,6 +284,7 @@ impl Layer {
             LayerKind::Fc => 2,
             LayerKind::MatMul => 3,
             LayerKind::Depthwise => 4,
+            LayerKind::Elementwise => 5,
         });
         for v in [
             self.n,
@@ -290,6 +324,12 @@ impl Layer {
             return Err(format!(
                 "layer `{}`: depthwise layers encode C = 1, got {}",
                 self.name, self.c
+            ));
+        }
+        if self.kind == LayerKind::Elementwise && (self.c != 1 || self.r != 1 || self.s != 1) {
+            return Err(format!(
+                "layer `{}`: elementwise layers encode C = R = S = 1, got C={} R={} S={}",
+                self.name, self.c, self.r, self.s
             ));
         }
         Ok(())
@@ -340,11 +380,11 @@ impl Network {
                 }
                 _ => a.k,
             };
-            // A depthwise consumer maps input channel k to output channel
-            // k, so it consumes K channels even though its loop encoding
-            // has C = 1.
+            // A depthwise or elementwise consumer maps input channel k to
+            // output channel k, so it consumes K channels even though its
+            // loop encoding has C = 1.
             let consumed = match b.kind {
-                LayerKind::Depthwise => b.k,
+                LayerKind::Depthwise | LayerKind::Elementwise => b.k,
                 _ => b.c,
             };
             if produced != consumed {
@@ -450,6 +490,30 @@ mod tests {
         // A depthwise with C != 1 is malformed by construction.
         let mut broken = Layer::depthwise("dw", 1, 32, 56, 56, 3, 3, 1, 1);
         broken.c = 32;
+        assert!(broken.validate().is_err());
+    }
+
+    #[test]
+    fn elementwise_shapes_and_chains() {
+        let ew = Layer::elementwise("add", 1, 64, 56, 56);
+        ew.validate().unwrap();
+        assert_eq!((ew.c, ew.r, ew.s), (1, 1, 1));
+        // One op per output element, a full K-channel input read.
+        assert_eq!(ew.macs(), 64 * 56 * 56);
+        assert_eq!(ew.input_size(), 64 * 56 * 56);
+        // Chains: conv(K=64) → add(K=64) → conv(C=64) validates.
+        let net = Network::new(
+            "ewchain",
+            vec![
+                Layer::conv("a", 1, 64, 8, 56, 56, 3, 3, 1, 1),
+                Layer::elementwise("add", 1, 64, 56, 56),
+                Layer::conv("b", 1, 8, 64, 56, 56, 1, 1, 1, 0),
+            ],
+        );
+        net.validate().unwrap();
+        // An elementwise with C != 1 is malformed by construction.
+        let mut broken = Layer::elementwise("add", 1, 64, 56, 56);
+        broken.c = 64;
         assert!(broken.validate().is_err());
     }
 

@@ -21,8 +21,29 @@
 //!     pool_after: 2       # optional
 //!     skip: false         # optional
 //! ```
+//!
+//! Graph workloads add an optional `inputs:` list per layer naming its
+//! producers (edges), and an optional top-level `output:` naming the
+//! canonical sink when the graph has several:
+//!
+//! ```yaml
+//! name: block
+//! layers:
+//!   - name: conv_a
+//!     k: 64
+//!     c: 64
+//!     ...
+//!   - name: conv_b        # no `inputs:` — implicit edge from conv_a
+//!     ...
+//!   - name: add           # residual join: two incoming edges
+//!     kind: elementwise
+//!     k: 64
+//!     inputs:
+//!       - conv_b
+//!       - conv_a
+//! ```
 
-use super::{Layer, LayerKind, Network};
+use super::{Layer, LayerKind, Network, NetworkGraph};
 use crate::util::yaml::{self, Value};
 
 /// Parse a network description file.
@@ -50,7 +71,14 @@ fn layer_from_value(v: &Value) -> Result<Layer, String> {
         "fc" => LayerKind::Fc,
         "matmul" => LayerKind::MatMul,
         "depthwise" => LayerKind::Depthwise,
+        "elementwise" => LayerKind::Elementwise,
         other => return Err(format!("unknown kind `{other}`")),
+    };
+    let defaults = match kind {
+        // Elementwise joins encode C = 1 (see `LayerKind::Elementwise`),
+        // so `c` is implied rather than required.
+        LayerKind::Elementwise => Some(1),
+        _ => None,
     };
     let g = |key: &str, default: u64| v.get(key).and_then(Value::as_u64).unwrap_or(default);
     let layer = Layer {
@@ -58,7 +86,10 @@ fn layer_from_value(v: &Value) -> Result<Layer, String> {
         kind,
         n: g("n", 1),
         k: v.get("k").and_then(Value::as_u64).ok_or("missing `k`")?,
-        c: v.get("c").and_then(Value::as_u64).ok_or("missing `c`")?,
+        c: match defaults {
+            Some(c) => g("c", c),
+            None => v.get("c").and_then(Value::as_u64).ok_or("missing `c`")?,
+        },
         p: g("p", 1),
         q: g("q", 1),
         r: g("r", 1),
@@ -82,30 +113,153 @@ pub fn network_to_yaml(net: &Network) -> String {
     let _ = writeln!(s, "name: {}", net.name);
     let _ = writeln!(s, "layers:");
     for l in &net.layers {
-        let kind = match l.kind {
-            LayerKind::Conv => "conv",
-            LayerKind::Fc => "fc",
-            LayerKind::MatMul => "matmul",
-            LayerKind::Depthwise => "depthwise",
-        };
-        let _ = writeln!(s, "  - name: {}", l.name);
-        let _ = writeln!(s, "    kind: {kind}");
-        for (k, v) in [
-            ("n", l.n),
-            ("k", l.k),
-            ("c", l.c),
-            ("p", l.p),
-            ("q", l.q),
-            ("r", l.r),
-            ("s", l.s),
-            ("stride", l.stride),
-            ("pad", l.pad),
-            ("pool_after", l.pool_after),
-        ] {
-            let _ = writeln!(s, "    {k}: {v}");
-        }
+        emit_layer(&mut s, l);
         if l.skip {
             let _ = writeln!(s, "    skip: true");
+        }
+    }
+    s
+}
+
+fn kind_str(kind: LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Conv => "conv",
+        LayerKind::Fc => "fc",
+        LayerKind::MatMul => "matmul",
+        LayerKind::Depthwise => "depthwise",
+        LayerKind::Elementwise => "elementwise",
+    }
+}
+
+fn emit_layer(s: &mut String, l: &Layer) {
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "  - name: {}", l.name);
+    let _ = writeln!(s, "    kind: {}", kind_str(l.kind));
+    for (k, v) in [
+        ("n", l.n),
+        ("k", l.k),
+        ("c", l.c),
+        ("p", l.p),
+        ("q", l.q),
+        ("r", l.r),
+        ("s", l.s),
+        ("stride", l.stride),
+        ("pad", l.pad),
+        ("pool_after", l.pool_after),
+    ] {
+        let _ = writeln!(s, "    {k}: {v}");
+    }
+}
+
+/// True when a workload document uses the graph syntax (a per-layer
+/// `inputs:` list or a top-level `output:`), so the CLI can route it
+/// through [`graph_from_yaml`].
+pub fn yaml_is_graph(source: &str) -> bool {
+    match yaml::parse(source) {
+        Ok(doc) => {
+            doc.get("output").is_some()
+                || doc
+                    .get("layers")
+                    .and_then(Value::as_list)
+                    .is_some_and(|ls| ls.iter().any(|l| l.get("inputs").is_some()))
+        }
+        Err(_) => false,
+    }
+}
+
+/// Parse a graph workload description. A layer without an `inputs:` list
+/// gets an implicit edge from the preceding layer, so every chain
+/// document also parses as a linear graph; named inputs become explicit
+/// edges. Cycles, unknown references, and ambiguous sinks are reported as
+/// friendly errors (the CLI turns them into exit-2 diagnostics).
+pub fn graph_from_yaml(source: &str) -> Result<NetworkGraph, String> {
+    let doc = yaml::parse(source).map_err(|e| e.to_string())?;
+    let name = doc
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or("missing `name`")?
+        .to_string();
+    let layers_val = doc.get("layers").and_then(Value::as_list).ok_or("missing `layers` list")?;
+    let mut layers: Vec<Layer> = Vec::with_capacity(layers_val.len());
+    let mut index = std::collections::HashMap::new();
+    for (i, lv) in layers_val.iter().enumerate() {
+        let layer = layer_from_value(lv).map_err(|e| format!("layer {i}: {e}"))?;
+        if index.insert(layer.name.clone(), i).is_some() {
+            return Err(format!("duplicate layer name `{}`", layer.name));
+        }
+        layers.push(layer);
+    }
+    let mut edges = Vec::new();
+    for (i, lv) in layers_val.iter().enumerate() {
+        match lv.get("inputs") {
+            // `inputs: none` — an explicit source mid-list (no implicit edge).
+            Some(v) if v.as_str() == Some("none") => {}
+            Some(v) => {
+                let list = v.as_list().ok_or_else(|| {
+                    format!("layer `{}`: `inputs` must be a list of layer names", layers[i].name)
+                })?;
+                for item in list {
+                    let r = item.as_str().ok_or_else(|| {
+                        format!("layer `{}`: `inputs` entries must be layer names", layers[i].name)
+                    })?;
+                    let &p = index.get(r).ok_or_else(|| {
+                        format!("layer `{}`: unknown input `{r}`", layers[i].name)
+                    })?;
+                    edges.push((p, i));
+                }
+            }
+            None if i > 0 => edges.push((i - 1, i)),
+            None => {}
+        }
+    }
+    let g = NetworkGraph::new(&name, layers, edges)?;
+    if let Some(out) = doc.get("output") {
+        let out = out.as_str().ok_or("`output` must be a layer name")?;
+        let oi = g.index_of(out).ok_or_else(|| format!("output `{out}` is not a layer"))?;
+        if let Some(&succ) = g.succs(oi).first() {
+            return Err(format!(
+                "output `{out}` is not a sink (it feeds `{}`)",
+                g.layers[succ].name
+            ));
+        }
+    } else {
+        let sinks = g.sinks();
+        if sinks.len() > 1 {
+            let names: Vec<&str> = sinks.iter().map(|&i| g.layers[i].name.as_str()).collect();
+            return Err(format!(
+                "network `{name}` has {} sinks (`{}`); declare one with a top-level `output:`",
+                sinks.len(),
+                names.join("`, `")
+            ));
+        }
+    }
+    Ok(g)
+}
+
+/// Emit a graph to the description format (round-trips through
+/// [`graph_from_yaml`]). `inputs:` lists are written only where they
+/// differ from the implicit previous-layer edge.
+pub fn graph_to_yaml(g: &NetworkGraph) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "name: {}", g.name);
+    let sinks = g.sinks();
+    if sinks.len() > 1 {
+        let _ = writeln!(s, "output: {}", g.layers[*sinks.last().unwrap()].name);
+    }
+    let _ = writeln!(s, "layers:");
+    for (i, l) in g.layers.iter().enumerate() {
+        emit_layer(&mut s, l);
+        let implicit: &[usize] = if i > 0 { &[i - 1] } else { &[] };
+        if g.preds(i) != implicit {
+            if g.preds(i).is_empty() {
+                let _ = writeln!(s, "    inputs: none");
+            } else {
+                let _ = writeln!(s, "    inputs:");
+                for &p in g.preds(i) {
+                    let _ = writeln!(s, "      - {}", g.layers[p].name);
+                }
+            }
         }
     }
     s
@@ -163,5 +317,116 @@ layers:
     c: 2
 ";
         assert!(network_from_yaml(doc).is_err());
+    }
+
+    #[test]
+    fn graph_roundtrip_all_zoo_graphs() {
+        for (name, g) in zoo::graphs() {
+            let text = graph_to_yaml(&g);
+            assert!(yaml_is_graph(&text) || g.is_linear(), "{name} detected");
+            let parsed =
+                graph_from_yaml(&text).unwrap_or_else(|e| panic!("reparse {name}: {e}"));
+            assert_eq!(parsed, g, "{name} roundtrip");
+        }
+    }
+
+    #[test]
+    fn chain_doc_parses_as_linear_graph() {
+        let net = zoo::tiny_cnn();
+        let g = graph_from_yaml(&network_to_yaml(&net)).unwrap();
+        assert!(!yaml_is_graph(&network_to_yaml(&net)));
+        assert!(g.is_linear());
+        assert_eq!(g, super::super::NetworkGraph::from_network(&net));
+    }
+
+    #[test]
+    fn graph_cycle_is_error() {
+        let doc = "\
+name: cyc
+layers:
+  - name: a
+    k: 8
+    c: 8
+    inputs:
+      - b
+  - name: b
+    k: 8
+    c: 8
+    inputs:
+      - a
+";
+        let err = graph_from_yaml(doc).unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn graph_unknown_input_is_error() {
+        let doc = "\
+name: m
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+    inputs:
+      - nope
+";
+        let err = graph_from_yaml(doc).unwrap_err();
+        assert!(err.contains("unknown input `nope`"), "{err}");
+    }
+
+    #[test]
+    fn graph_multiple_sinks_need_output() {
+        let doc = "\
+name: m
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+  - name: c
+    k: 8
+    c: 8
+    inputs:
+      - a
+";
+        let err = graph_from_yaml(doc).unwrap_err();
+        assert!(err.contains("declare one with a top-level `output:`"), "{err}");
+        let fixed = format!("output: c\n{doc}");
+        let g = graph_from_yaml(&fixed).unwrap();
+        assert_eq!(g.sinks().len(), 2);
+        // ...but the declared output must actually be a sink.
+        let bad = format!("output: a\n{doc}");
+        let err = graph_from_yaml(&bad).unwrap_err();
+        assert!(err.contains("not a sink"), "{err}");
+    }
+
+    #[test]
+    fn elementwise_c_is_implied() {
+        let doc = "\
+name: m
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+  - name: add
+    kind: elementwise
+    k: 8
+    p: 1
+    q: 1
+    inputs:
+      - a
+      - b
+";
+        let g = graph_from_yaml(doc).unwrap();
+        assert_eq!(g.layers[2].c, 1);
+        assert_eq!(g.preds(2), &[0, 1]);
     }
 }

@@ -8,7 +8,7 @@
 //! and do not affect total latency, so they are excluded from the overlap
 //! chain.
 
-use super::{Layer, Network};
+use super::{Layer, Network, NetworkGraph};
 
 /// ResNet-18 (He et al. 2016): conv1 + 16 basic-block convs + fc on the
 /// main chain, 3 down-sample convs on skip branches.
@@ -226,6 +226,135 @@ pub fn tiny_cnn() -> Network {
     net
 }
 
+/// Incremental graph builder: push a node with its producer edges.
+struct GraphBuilder {
+    layers: Vec<Layer>,
+    edges: Vec<(usize, usize)>,
+}
+
+impl GraphBuilder {
+    fn new() -> GraphBuilder {
+        GraphBuilder { layers: Vec::new(), edges: Vec::new() }
+    }
+
+    fn node(&mut self, layer: Layer, inputs: &[usize]) -> usize {
+        let i = self.layers.len();
+        self.layers.push(layer);
+        for &p in inputs {
+            self.edges.push((p, i));
+        }
+        i
+    }
+
+    fn build(self, name: &str) -> NetworkGraph {
+        NetworkGraph::new(name, self.layers, self.edges)
+            .unwrap_or_else(|e| panic!("zoo graph `{name}` must validate: {e}"))
+    }
+}
+
+/// True ResNet-18 as a computation graph: the residual structure the
+/// chain preset can only approximate. Every basic block ends in an
+/// elementwise join whose second input is the block's identity (or
+/// down-sample) branch — the skip edges reach *past* the two main-path
+/// convs, which is exactly the overlap opportunity the chain path cannot
+/// see.
+pub fn resnet18_graph() -> NetworkGraph {
+    let mut g = GraphBuilder::new();
+    let conv1 = g.node(Layer::conv("conv1", 1, 64, 3, 112, 112, 7, 7, 2, 3).with_pool(2), &[]);
+    // (stage idx, channels, spatial): two basic blocks per stage.
+    let stages: &[(usize, u64, u64)] = &[(2, 64, 56), (3, 128, 28), (4, 256, 14), (5, 512, 7)];
+    let mut prev = conv1;
+    let mut in_ch = 64u64;
+    for &(s, ch, hw) in stages {
+        for blk in 1..=2usize {
+            let first = s > 2 && blk == 1;
+            let stride = if first { 2 } else { 1 };
+            let a = g.node(
+                Layer::conv(&format!("conv{s}_{blk}a"), 1, ch, in_ch, hw, hw, 3, 3, stride, 1),
+                &[prev],
+            );
+            let b = g.node(
+                Layer::conv(&format!("conv{s}_{blk}b"), 1, ch, ch, hw, hw, 3, 3, 1, 1),
+                &[a],
+            );
+            // Identity branch: the block input, down-sampled on the first
+            // block of stages 3–5 where channels/stride change.
+            let identity = if first {
+                g.node(Layer::conv(&format!("ds{s}"), 1, ch, in_ch, hw, hw, 1, 1, 2, 0), &[prev])
+            } else {
+                prev
+            };
+            let mut add = Layer::elementwise(&format!("add{s}_{blk}"), 1, ch, hw, hw);
+            if s == 5 && blk == 2 {
+                // Global average pool before the classifier.
+                add = add.with_pool(7);
+            }
+            prev = g.node(add, &[b, identity]);
+            in_ch = ch;
+        }
+    }
+    g.node(Layer::fc("fc", 1, 1000, 512), &[prev]);
+    g.build("resnet18-graph")
+}
+
+/// A BERT-style attention block as a graph of tiled matmul chains
+/// (paper §VI encoding): the embedding fans out into four per-head
+/// QKV→attention chains whose outputs concatenate into the output
+/// projection, followed by the two residual adds around attention and
+/// the FFN. Sequence 128, hidden 768, 4 tiles of head-dim 192, FFN 3072.
+pub fn bert_attention_graph() -> NetworkGraph {
+    let seq = 128;
+    let hidden = 768u64;
+    let heads = 4u64;
+    let head_dim = hidden / heads; // 192
+    let ffn = 3072;
+    let mut g = GraphBuilder::new();
+    let embed = g.node(Layer::matmul("embed", seq, hidden, hidden), &[]);
+    let mut head_outs = Vec::new();
+    for h in 1..=heads {
+        // Per-head fused QKV projection (three head_dim-wide matrices).
+        let qkv = g.node(
+            Layer::matmul(&format!("qkv_h{h}"), seq, hidden, 3 * head_dim),
+            &[embed],
+        );
+        // Per-head attention: scores + context collapsed into one tiled
+        // matmul chain producing the head's context rows.
+        head_outs.push(g.node(
+            Layer::matmul(&format!("attn_h{h}"), seq, 3 * head_dim, head_dim),
+            &[qkv],
+        ));
+    }
+    // Concatenate the four head contexts into the output projection.
+    let out_proj = g.node(Layer::matmul("out_proj", seq, hidden, hidden), &head_outs);
+    let add_attn = g.node(
+        Layer::elementwise("add_attn", 1, hidden, seq, 1),
+        &[out_proj, embed],
+    );
+    let ffn1 = g.node(Layer::matmul("ffn1", seq, hidden, ffn), &[add_attn]);
+    let ffn2 = g.node(Layer::matmul("ffn2", seq, ffn, hidden), &[ffn1]);
+    g.node(Layer::elementwise("add_ffn", 1, hidden, seq, 1), &[ffn2, add_attn]);
+    g.build("bert-attention")
+}
+
+/// Look up a zoo *graph* by name. Chain presets are reachable as linear
+/// graphs through [`by_name`] + [`NetworkGraph::from_network`] (the CLI
+/// does this automatically).
+pub fn graph_by_name(name: &str) -> Option<NetworkGraph> {
+    match name {
+        "resnet18-graph" | "resnet18_graph" => Some(resnet18_graph()),
+        "bert-attention" | "bert_attention" => Some(bert_attention_graph()),
+        _ => None,
+    }
+}
+
+/// All graph zoo entries with their canonical names.
+pub fn graphs() -> Vec<(&'static str, NetworkGraph)> {
+    vec![
+        ("resnet18-graph", resnet18_graph()),
+        ("bert-attention", bert_attention_graph()),
+    ]
+}
+
 /// Look up a zoo network by name (used by the CLI and benches).
 pub fn by_name(name: &str) -> Option<Network> {
     match name {
@@ -320,5 +449,54 @@ mod tests {
     #[test]
     fn bert_chain_is_consistent() {
         bert_encoder().validate().unwrap();
+    }
+
+    #[test]
+    fn resnet18_graph_structure() {
+        let g = resnet18_graph();
+        // conv1 + 8 blocks × (2 convs + 1 join) + 3 downsamples + fc.
+        assert_eq!(g.len(), 29);
+        assert!(!g.is_linear());
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks().len(), 1);
+        // Every join has exactly two predecessors; the identity edge of
+        // the first join reaches past both main-path convs back to conv1.
+        let joins: Vec<usize> = (0..g.len())
+            .filter(|&i| g.layers[i].kind == crate::workload::LayerKind::Elementwise)
+            .collect();
+        assert_eq!(joins.len(), 8);
+        for &j in &joins {
+            assert_eq!(g.preds(j).len(), 2, "join `{}`", g.layers[j].name);
+        }
+        let add2_1 = g.index_of("add2_1").unwrap();
+        assert!(g.preds(add2_1).contains(&g.index_of("conv1").unwrap()));
+        // The graph carries the same conv/fc work as the chain preset.
+        let chain_macs = resnet18().total_macs();
+        let join_macs: u64 = joins.iter().map(|&j| g.layers[j].macs()).sum();
+        assert_eq!(g.total_macs() - join_macs, chain_macs);
+    }
+
+    #[test]
+    fn bert_attention_graph_structure() {
+        let g = bert_attention_graph();
+        assert_eq!(g.len(), 14);
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks().len(), 1);
+        // The output projection concatenates all four head contexts.
+        let out_proj = g.index_of("out_proj").unwrap();
+        assert_eq!(g.preds(out_proj).len(), 4);
+        // Both residual joins reach back past their sub-block.
+        let add_attn = g.index_of("add_attn").unwrap();
+        assert!(g.preds(add_attn).contains(&g.index_of("embed").unwrap()));
+        let add_ffn = g.index_of("add_ffn").unwrap();
+        assert!(g.preds(add_ffn).contains(&add_attn));
+    }
+
+    #[test]
+    fn zoo_graph_by_name_roundtrip() {
+        for (name, g) in graphs() {
+            assert_eq!(graph_by_name(name).unwrap(), g);
+        }
+        assert!(graph_by_name("resnet18").is_none());
     }
 }

@@ -1,0 +1,280 @@
+//! Graph-workload regression suite:
+//!
+//! * **chain equivalence** — every chain zoo preset viewed as a linear
+//!   [`NetworkGraph`] produces a bit-identical `NetworkPlan` to the chain
+//!   path (same mappings, stats, pair results, per-edge reports, totals
+//!   and evaluated-candidate counts) under every metric, both analysis
+//!   engines, and 1/2/4/8 threads — the topological engine is a strict
+//!   generalization, not a reimplementation;
+//! * **branch-aware search** — ResNet-18 with true skip edges searches
+//!   end-to-end and reports strictly lower overlapped latency than its
+//!   chain-flattened equivalent (the paper's motivation for graphs);
+//! * **DOT export** — the Graphviz view of the graph zoo is deterministic
+//!   and structurally faithful.
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::workload::{parser, zoo};
+
+fn cfg(budget: usize, seed: u64, threads: usize) -> MapperConfig {
+    MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed,
+        threads,
+        cache: true,
+        refine_passes: 1,
+        ..Default::default()
+    }
+}
+
+/// Bit-identity between a chain plan and its linear-graph counterpart.
+/// `layer_index` is deliberately not compared: the chain indexes into the
+/// full layer list (skip-marked layers included), the graph into its own
+/// chain-only node list.
+fn assert_plans_identical(a: &NetworkPlan, b: &NetworkPlan, what: &str) {
+    assert_eq!(a.total_sequential, b.total_sequential, "{what}: sequential total");
+    assert_eq!(a.total_overlapped, b.total_overlapped, "{what}: overlapped total");
+    assert_eq!(a.total_transformed, b.total_transformed, "{what}: transformed total");
+    assert_eq!(a.mappings_evaluated, b.mappings_evaluated, "{what}: evaluated count");
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.name, y.name, "{what}: layer order");
+        assert_eq!(x.mapping, y.mapping, "{what}: mapping of `{}`", x.name);
+        assert_eq!(x.stats, y.stats, "{what}: stats of `{}`", x.name);
+        assert_eq!(x.overlap, y.overlap, "{what}: overlap of `{}`", x.name);
+        assert_eq!(x.transform, y.transform, "{what}: transform of `{}`", x.name);
+    }
+    assert_eq!(a.edge_overlaps, b.edge_overlaps, "{what}: per-edge reports");
+}
+
+#[test]
+fn linear_graph_bit_identical_to_chain_for_every_zoo_preset() {
+    let arch = Arch::dram_pim_small();
+    for (name, net) in zoo::all() {
+        let g = NetworkGraph::from_network(&net);
+        assert!(g.is_linear(), "{name}: chain promotion must be linear");
+        let chain = NetworkSearch::new(&arch, cfg(4, 17, 2), SearchStrategy::Forward)
+            .run(&net, Metric::Transform);
+        let graph = NetworkSearch::new(&arch, cfg(4, 17, 2), SearchStrategy::Forward)
+            .run_graph(&g, Metric::Transform);
+        assert_plans_identical(&chain, &graph, name);
+    }
+}
+
+#[test]
+fn linear_graph_identity_holds_for_every_metric_at_1_2_4_and_8_threads() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let g = NetworkGraph::from_network(&net);
+    for metric in [Metric::Sequential, Metric::Overlap, Metric::Transform] {
+        for threads in [1usize, 2, 4, 8] {
+            let chain = NetworkSearch::new(&arch, cfg(12, 7, threads), SearchStrategy::Forward)
+                .run(&net, metric);
+            let graph = NetworkSearch::new(&arch, cfg(12, 7, threads), SearchStrategy::Forward)
+                .run_graph(&g, metric);
+            assert_plans_identical(&chain, &graph, &format!("{metric:?}/{threads}t"));
+        }
+    }
+}
+
+#[test]
+fn linear_graph_identity_holds_for_every_strategy_and_engine() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let g = NetworkGraph::from_network(&net);
+    for strat in [
+        SearchStrategy::Forward,
+        SearchStrategy::Backward,
+        SearchStrategy::Middle(MiddleHeuristic::LargestOutput),
+        SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
+    ] {
+        for engine in [AnalysisEngine::Analytical, AnalysisEngine::Exhaustive] {
+            let mut c = cfg(8, 3, 2);
+            c.engine = engine;
+            let chain = NetworkSearch::new(&arch, c.clone(), strat).run(&net, Metric::Overlap);
+            let graph = NetworkSearch::new(&arch, c, strat).run_graph(&g, Metric::Overlap);
+            assert_plans_identical(&chain, &graph, &format!("{strat:?}/{engine:?}"));
+        }
+    }
+}
+
+#[test]
+fn pipelined_graph_metrics_identical_to_chain_metrics() {
+    // The multi-metric pipelined engine (concurrent metric jobs, shared
+    // candidate store, speculative look-ahead) must keep the linear-graph
+    // identity, not just the solo runs.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let g = NetworkGraph::from_network(&net);
+    for threads in [1usize, 2, 4, 8] {
+        let (c_seq, c_ov, c_tr) =
+            NetworkSearch::new(&arch, cfg(10, 11, threads), SearchStrategy::Forward)
+                .run_all_metrics(&net);
+        let (g_seq, g_ov, g_tr) =
+            NetworkSearch::new(&arch, cfg(10, 11, threads), SearchStrategy::Forward)
+                .run_graph_all_metrics(&g);
+        assert_plans_identical(&c_seq, &g_seq, &format!("{threads}t sequential"));
+        assert_plans_identical(&c_ov, &g_ov, &format!("{threads}t overlap"));
+        assert_plans_identical(&c_tr, &g_tr, &format!("{threads}t transform"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Branch-aware search on true graphs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resnet18_skip_edges_beat_the_chain_flattened_equivalent() {
+    // The acceptance bar of the graph refactor: the real residual graph —
+    // where every join's second arm reaches past the two main-path convs —
+    // must report strictly lower overlapped latency than the serialized
+    // chain view of the same 29 nodes, under both pair-dependent metrics.
+    let arch = Arch::dram_pim_small();
+    let g = zoo::resnet18_graph();
+    let flat = g.chain_flattened();
+    assert_eq!(flat.len(), g.len());
+    for metric in [Metric::Overlap, Metric::Transform] {
+        let graph = NetworkSearch::new(&arch, cfg(6, 5, 2), SearchStrategy::Forward)
+            .run_graph(&g, metric);
+        let chain = NetworkSearch::new(&arch, cfg(6, 5, 2), SearchStrategy::Forward)
+            .run_graph(&flat, metric);
+        assert_eq!(graph.edge_overlaps.len(), g.edges.len(), "{metric:?}: one report per edge");
+        assert!(
+            graph.total_overlapped < chain.total_overlapped,
+            "{metric:?}: graph {} must beat flattened {}",
+            graph.total_overlapped,
+            chain.total_overlapped
+        );
+        if metric == Metric::Transform {
+            assert!(
+                graph.total_transformed < chain.total_transformed,
+                "transformed: graph {} must beat flattened {}",
+                graph.total_transformed,
+                chain.total_transformed
+            );
+        }
+        assert!(graph.total_overlapped <= graph.total_sequential);
+    }
+}
+
+#[test]
+fn graph_presets_search_under_every_strategy() {
+    let arch = Arch::dram_pim_small();
+    for (name, g) in zoo::graphs() {
+        for strat in [
+            SearchStrategy::Forward,
+            SearchStrategy::Backward,
+            SearchStrategy::Middle(MiddleHeuristic::LargestOverall),
+        ] {
+            let plan =
+                NetworkSearch::new(&arch, cfg(4, 9, 2), strat).run_graph(&g, Metric::Overlap);
+            assert_eq!(plan.layers.len(), g.len(), "{name}/{strat:?}");
+            assert_eq!(plan.edge_overlaps.len(), g.edges.len(), "{name}/{strat:?}");
+            assert!(
+                plan.total_overlapped <= plan.total_sequential,
+                "{name}/{strat:?}: overlap can only help"
+            );
+        }
+    }
+}
+
+#[test]
+fn graph_search_bit_identical_across_thread_counts() {
+    let arch = Arch::dram_pim_small();
+    let g = zoo::resnet18_graph();
+    let baseline = NetworkSearch::new(&arch, cfg(4, 13, 1), SearchStrategy::Forward)
+        .run_graph(&g, Metric::Transform);
+    for threads in [2usize, 8] {
+        let plan = NetworkSearch::new(&arch, cfg(4, 13, threads), SearchStrategy::Forward)
+            .run_graph(&g, Metric::Transform);
+        assert_plans_identical(&baseline, &plan, &format!("{threads} threads"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parser diagnostics and DOT export.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_yaml_errors_are_friendly() {
+    let cycle = "\
+name: cyc
+layers:
+  - name: a
+    k: 8
+    c: 8
+    inputs:
+      - b
+  - name: b
+    k: 8
+    c: 8
+    inputs:
+      - a
+";
+    let err = parser::graph_from_yaml(cycle).unwrap_err();
+    assert!(err.contains("cycle"), "cycle diagnostics: {err}");
+
+    let unknown = "\
+name: u
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+    inputs:
+      - nope
+";
+    let err = parser::graph_from_yaml(unknown).unwrap_err();
+    assert!(err.contains("unknown input `nope`"), "unknown-input diagnostics: {err}");
+
+    let two_sinks = "\
+name: t
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+  - name: c
+    k: 8
+    c: 8
+    inputs:
+      - a
+";
+    let err = parser::graph_from_yaml(two_sinks).unwrap_err();
+    assert!(err.contains("declare one with a top-level `output:`"), "multi-sink: {err}");
+}
+
+#[test]
+fn graph_roundtrips_through_yaml() {
+    for (name, g) in zoo::graphs() {
+        let text = parser::graph_to_yaml(&g);
+        assert!(parser::yaml_is_graph(&text), "{name}: export must use graph syntax");
+        let back = parser::graph_from_yaml(&text)
+            .unwrap_or_else(|e| panic!("{name}: reparse failed: {e}"));
+        assert_eq!(back.len(), g.len(), "{name}: node count");
+        assert_eq!(back.edges, g.edges, "{name}: edges");
+    }
+}
+
+#[test]
+fn resnet18_dot_snapshot() {
+    let g = zoo::resnet18_graph();
+    let dot = g.to_dot();
+    // Deterministic output.
+    assert_eq!(dot, g.to_dot());
+    // Structural snapshot: header, one `->` line per edge, and the
+    // landmarks of the residual topology — the stem, a down-sample
+    // branch, a join and the classifier.
+    assert!(dot.starts_with("digraph \"resnet18-graph\""), "header: {dot}");
+    assert_eq!(dot.matches(" -> ").count(), g.edges.len(), "one DOT edge per graph edge");
+    for landmark in ["conv1", "ds3", "add5_2", "fc"] {
+        assert!(dot.contains(landmark), "missing `{landmark}` in DOT");
+    }
+    // The skip edge of stage 2 block 1: conv1 (n0) feeds both conv2_1a
+    // (n1) and the add join (n3).
+    assert!(dot.contains("n0 -> n1"), "main-path edge");
+    assert!(dot.contains("n0 -> n3"), "skip edge");
+}
