@@ -40,6 +40,23 @@ pub fn maybe_csv(t: &Table) {
     }
 }
 
+/// Write a small machine-readable benchmark record when
+/// `FOPIM_BENCH_JSON` names a destination file (the CI bench-smoke job
+/// points it at `BENCH_<bench>.json` and uploads the records as
+/// artifacts). Metrics are flat `name → number` pairs; anything
+/// structured belongs in the human-readable tables instead.
+pub fn maybe_bench_json(bench: &str, metrics: &[(String, f64)]) {
+    let Ok(path) = std::env::var("FOPIM_BENCH_JSON") else { return };
+    use fastoverlapim::report::Json;
+    let fields: Vec<(String, Json)> = std::iter::once(("bench".to_string(), Json::str(bench)))
+        .chain(metrics.iter().map(|(k, v)| (k.clone(), Json::num(*v))))
+        .collect();
+    match std::fs::write(&path, Json::Obj(fields).render()) {
+        Ok(()) => println!("bench record: {path}"),
+        Err(e) => eprintln!("warning: could not write bench record `{path}`: {e}"),
+    }
+}
+
 /// Median-of-k wall-clock measurement.
 pub fn time_median<F: FnMut()>(k: usize, mut f: F) -> Duration {
     let mut samples: Vec<Duration> = (0..k.max(1))

@@ -57,6 +57,8 @@ fn main() {
     let budgets: Vec<usize> =
         [full / 8, full / 4, full / 2, full].into_iter().filter(|&b| b >= 4).collect();
 
+    let mut record: Vec<(String, f64)> = Vec::new();
+
     for name in nets_knob.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let net = zoo::by_name(name).unwrap_or_else(|| panic!("unknown zoo net `{name}`"));
         // The quality bar: uniform random sampling at the full budget.
@@ -116,6 +118,12 @@ fn main() {
             ),
             None => println!("{}: no guided engine matched the random bar\n", net.name),
         }
+        record.push((format!("{}_random_bar_cycles", net.name), bar as f64));
+        // -1 means "no guided engine matched the bar"; the smoke job only
+        // checks the record exists and parses, thresholds stay in the text.
+        record.push((format!("{}_best_match_pct", net.name), best_frac.unwrap_or(-1.0)));
     }
+    record.push(("full_budget".to_string(), full as f64));
+    common::maybe_bench_json("convergence", &record);
     println!("convergence OK");
 }

@@ -274,5 +274,16 @@ fn main() {
         serial_secs / cold_secs,
         serial_secs / warm_secs
     );
+    common::maybe_bench_json(
+        "fig14",
+        &[
+            ("parallel_speedup_max_threads".to_string(), last_speedup),
+            ("pipeline_speedup_cold".to_string(), serial_secs / cold_secs),
+            ("pipeline_speedup_warm".to_string(), serial_secs / warm_secs),
+            ("best_transform_cycles".to_string(), base_total as f64),
+            ("threads".to_string(), max_threads.max(1) as f64),
+            ("budget_per_layer".to_string(), budget as f64),
+        ],
+    );
     println!("fig14 OK");
 }

@@ -42,6 +42,12 @@
 //! * [`transform`] — the overlap-driven mapping transformation (§IV-I),
 //!   split into the memoizable per-job ready queries and the cheap
 //!   scheduling arithmetic.
+//! * [`sim`] — the discrete-event validation simulator (Tier-2 trust
+//!   anchor): replays a searched plan as bank/compute events from the same
+//!   `LoopTable`/dataspace decode the analytical path uses, asserts the
+//!   simulated makespans match the analytical latencies (exact for
+//!   Sequential/Overlap, bounded relocation-penalty tolerance for
+//!   Transform), and emits Chrome/Perfetto traces (`repro simulate`).
 //! * [`search`] — the per-layer mapper and whole-network search strategies
 //!   (Forward / Backward / Middle) with all baseline algorithms (§IV-J/K),
 //!   the deterministic multi-threaded candidate evaluator
@@ -77,6 +83,7 @@ pub mod perf;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod sim;
 pub mod transform;
 pub mod util;
 pub mod workload;
@@ -101,6 +108,10 @@ pub mod prelude {
         calibrate_budget, calibrate_budget_graph, Algorithm, AnalysisEngine, Budget,
         CandidateStore, EdgeOverlap, EvaluatedMapping, Mapper, MapperConfig, Metric,
         MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
+    };
+    pub use crate::sim::{
+        simulate_graph_plan, simulate_network_plan, NodeSim, SimConfig, SimReport, Trace,
+        TraceEvent,
     };
     pub use crate::transform::{
         merge_ready_jobs, transform_ready_jobs, transform_schedule, transform_schedule_multi,

@@ -4,6 +4,8 @@
 //!
 //! * `search`    — whole-network mapping optimization (the paper's flow);
 //!   chain and graph workloads alike (graphs get per-edge overlap reports)
+//! * `simulate`  — search a plan, replay it through the discrete-event
+//!   validation simulator, and emit a Chrome/Perfetto trace (`--trace`)
 //! * `analyze`   — overlap analysis of one consecutive-layer pair
 //! * `graph`     — inspect a graph workload; `--dot` emits Graphviz DOT
 //! * `arch`      — dump/validate architecture configurations
@@ -24,6 +26,7 @@ fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("graph") => cmd_graph(&args),
         Some("arch") => cmd_arch(&args),
@@ -64,6 +67,16 @@ SUBCOMMANDS
             graph workloads — graph zoo presets like resnet18-graph or a
             YAML file using `inputs:` edges — search with the branch-aware
             topological engine and report per-edge overlap)
+  simulate --net <zoo|graph-zoo|file.yaml> [--arch dram|reram|small|file.yaml]
+           [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
+           [--metric seq|overlap|transform] [--algo random|ga|sa|hill]
+           [--threads N] [--trace out.json]
+           (searches a plan, then replays it as discrete events — banks as
+            resources, per-job compute/relocation events — and checks the
+            simulated makespans against the analytical latencies: exact for
+            Sequential/Overlap, bounded relocation-penalty tolerance for
+            Transform; --trace writes Chrome/Perfetto trace JSON viewable
+            at ui.perfetto.dev; exits 2 on divergence)
   analyze  --net <zoo> --pair I [--budget N] [--seed S]
   graph    --net <graph-zoo|zoo|file.yaml> [--dot]
            (chains are viewed as linear graphs; --dot emits Graphviz DOT)
@@ -559,6 +572,76 @@ fn print_per_layer(args: &Args, plan: &NetworkPlan, title: &str) {
         print!("{}", t.to_csv());
     } else {
         println!("{}", t.render());
+    }
+}
+
+/// `repro simulate`: search a plan, replay it through the discrete-event
+/// validation simulator ([`fastoverlapim::sim`]), report analytical vs
+/// simulated makespans, and optionally write the Chrome/Perfetto trace.
+/// Chains are promoted to linear graphs so every `--net` value works.
+/// Exits 2 on any divergence beyond the documented tolerance.
+fn cmd_simulate(args: &Args) {
+    use fastoverlapim::sim::{simulate_graph_plan, SimConfig};
+    let arch = load_arch(args);
+    let cfg = mapper_config(args);
+    let strat = strategy(args);
+    let Some(metric) = metric_arg(args) else {
+        fail("simulate replays one plan at a time (--metric seq|overlap|transform)")
+    };
+    let g = match load_workload(args) {
+        Workload::Graph(g) => g,
+        Workload::Chain(net) => NetworkGraph::from_network(&net),
+    };
+    eprintln!(
+        "simulating {} on {} (budget {}, algo {}, {:?}, {:?})...",
+        g.name,
+        arch.name,
+        cfg.budget,
+        cfg.algo.name(),
+        strat,
+        metric
+    );
+    let sim_cfg = SimConfig::from_mapper(&cfg);
+    let search = NetworkSearch::new(&arch, cfg, strat);
+    let plan = search.run_graph(&g, metric);
+    let report = simulate_graph_plan(&g, &plan, &sim_cfg);
+
+    let mut t = Table::new(
+        &format!("{} / {} / discrete-event replay", g.name, arch.name),
+        &["total", "analytical", "simulated", "tolerance"],
+    );
+    t.row(vec![
+        "sequential".into(),
+        cycles(plan.total_sequential),
+        cycles(report.total_sequential),
+        "exact".into(),
+    ]);
+    t.row(vec![
+        "overlapped".into(),
+        cycles(plan.total_overlapped),
+        cycles(report.total_overlapped),
+        "exact".into(),
+    ]);
+    t.row(vec![
+        "transformed".into(),
+        cycles(plan.total_transformed),
+        cycles(report.total_transformed),
+        format!("±{}", report.transform_tolerance),
+    ]);
+    println!("{}", t.render());
+
+    if let Some(path) = args.get("trace") {
+        std::fs::write(path, report.trace.chrome_json())
+            .unwrap_or_else(|e| fail(format!("writing trace `{path}`: {e}")));
+        println!("trace: {path} ({} slices)", report.trace.events.len());
+    }
+    match report.check(&plan) {
+        Ok(()) => println!(
+            "replay matches the analytical plan ({} nodes, transform tolerance ±{})",
+            report.nodes.len(),
+            report.transform_tolerance
+        ),
+        Err(msg) => fail(format!("simulation diverged from the analytical plan:\n{msg}")),
     }
 }
 

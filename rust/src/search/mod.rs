@@ -305,6 +305,13 @@ pub struct MapperConfig {
     /// see ROADMAP for the shared-pool follow-up. Ignored when a deadline
     /// is set.
     pub lookahead: bool,
+    /// Replay the winning plan through the discrete-event validation
+    /// simulator ([`crate::sim`]) before returning it, panicking on any
+    /// analytical-vs-simulated divergence (exact for Sequential/Overlap,
+    /// bounded by the documented relocation-penalty tolerance for
+    /// Transform). Off by default — it re-analyzes every chosen pair, so
+    /// it costs one extra final-pass-sized evaluation per run.
+    pub verify: bool,
 }
 
 impl MapperConfig {
@@ -362,6 +369,7 @@ impl Default for MapperConfig {
             cache: true,
             pipeline: true,
             lookahead: true,
+            verify: false,
         }
     }
 }
@@ -1509,7 +1517,7 @@ impl<'a> NetworkSearch<'a> {
             return self.resolved(net, metric).run(net, metric);
         }
         let lookahead = self.config.lookahead && self.config.sharing_active();
-        if lookahead {
+        let plan = if lookahead {
             // A batch of one: the store is purely the hand-off buffer
             // between the look-ahead thread and this run's own loop.
             let shared = SharedCandidates {
@@ -1520,7 +1528,11 @@ impl<'a> NetworkSearch<'a> {
             self.run_shared(net, metric, Some(&shared))
         } else {
             self.run_shared(net, metric, None)
+        };
+        if self.config.verify {
+            self.verify_plan(&NetworkGraph::from_network(net), &plan);
         }
+        plan
     }
 
     /// One whole-network pass under `metric`, optionally drawing candidate
@@ -1942,7 +1954,7 @@ impl<'a> NetworkSearch<'a> {
             return self.resolved_graph(g, metric).run_graph(g, metric);
         }
         let lookahead = self.config.lookahead && self.config.sharing_active();
-        if lookahead {
+        let plan = if lookahead {
             let shared = SharedCandidates {
                 store: CandidateStore::new(),
                 sweep_consumers: 1,
@@ -1951,7 +1963,20 @@ impl<'a> NetworkSearch<'a> {
             self.run_graph_shared(g, metric, Some(&shared))
         } else {
             self.run_graph_shared(g, metric, None)
+        };
+        if self.config.verify {
+            self.verify_plan(g, &plan);
         }
+        plan
+    }
+
+    /// The [`MapperConfig::verify`] hook: replay `plan` through the
+    /// discrete-event simulator under this run's exact analysis settings
+    /// and panic on divergence (see [`crate::sim`] for the tolerance
+    /// policy).
+    fn verify_plan(&self, g: &NetworkGraph, plan: &NetworkPlan) {
+        let sim = crate::sim::SimConfig::from_mapper(&self.config);
+        crate::sim::simulate_graph_plan(g, plan, &sim).assert_matches(plan);
     }
 
     /// One whole-graph pass under `metric`, optionally drawing candidate

@@ -1,0 +1,134 @@
+//! Event-queue and resource primitives for the validation simulator.
+//!
+//! Deliberately tiny and std-only: a binary min-heap of timestamped
+//! events with a deterministic FIFO tie-break, and a bank pool that
+//! models each PIM bank as a serially-reusable resource. Both are pure
+//! data structures — no clocks, no threads — so every replay built on
+//! them is a deterministic function of its inputs.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A timestamped min-heap: `pop` always returns the earliest event, and
+/// events that share a timestamp come back in push order (each push is
+/// sequence-numbered), so drain order is deterministic regardless of the
+/// heap's internal layout.
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Reverse<(u64, u64, usize)>>,
+    payloads: Vec<Option<T>>,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: BinaryHeap::new(), payloads: Vec::new() }
+    }
+
+    /// Schedule `payload` at `time`.
+    pub fn push(&mut self, time: u64, payload: T) {
+        let seq = self.payloads.len() as u64;
+        self.heap.push(Reverse((time, seq, self.payloads.len())));
+        self.payloads.push(Some(payload));
+    }
+
+    /// Remove and return the earliest event as `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(u64, T)> {
+        let Reverse((time, _, slot)) = self.heap.pop()?;
+        let payload = self.payloads[slot].take().expect("event popped once");
+        Some((time, payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+/// The bank resource model: each bank executes one job at a time and
+/// becomes free when the job's events finish. `acquire_run` is the whole
+/// protocol — a job waits for `max(inputs ready, bank free)`, holds the
+/// bank for its duration, and releases it.
+pub struct BankPool {
+    free_at: Vec<u64>,
+    /// First cycle each bank started working (for trace busy spans).
+    first_start: Vec<Option<u64>>,
+}
+
+impl BankPool {
+    pub fn new(banks: usize) -> BankPool {
+        BankPool { free_at: vec![0; banks], first_start: vec![None; banks] }
+    }
+
+    /// Run a batch of `count` back-to-back jobs of `cycles` each on
+    /// `bank`, none startable before `ready`. Returns `(start, finish)`
+    /// of the batch. The first job waits for `max(ready, bank free)`;
+    /// the rest chain (the bank is already past `ready` once the first
+    /// job ran).
+    pub fn acquire_run(&mut self, bank: usize, ready: u64, count: u64, cycles: u64) -> (u64, u64) {
+        let start = self.free_at[bank].max(ready);
+        let finish = start + count * cycles;
+        self.free_at[bank] = finish;
+        if self.first_start[bank].is_none() {
+            self.first_start[bank] = Some(start);
+        }
+        (start, finish)
+    }
+
+    /// Cycle at which every bank is done — the makespan of everything run
+    /// through the pool.
+    pub fn makespan(&self) -> u64 {
+        self.free_at.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Busy span `(first start, finish)` of one bank, `None` if it never
+    /// ran a job.
+    pub fn span(&self, bank: usize) -> Option<(u64, u64)> {
+        self.first_start[bank].map(|s| (s, self.free_at[bank]))
+    }
+
+    pub fn banks(&self) -> usize {
+        self.free_at.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_orders_by_time_then_push_order() {
+        let mut q = EventQueue::new();
+        q.push(5, "b");
+        q.push(3, "a");
+        q.push(5, "c");
+        q.push(0, "z");
+        let drained: Vec<(u64, &str)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![(0, "z"), (3, "a"), (5, "b"), (5, "c")]);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn bank_pool_serializes_per_bank_and_tracks_spans() {
+        let mut pool = BankPool::new(2);
+        // Bank 0: job ready at 10, runs 2×5 cycles → [10, 20).
+        assert_eq!(pool.acquire_run(0, 10, 2, 5), (10, 20));
+        // Same bank, ready at 0 but bank busy until 20.
+        assert_eq!(pool.acquire_run(0, 0, 1, 5), (20, 25));
+        // Other bank is independent.
+        assert_eq!(pool.acquire_run(1, 3, 1, 5), (3, 8));
+        assert_eq!(pool.makespan(), 25);
+        assert_eq!(pool.span(0), Some((10, 25)));
+        assert_eq!(pool.span(1), Some((3, 8)));
+        assert_eq!(BankPool::new(4).span(2), None);
+        assert_eq!(pool.banks(), 2);
+    }
+}

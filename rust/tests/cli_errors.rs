@@ -1,0 +1,162 @@
+//! CLI error-path and `repro simulate` smoke tests: exact diagnostics,
+//! exit code 2 on bad inputs, and a valid Chrome trace JSON on disk for
+//! a healthy run.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+/// Write a uniquely named scratch file (the test binary may run its
+/// tests concurrently, so names carry both the pid and a tag).
+fn write_temp(tag: &str, contents: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(format!("fopim-{}-{tag}", std::process::id()));
+    std::fs::write(&path, contents).expect("write temp file");
+    path
+}
+
+#[test]
+fn self_referential_input_is_a_friendly_exit_2() {
+    let yaml = "\
+name: selfy
+layers:
+  - name: a
+    k: 8
+    c: 3
+    inputs:
+      - a
+";
+    let path = write_temp("self.yaml", yaml);
+    let out = repro()
+        .args(["graph", "--net", path.to_str().expect("utf-8 temp path")])
+        .output()
+        .expect("run repro");
+    assert_eq!(out.status.code(), Some(2), "self-referential inputs must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let expected = format!(
+        "repro: error: parsing network file `{}`: network `selfy`: layer `a` \
+         depends on itself\n",
+        path.display()
+    );
+    assert_eq!(stderr, expected);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_input_reference_is_a_friendly_exit_2() {
+    let yaml = "\
+name: dangling
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+    inputs:
+      - nope
+";
+    let path = write_temp("dangling.yaml", yaml);
+    let out = repro()
+        .args(["graph", "--net", path.to_str().expect("utf-8 temp path")])
+        .output()
+        .expect("run repro");
+    assert_eq!(out.status.code(), Some(2), "unknown input references must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let expected = format!(
+        "repro: error: parsing network file `{}`: layer `b`: unknown input `nope`\n",
+        path.display()
+    );
+    assert_eq!(stderr, expected);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ambiguous_sinks_need_a_declared_output() {
+    let yaml = "\
+name: twosink
+layers:
+  - name: a
+    k: 8
+    c: 3
+  - name: b
+    k: 8
+    c: 8
+  - name: c
+    k: 8
+    c: 8
+    inputs:
+      - a
+";
+    let path = write_temp("twosink.yaml", yaml);
+    let out = repro()
+        .args(["graph", "--net", path.to_str().expect("utf-8 temp path")])
+        .output()
+        .expect("run repro");
+    assert_eq!(out.status.code(), Some(2), "ambiguous sinks must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let expected = format!(
+        "repro: error: parsing network file `{}`: network `twosink` has 2 sinks \
+         (`b`, `c`); declare one with a top-level `output:`\n",
+        path.display()
+    );
+    assert_eq!(stderr, expected);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn simulate_replays_one_metric_at_a_time() {
+    let out = repro()
+        .args(["simulate", "--net", "tiny-cnn", "--arch", "small", "--metric", "all"])
+        .output()
+        .expect("run repro simulate");
+    assert_eq!(out.status.code(), Some(2), "--metric all must be rejected by simulate");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr,
+        "repro: error: simulate replays one plan at a time (--metric seq|overlap|transform)\n"
+    );
+}
+
+#[test]
+fn simulate_emits_a_chrome_trace_and_exits_cleanly() {
+    let trace = std::env::temp_dir().join(format!("fopim-{}-trace.json", std::process::id()));
+    let out = repro()
+        .args([
+            "simulate",
+            "--net",
+            "tiny-cnn",
+            "--arch",
+            "small",
+            "--budget",
+            "3",
+            "--refine",
+            "0",
+            "--seed",
+            "1",
+            "--metric",
+            "transform",
+            "--trace",
+            trace.to_str().expect("utf-8 temp path"),
+        ])
+        .output()
+        .expect("run repro simulate");
+    assert!(
+        out.status.success(),
+        "simulate must exit 0; stderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("replay matches the analytical plan"),
+        "simulate must report the replay verdict; stdout:\n{stdout}"
+    );
+    assert!(stdout.contains(&format!("trace: {}", trace.display())), "stdout:\n{stdout}");
+    let json = std::fs::read_to_string(&trace).expect("trace file written");
+    assert!(json.starts_with("{\"traceEvents\":["), "trace must be Chrome trace JSON");
+    assert!(json.contains("\"ph\":\"X\""), "trace must contain complete-duration slices");
+    assert!(json.contains("\"clock\":\"cycles\""), "trace metadata must record the unit");
+    std::fs::remove_file(&trace).ok();
+}

@@ -1,0 +1,418 @@
+//! Tier-2 validation sweep: the discrete-event simulator
+//! (`fastoverlapim::sim`) replays searched plans for every zoo preset
+//! (chains and graphs) × metric × search algorithm × seed and fails
+//! loudly on any divergence from the analytical latencies — exact for
+//! Sequential/Overlap, bounded relocation-penalty tolerance for
+//! Transform (the policy is documented in `src/sim/mod.rs` and
+//! `ARCHITECTURE.md` § "Simulation as Tier-2 verification").
+//!
+//! Also home to:
+//!
+//! * property tests for the graph merge helpers ([`merge_ready_times`],
+//!   [`merge_ready_jobs`]): permutation-invariant and refold-associative,
+//!   so toposort tie-break order cannot change a join's analysis;
+//! * the documented-failing concat channel-geometry probe (`#[ignore]`d
+//!   until the ROADMAP gap is fixed);
+//! * [`calibrate_budget_graph`] behaviour on a multi-sink graph;
+//! * thread-count bit-identity of plans *and* emitted traces.
+
+use std::time::Duration;
+
+use fastoverlapim::overlap::{probe_indices, ReadyTimes};
+use fastoverlapim::prelude::*;
+use fastoverlapim::util::prop::check_seeded;
+use fastoverlapim::workload::zoo;
+use fastoverlapim::prop_assert_eq;
+
+const METRICS: [Metric; 3] = [Metric::Sequential, Metric::Overlap, Metric::Transform];
+
+/// Sweep configuration: a tiny evaluation budget with aggressive probe
+/// sampling (64 step probes, 64 job probes) so the suite stays fast in
+/// debug CI *and* constantly exercises the sampled-tolerance paths of
+/// the equality contract.
+fn sweep_config(algo: SearchAlgo, seed: u64, threads: usize) -> MapperConfig {
+    MapperConfig {
+        budget: Budget::Evaluations(4),
+        algo,
+        seed,
+        refine_passes: 0,
+        threads,
+        overlap: OverlapConfig { max_probe_steps: 64 },
+        transform: TransformConfig { max_probe_jobs: 64 },
+        ..Default::default()
+    }
+}
+
+/// Seed → (traversal strategy, worker threads). The three sweep seeds
+/// jointly cover Forward/Backward/Middle and both thread counts; plans
+/// are bit-identical across thread counts under evaluation budgets, so
+/// varying threads with the seed costs no coverage
+/// ([`plans_and_traces_are_bit_identical_across_thread_counts`] checks
+/// the invariance directly).
+fn seed_setup(seed: u64) -> (SearchStrategy, usize) {
+    match seed {
+        1 => (SearchStrategy::Forward, 1),
+        2 => (SearchStrategy::Backward, 4),
+        _ => (SearchStrategy::Middle(MiddleHeuristic::LargestOutput), 1),
+    }
+}
+
+/// Search every zoo preset under `algo` and replay the winning plan
+/// through the simulator, panicking with full context on divergence.
+fn sweep(algo: SearchAlgo) {
+    let arch = Arch::dram_pim_small();
+    for seed in [1u64, 2, 3] {
+        let (strat, threads) = seed_setup(seed);
+        let config = sweep_config(algo, seed, threads);
+        let sim = SimConfig::from_mapper(&config);
+        for metric in METRICS {
+            for (name, net) in zoo::all() {
+                let plan = NetworkSearch::new(&arch, config.clone(), strat).run(&net, metric);
+                let report = simulate_network_plan(&net, &plan, &sim);
+                if let Err(msg) = report.check(&plan) {
+                    panic!(
+                        "chain `{name}` diverged ({algo:?}, {metric:?}, {strat:?}, \
+                         seed {seed}):\n{msg}"
+                    );
+                }
+            }
+            for (name, g) in zoo::graphs() {
+                let plan = NetworkSearch::new(&arch, config.clone(), strat).run_graph(&g, metric);
+                let report = simulate_graph_plan(&g, &plan, &sim);
+                if let Err(msg) = report.check(&plan) {
+                    panic!(
+                        "graph `{name}` diverged ({algo:?}, {metric:?}, {strat:?}, \
+                         seed {seed}):\n{msg}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn random_search_sweep_matches_the_simulation() {
+    sweep(SearchAlgo::Random);
+}
+
+#[test]
+fn genetic_search_sweep_matches_the_simulation() {
+    sweep(SearchAlgo::Genetic);
+}
+
+#[test]
+fn annealing_search_sweep_matches_the_simulation() {
+    sweep(SearchAlgo::Annealing);
+}
+
+/// The graph presets both contain real multi-predecessor joins; the
+/// join nodes must replay through the merged-analysis path and carry
+/// added latencies on both overlap tracks.
+#[test]
+fn multi_predecessor_joins_replay_and_validate() {
+    let arch = Arch::dram_pim_small();
+    for (name, g) in zoo::graphs() {
+        let joins: Vec<usize> =
+            (0..g.layers.len()).filter(|&v| g.preds(v).len() >= 2).collect();
+        assert!(!joins.is_empty(), "graph preset `{name}` must contain a join");
+        let config = sweep_config(SearchAlgo::Random, 1, 1);
+        let plan =
+            NetworkSearch::new(&arch, config.clone(), SearchStrategy::Forward)
+                .run_graph(&g, Metric::Transform);
+        let report = simulate_graph_plan(&g, &plan, &SimConfig::from_mapper(&config));
+        report.assert_matches(&plan);
+        for (pos, &v) in g.topo().iter().enumerate() {
+            if g.preds(v).len() < 2 {
+                continue;
+            }
+            let node = &report.nodes[pos];
+            assert!(
+                node.added_overlapped.is_some() && node.added_transformed.is_some(),
+                "join `{}` of `{name}` must replay both overlap tracks",
+                node.name
+            );
+        }
+    }
+}
+
+/// Evaluation-budget plans and their traces are a pure function of the
+/// seed: 1 worker and 4 workers must agree bit for bit, on chains and
+/// on graphs, for every metric.
+#[test]
+fn plans_and_traces_are_bit_identical_across_thread_counts() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let g = zoo::graph_by_name("resnet18-graph").expect("graph preset");
+    for metric in METRICS {
+        for seed in [1u64, 2] {
+            let c1 = sweep_config(SearchAlgo::Random, seed, 1);
+            let c4 = sweep_config(SearchAlgo::Random, seed, 4);
+            let p1 = NetworkSearch::new(&arch, c1.clone(), SearchStrategy::Forward)
+                .run(&net, metric);
+            let p4 = NetworkSearch::new(&arch, c4.clone(), SearchStrategy::Forward)
+                .run(&net, metric);
+            assert_eq!(
+                (p1.total_sequential, p1.total_overlapped, p1.total_transformed),
+                (p4.total_sequential, p4.total_overlapped, p4.total_transformed),
+                "chain totals must not depend on the thread count ({metric:?}, seed {seed})"
+            );
+            let r1 = simulate_network_plan(&net, &p1, &SimConfig::from_mapper(&c1));
+            let r4 = simulate_network_plan(&net, &p4, &SimConfig::from_mapper(&c4));
+            assert_eq!(
+                r1.trace.chrome_json(),
+                r4.trace.chrome_json(),
+                "chain traces must be bit-identical ({metric:?}, seed {seed})"
+            );
+            let g1 = NetworkSearch::new(&arch, c1.clone(), SearchStrategy::Forward)
+                .run_graph(&g, metric);
+            let g4 = NetworkSearch::new(&arch, c4.clone(), SearchStrategy::Forward)
+                .run_graph(&g, metric);
+            let t1 = simulate_graph_plan(&g, &g1, &SimConfig::from_mapper(&c1));
+            let t4 = simulate_graph_plan(&g, &g4, &SimConfig::from_mapper(&c4));
+            assert_eq!(
+                t1.trace.chrome_json(),
+                t4.trace.chrome_json(),
+                "graph traces must be bit-identical ({metric:?}, seed {seed})"
+            );
+        }
+    }
+}
+
+/// `MapperConfig::verify` replays the winning plan through the
+/// simulator inside the search itself and panics on divergence — a run
+/// that returns normally *is* the assertion.
+#[test]
+fn mapper_verify_flag_replays_the_winning_plan() {
+    let arch = Arch::dram_pim_small();
+    let mut config = sweep_config(SearchAlgo::Random, 1, 1);
+    config.verify = true;
+    let net = zoo::tiny_cnn();
+    let plan = NetworkSearch::new(&arch, config.clone(), SearchStrategy::Forward)
+        .run(&net, Metric::Transform);
+    assert!(plan.total_transformed > 0);
+    let g = zoo::graph_by_name("bert-attention").expect("graph preset");
+    let gplan = NetworkSearch::new(&arch, config, SearchStrategy::Forward)
+        .run_graph(&g, Metric::Overlap);
+    assert!(gplan.total_overlapped > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Merge-helper properties (graph joins).
+// ---------------------------------------------------------------------------
+
+/// A randomly generated join: 2–5 predecessors with aligned probe
+/// schedules and random start offsets, plus matching per-job queries.
+#[derive(Debug)]
+struct MergeCase {
+    ready: Vec<(u64, ReadyTimes)>,
+    jobs: Vec<(u64, Vec<(u64, u64)>)>,
+}
+
+fn gen_merge_case(rng: &mut SplitMix64) -> MergeCase {
+    let total_steps = 1 + rng.below(48);
+    let schedule = probe_indices(total_steps, 2 + rng.below(12));
+    let banks = 1 + rng.below(8);
+    let sampled = probe_indices(total_steps * banks, 2 + rng.below(20));
+    let parts = 2 + rng.below(4) as usize;
+    let mut ready = Vec::with_capacity(parts);
+    let mut jobs = Vec::with_capacity(parts);
+    for _ in 0..parts {
+        let offset = rng.below(4_000);
+        let probes: Vec<(u64, u64)> = schedule
+            .iter()
+            .map(|&t| (t, if rng.below(4) == 0 { 0 } else { 1 + rng.below(9_000) }))
+            .collect();
+        ready.push((offset, ReadyTimes { probes, total_steps }));
+        let queries: Vec<(u64, u64)> = sampled
+            .iter()
+            .map(|&j| (if rng.below(4) == 0 { 0 } else { 1 + rng.below(9_000) }, j % banks))
+            .collect();
+        jobs.push((offset, queries));
+    }
+    MergeCase { ready, jobs }
+}
+
+/// The merged ready times of a join are independent of predecessor
+/// order (commutative — toposort tie-break permutations cannot change
+/// the analysis) and refold-associative (merging a prefix merge back in
+/// at offset 0 is a no-op).
+#[test]
+fn merge_ready_times_is_order_invariant_and_refold_associative() {
+    check_seeded(0x304A, 200, gen_merge_case, |case| {
+        let parts: Vec<(u64, &ReadyTimes)> =
+            case.ready.iter().map(|(o, rt)| (*o, rt)).collect();
+        let merged = merge_ready_times(&parts);
+        prop_assert_eq!(
+            merged.total_steps,
+            case.ready[0].1.total_steps,
+            "merge must preserve the step count"
+        );
+        for rot in 1..parts.len() {
+            let mut perm = parts.clone();
+            perm.rotate_left(rot);
+            prop_assert_eq!(
+                merge_ready_times(&perm).probes,
+                merged.probes.clone(),
+                "rotating predecessors by {} changed the merge",
+                rot
+            );
+        }
+        let mut rev = parts.clone();
+        rev.reverse();
+        prop_assert_eq!(
+            merge_ready_times(&rev).probes,
+            merged.probes.clone(),
+            "reversing predecessors changed the merge"
+        );
+        for k in 1..parts.len() {
+            let prefix = merge_ready_times(&parts[..k]);
+            let mut refold: Vec<(u64, &ReadyTimes)> = vec![(0, &prefix)];
+            refold.extend_from_slice(&parts[k..]);
+            prop_assert_eq!(
+                merge_ready_times(&refold).probes,
+                merged.probes.clone(),
+                "refolding the first {} parts changed the merge",
+                k
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Same contract for the per-job merge used by the transformed
+/// schedule on joins.
+#[test]
+fn merge_ready_jobs_is_order_invariant_and_refold_associative() {
+    check_seeded(0x304B, 200, gen_merge_case, |case| {
+        let parts: Vec<(u64, &[(u64, u64)])> =
+            case.jobs.iter().map(|(o, q)| (*o, q.as_slice())).collect();
+        let merged = merge_ready_jobs(&parts);
+        for rot in 1..parts.len() {
+            let mut perm = parts.clone();
+            perm.rotate_left(rot);
+            prop_assert_eq!(
+                merge_ready_jobs(&perm),
+                merged.clone(),
+                "rotating predecessors by {} changed the merge",
+                rot
+            );
+        }
+        let mut rev = parts.clone();
+        rev.reverse();
+        prop_assert_eq!(
+            merge_ready_jobs(&rev),
+            merged.clone(),
+            "reversing predecessors changed the merge"
+        );
+        for k in 1..parts.len() {
+            let prefix = merge_ready_jobs(&parts[..k]);
+            let mut refold: Vec<(u64, &[(u64, u64)])> = vec![(0, prefix.as_slice())];
+            refold.extend_from_slice(&parts[k..]);
+            prop_assert_eq!(
+                merge_ready_jobs(&refold),
+                merged.clone(),
+                "refolding the first {} parts changed the merge",
+                k
+            );
+        }
+        Ok(())
+    });
+}
+
+/// A single-part merge applies the start offset to every real
+/// dependence and preserves the padding rule (ready 0 stays 0 — no
+/// dependence means no offset either).
+#[test]
+fn merge_single_part_applies_offset_and_preserves_padding() {
+    let rt = ReadyTimes { probes: vec![(0, 0), (3, 10), (7, 25)], total_steps: 8 };
+    let merged = merge_ready_times(&[(100, &rt)]);
+    assert_eq!(merged.probes, vec![(0, 0), (3, 110), (7, 125)]);
+    assert_eq!(merged.total_steps, 8);
+    let jobs = vec![(0u64, 0u64), (5, 1), (9, 0)];
+    let merged_jobs = merge_ready_jobs(&[(40, &jobs)]);
+    assert_eq!(merged_jobs, vec![(0, 0), (45, 1), (49, 0)]);
+}
+
+// ---------------------------------------------------------------------------
+// Documented gaps and budget calibration.
+// ---------------------------------------------------------------------------
+
+/// ROADMAP gap, pinned as a failing test: a channel-concat join slices
+/// every predecessor as if it produced the *full* consumer input-channel
+/// range. Consumer channels `[8, 16)` below are the second producer's
+/// real outputs (its local `[0, 8)` shifted by the first producer's 8
+/// channels), but `LayerPair::input_boxes` clamps the range against the
+/// producer's own `k` bound without any concat offset, so the region
+/// reads as padding — no dependence at all. The discrete-event replay
+/// consumes the same decode, so analysis and simulator agree with each
+/// other while both under-constrain the join; once per-part channel
+/// offsets exist, this assertion passes and the `#[ignore]` comes off.
+#[test]
+#[ignore = "known gap (ROADMAP): concat joins lack per-part channel offsets"]
+fn concat_merged_jobs_ignore_per_part_geometry() {
+    let arch = Arch::dram_pim_small();
+    // Concat of two 8-channel producers feeding a 16-input-channel conv;
+    // `second` owns concatenated channels [8, 16).
+    let second = Layer::conv("second", 1, 8, 8, 8, 8, 3, 3, 1, 1);
+    let consumer = Layer::conv("consumer", 1, 8, 16, 8, 8, 1, 1, 1, 0);
+    let pm = PerfModel::new(&arch);
+    let ms = MapSpace::with_defaults(&arch, &second)
+        .sample(&mut SplitMix64::new(7))
+        .expect("mapping for the producer");
+    let mc = MapSpace::with_defaults(&arch, &consumer)
+        .sample(&mut SplitMix64::new(9))
+        .expect("mapping for the consumer");
+    let ss = pm.evaluate(&second, &ms);
+    let sc = pm.evaluate(&consumer, &mc);
+    let pair = LayerPair::new((&second, &ms, &ss), (&consumer, &mc, &sc));
+    // A consumer block reading input channels [8, 16) — all produced by
+    // `second`, none of it padding.
+    let ds = DataSpace {
+        bank: 0,
+        step: 0,
+        k: Range::new(0, 8),
+        c: Range::new(8, 16),
+        p: Range::new(0, 4),
+        q: Range::new(0, 4),
+        r: Range::new(0, 1),
+        s: Range::new(0, 1),
+    };
+    let boxes = pair.input_boxes(&ds);
+    assert!(
+        !boxes.is_empty(),
+        "consumer channels [8, 16) are `second`'s real outputs, but the pair \
+         analysis reports no dependence (concat channel offsets are not modeled)"
+    );
+}
+
+/// Multi-sink graphs are valid at the graph layer (only the parser
+/// demands a declared `output:`), and budget calibration must handle
+/// them: `Evaluations` passes through untouched and `Calibrated`
+/// resolves to a usable draw count that drives a real search.
+#[test]
+fn calibrate_budget_graph_handles_multi_sink_graphs() {
+    let arch = Arch::dram_pim_small();
+    let layers = vec![
+        Layer::conv("stem", 1, 8, 3, 8, 8, 3, 3, 1, 1),
+        Layer::conv("head-a", 1, 8, 8, 8, 8, 3, 3, 1, 1),
+        Layer::conv("head-b", 1, 16, 8, 4, 4, 3, 3, 2, 1),
+    ];
+    let g = NetworkGraph::new("two-heads", layers, vec![(0, 1), (0, 2)])
+        .expect("multi-sink graphs are valid at the graph layer");
+    assert_eq!(g.sinks().len(), 2);
+    let mut config = sweep_config(SearchAlgo::Random, 1, 1);
+    config.budget = Budget::Evaluations(7);
+    assert_eq!(
+        calibrate_budget_graph(&arch, &g, &config, Metric::Transform),
+        7,
+        "an evaluation budget must pass through calibration untouched"
+    );
+    config.budget =
+        Budget::Calibrated { target: Duration::from_millis(5), probe_draws: 3 };
+    let resolved = calibrate_budget_graph(&arch, &g, &config, Metric::Transform);
+    assert!(resolved >= 1, "calibration must resolve a usable draw count, got {resolved}");
+    let plan = NetworkSearch::new(&arch, config.clone(), SearchStrategy::Forward)
+        .run_graph(&g, Metric::Transform);
+    assert_eq!(plan.layers.len(), 3);
+    simulate_graph_plan(&g, &plan, &SimConfig::from_mapper(&config)).assert_matches(&plan);
+}
