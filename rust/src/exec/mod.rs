@@ -221,16 +221,23 @@ impl WorkerPool {
     /// Spawn `n` workers over a shared device client. The PJRT device
     /// thread serializes actual execution (a real PIM controller would
     /// too); workers overlap input staging and result hand-off.
+    ///
+    /// These workers block on a channel between tiles, so they get
+    /// dedicated threads (named through the crate-wide
+    /// [`crate::search::pool::spawn_worker_thread`] site) rather than
+    /// slots in the CPU-bound search pool, which must never park a
+    /// worker on I/O.
     pub fn spawn(device: DeviceClient, n: usize) -> WorkerPool {
         let (tx, rx) = mpsc::channel::<WorkItem>();
         let rx = Arc::new(Mutex::new(rx));
         let (tx_done, rx_done) = mpsc::channel::<WorkDone>();
         let mut handles = Vec::with_capacity(n);
-        for _ in 0..n {
+        for i in 0..n {
             let rx = Arc::clone(&rx);
             let tx_done = tx_done.clone();
             let dev = device.clone();
-            handles.push(std::thread::spawn(move || loop {
+            let name = format!("fopim-exec-{i}");
+            handles.push(crate::search::pool::spawn_worker_thread(&name, move || loop {
                 let item = {
                     let guard = rx.lock().unwrap();
                     guard.recv()

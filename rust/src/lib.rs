@@ -50,11 +50,12 @@
 //!   Transform), and emits Chrome/Perfetto traces (`repro simulate`).
 //! * [`search`] — the per-layer mapper and whole-network search strategies
 //!   (Forward / Backward / Middle) with all baseline algorithms (§IV-J/K),
-//!   the deterministic multi-threaded candidate evaluator
-//!   ([`search::ParallelMapper`]), and the pipelined multi-metric engine
-//!   ([`search::NetworkSearch::run_metrics`]): concurrent metric jobs over
-//!   a shared candidate store with speculative layer look-ahead,
-//!   bit-identical to the serial baseline matrix.
+//!   the persistent work-stealing worker pool every parallel section runs
+//!   on ([`search::WorkerPool`], spawned once per [`search::NetworkSearch`]
+//!   and fronted by [`search::ParallelMapper`]), and the pipelined
+//!   multi-metric engine ([`search::NetworkSearch::run_metrics`]):
+//!   concurrent metric jobs over a shared candidate store with speculative
+//!   layer look-ahead, bit-identical to the serial baseline matrix.
 //! * [`runtime`] — PJRT runtime: loads AOT-compiled HLO-text artifacts
 //!   produced by the Python compile path and executes them from Rust.
 //!   Gated behind the off-by-default `pjrt` cargo feature (the `xla`
@@ -107,7 +108,7 @@ pub mod prelude {
     pub use crate::search::{
         calibrate_budget, calibrate_budget_graph, Algorithm, AnalysisEngine, Budget,
         CandidateStore, EdgeOverlap, EvaluatedMapping, Mapper, MapperConfig, Metric,
-        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
+        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy, WorkerPool,
     };
     pub use crate::sim::{
         simulate_graph_plan, simulate_network_plan, NodeSim, SimConfig, SimReport, Trace,

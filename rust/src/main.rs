@@ -57,13 +57,18 @@ SUBCOMMANDS
            [--algo random|ga|sa|hill] [--population N] [--generations N]
            [--deadline-ms T] [--calibrate-ms T [--probe N]]
            [--refine N] [--threads N] [--cache on|off]
-           [--pipeline on|off] [--lookahead on|off] [--per-layer] [--csv]
+           [--pipeline on|off] [--lookahead on|off] [--per-layer] [--stats]
+           [--csv]
            (--metric all runs the whole baseline matrix: the three metric
             sweeps as pipelined jobs sharing candidate enumeration;
             --algo selects the search engine — ga/sa/hill are the guided
             optimizers, random the Timeloop-style baseline;
             --calibrate-ms converts a wall-clock target into a fixed
             evaluation budget via a probe, so the run stays reproducible;
+            --stats prints the full memoization picture after the search:
+            per-pair analysis tables, genome-memo dedup hits (duplicate
+            offspring priced for free), incremental re-evaluation hits,
+            and worker-pool dispatch counts;
             graph workloads — graph zoo presets like resnet18-graph or a
             YAML file using `inputs:` edges — search with the branch-aware
             topological engine and report per-edge overlap)
@@ -254,6 +259,32 @@ fn strategy(args: &Args) -> SearchStrategy {
     }
 }
 
+/// `--stats`: the full memoization picture after a search — the per-pair
+/// analysis tables, the genome memo (duplicate offspring scored once and
+/// then priced from the memo), the incremental re-evaluation cache, and
+/// the persistent worker pool's dispatch counters.
+fn print_search_stats(search: &NetworkSearch<'_>) {
+    let stats = search.cache_stats();
+    println!(
+        "analysis cache: ready {}h/{}m, transform {}h/{}m",
+        stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses
+    );
+    println!(
+        "genome memo: {} duplicate offspring deduped / {} scored fresh",
+        stats.genome_hits, stats.genome_misses
+    );
+    println!(
+        "delta re-evaluation: {} nest-aggregate hits / {} misses",
+        stats.delta_hits, stats.delta_misses
+    );
+    println!(
+        "worker pool: {} worker thread{}, {} jobs dispatched",
+        search.pool_worker_count(),
+        if search.pool_worker_count() == 1 { "" } else { "s" },
+        search.pool_jobs_dispatched()
+    );
+}
+
 /// Parse `--metric`; `None` means `all` (the baseline matrix).
 fn metric_arg(args: &Args) -> Option<Metric> {
     match args.get_or("metric", "transform") {
@@ -329,6 +360,9 @@ fn cmd_search_chain(
             plan.cache_hits, plan.cache_misses
         );
     }
+    if args.has_flag("stats") {
+        print_search_stats(&search);
+    }
 
     if args.has_flag("per-layer") {
         print_per_layer(args, &plan, "per-layer contributions (cycles)");
@@ -391,7 +425,9 @@ fn cmd_search_matrix(
         seq.mappings_evaluated + ov.mappings_evaluated + tr.mappings_evaluated
     );
     let stats = search.cache_stats();
-    if stats.hits() + stats.misses() > 0 {
+    if args.has_flag("stats") {
+        print_search_stats(&search);
+    } else if stats.hits() + stats.misses() > 0 {
         println!(
             "analysis cache: ready {}h/{}m, transform {}h/{}m",
             stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses
@@ -465,6 +501,9 @@ fn cmd_search_graph(
             plan.cache_hits, plan.cache_misses
         );
     }
+    if args.has_flag("stats") {
+        print_search_stats(&search);
+    }
     print_edge_overlaps(args, &plan);
     if args.has_flag("per-layer") {
         print_per_layer(args, &plan, "per-layer contributions (cycles)");
@@ -513,7 +552,9 @@ fn cmd_search_matrix_graph(
         seq.mappings_evaluated + ov.mappings_evaluated + tr.mappings_evaluated
     );
     let stats = search.cache_stats();
-    if stats.hits() + stats.misses() > 0 {
+    if args.has_flag("stats") {
+        print_search_stats(&search);
+    } else if stats.hits() + stats.misses() > 0 {
         println!(
             "analysis cache: ready {}h/{}m, transform {}h/{}m",
             stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses

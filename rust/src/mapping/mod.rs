@@ -409,6 +409,26 @@ impl Mapping {
     }
 }
 
+/// Content fingerprint of a single sub-nest: FNV over each loop's
+/// `(dim, bound, kind)`. Unlike [`Mapping::fingerprint`] it carries no
+/// hierarchy position, so the same loops appearing at a different level
+/// (or in a different mapping) hash equal — exactly what the per-nest
+/// delta-state of [`crate::perf::EvalDelta`] needs: a one-factor
+/// neighbor move rewrites one sub-nest, and the untouched nests of the
+/// new genome hit their cached aggregates under this key. The collision
+/// caveat matches [`Mapping::fingerprint`] (64-bit hash equality stands
+/// in for structural equality).
+pub fn nest_fingerprint(nest: &[Loop]) -> u64 {
+    let mut h = crate::util::Fnv64::new();
+    h.write(nest.len() as u64);
+    for l in nest {
+        h.write(l.dim.index() as u64);
+        h.write(l.bound);
+        h.write(l.is_spatial() as u64);
+    }
+    h.finish()
+}
+
 /// Mapping validation error.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MappingError(pub String);
@@ -534,6 +554,30 @@ mod tests {
     fn padding_waste_unity_for_exact() {
         let m = demo_mapping();
         assert!((m.padding_waste(&demo_layer()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nest_fingerprint_is_content_only() {
+        let a = vec![Loop::temporal(Dim::K, 2), Loop::spatial(Dim::P, 4)];
+        let b = a.clone();
+        assert_eq!(nest_fingerprint(&a), nest_fingerprint(&b));
+        // Bound, dim and kind all separate.
+        assert_ne!(
+            nest_fingerprint(&a),
+            nest_fingerprint(&[Loop::temporal(Dim::K, 4), Loop::spatial(Dim::P, 4)])
+        );
+        assert_ne!(
+            nest_fingerprint(&a),
+            nest_fingerprint(&[Loop::temporal(Dim::C, 2), Loop::spatial(Dim::P, 4)])
+        );
+        assert_ne!(
+            nest_fingerprint(&a),
+            nest_fingerprint(&[Loop::spatial(Dim::K, 2), Loop::spatial(Dim::P, 4)])
+        );
+        // Position-independent: the same nest content hashes equal no
+        // matter which mapping or level it sits in.
+        let m = demo_mapping();
+        assert_eq!(nest_fingerprint(&m.nests[3]), nest_fingerprint(&demo_mapping().nests[3]));
     }
 
     #[test]

@@ -211,10 +211,11 @@ pub struct SearchOutcome {
 /// [`ParallelMapper::map_collect`] (parallel, slot-ordered) → `observe`
 /// (serial). The global best is the `(score, generation, slot)`
 /// lexicographic minimum, so the outcome is a pure function of
-/// `(engine state, map space, budget, batch, generations)` — thread count
-/// only changes wall-clock. `deadline` is checked between generations
-/// only (a coarse guard for wall-clock budget modes; evaluation-budget
-/// runs pass `None` and stay fully deterministic).
+/// `(engine state, map space, budget, batch, generations)` — the
+/// caller-supplied `pmap` (and the worker pool behind it) only changes
+/// wall-clock. `deadline` is checked between generations only (a coarse
+/// guard for wall-clock budget modes; evaluation-budget runs pass `None`
+/// and stay fully deterministic).
 #[allow(clippy::too_many_arguments)]
 pub fn run_search<F>(
     engine: &mut dyn SearchEngine,
@@ -222,14 +223,13 @@ pub fn run_search<F>(
     budget: usize,
     batch: usize,
     generations: usize,
-    threads: usize,
+    pmap: &ParallelMapper,
     deadline: Option<Instant>,
     eval: &F,
 ) -> SearchOutcome
 where
     F: Fn(&Mapping) -> u64 + Sync,
 {
-    let pmap = ParallelMapper::new(threads);
     let batch = batch.max(1);
     let mut draws = 0usize;
     let mut evaluated = 0usize;
@@ -363,7 +363,8 @@ mod tests {
             let mut reference: Option<SearchOutcome> = None;
             for threads in [1usize, 2, 4, 8] {
                 let mut engine = engine_for(algo, 77, &OptimizeConfig::default());
-                let out = run_search(engine.as_mut(), &ms, 48, 12, 0, threads, None, &eval);
+                let pmap = ParallelMapper::new(threads);
+                let out = run_search(engine.as_mut(), &ms, 48, 12, 0, &pmap, None, &eval);
                 assert!(out.best.is_some(), "{algo:?} found nothing");
                 match &reference {
                     None => reference = Some(out),
@@ -387,7 +388,7 @@ mod tests {
         for algo in [SearchAlgo::Genetic, SearchAlgo::Annealing, SearchAlgo::HillClimb] {
             let run = |seed: u64| {
                 let mut engine = engine_for(algo, seed, &OptimizeConfig::default());
-                run_search(engine.as_mut(), &ms, 40, 10, 0, 2, None, &eval)
+                run_search(engine.as_mut(), &ms, 40, 10, 0, &ParallelMapper::new(2), None, &eval)
             };
             let a = run(5);
             let b = run(5);
@@ -405,7 +406,8 @@ mod tests {
         let eval = seq_eval(&pm, &l);
         for algo in [SearchAlgo::Random, SearchAlgo::Genetic, SearchAlgo::Annealing] {
             let mut engine = engine_for(algo, 9, &OptimizeConfig::default());
-            let out = run_search(engine.as_mut(), &ms, 37, 8, 0, 1, None, &eval);
+            let pmap = ParallelMapper::new(1);
+            let out = run_search(engine.as_mut(), &ms, 37, 8, 0, &pmap, None, &eval);
             assert!(out.draws <= 37, "{algo:?} overdrew: {}", out.draws);
             assert!(out.evaluated <= out.draws);
             // Best-so-far can only improve.
@@ -424,7 +426,8 @@ mod tests {
         let pm = PerfModel::new(&arch);
         let eval = seq_eval(&pm, &l);
         let mut engine = engine_for(SearchAlgo::Genetic, 3, &OptimizeConfig::default());
-        let out = run_search(engine.as_mut(), &ms, 1_000, 8, 3, 1, None, &eval);
+        let pmap = ParallelMapper::new(1);
+        let out = run_search(engine.as_mut(), &ms, 1_000, 8, 3, &pmap, None, &eval);
         assert_eq!(out.curve.len(), 3, "exactly `generations` generations");
         assert_eq!(out.draws, 24);
     }

@@ -677,7 +677,10 @@ pub fn merged_transform_cache_key(
     }
 }
 
-/// Split hit/miss counters of [`OverlapCache`]'s two memo tables.
+/// Split hit/miss counters of [`OverlapCache`]'s two memo tables, plus
+/// the search-side memo counters the cache aggregates for reporting (the
+/// guided engines' genome score memo and the performance model's
+/// per-nest delta-state).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Ready-times table (per-step overlap analysis) hits.
@@ -688,15 +691,28 @@ pub struct CacheStats {
     pub transform_hits: u64,
     /// Transform table misses.
     pub transform_misses: u64,
+    /// Genome score memo hits — each one is a duplicate offspring a
+    /// guided engine proposed and did not have to re-price.
+    pub genome_hits: u64,
+    /// Genome score memo misses (distinct genomes actually priced).
+    pub genome_misses: u64,
+    /// Per-nest delta-state hits in incremental evaluation
+    /// ([`crate::perf::EvalDelta`]).
+    pub delta_hits: u64,
+    /// Per-nest delta-state misses (sub-nest aggregates computed).
+    pub delta_misses: u64,
 }
 
 impl CacheStats {
-    /// Total hits across both tables.
+    /// Total hits across the two *analysis* tables (ready + transform).
+    /// The genome/delta counters are deliberately excluded: plan-level
+    /// `cache_hits` deltas and the warm-replay tests count overlap
+    /// analyses avoided, not search-side micro-memos.
     pub fn hits(&self) -> u64 {
         self.ready_hits + self.transform_hits
     }
 
-    /// Total misses across both tables.
+    /// Total misses across the two analysis tables.
     pub fn misses(&self) -> u64 {
         self.ready_misses + self.transform_misses
     }
@@ -816,6 +832,15 @@ impl<K: ShardKey, V> ShardedMemo<K, V> {
 pub struct OverlapCache {
     ready: ShardedMemo<PairKey, ReadyTimes>,
     transform: ShardedMemo<TransformKey, Vec<(u64, u64)>>,
+    /// Aggregated counters of the per-search-call genome score memo
+    /// (duplicate-offspring dedup). The memo itself lives and dies with
+    /// one engine call; only its counts roll up here.
+    genome_hits: AtomicU64,
+    genome_misses: AtomicU64,
+    /// Aggregated counters of the per-search-call evaluation delta-state
+    /// ([`crate::perf::EvalDelta`]).
+    delta_hits: AtomicU64,
+    delta_misses: AtomicU64,
 }
 
 impl OverlapCache {
@@ -830,7 +855,23 @@ impl OverlapCache {
         OverlapCache {
             ready: ShardedMemo::new(shard_cap),
             transform: ShardedMemo::new(shard_cap),
+            genome_hits: AtomicU64::new(0),
+            genome_misses: AtomicU64::new(0),
+            delta_hits: AtomicU64::new(0),
+            delta_misses: AtomicU64::new(0),
         }
+    }
+
+    /// Roll one engine call's genome-memo counts into the aggregate.
+    pub fn add_genome_counts(&self, hits: u64, misses: u64) {
+        self.genome_hits.fetch_add(hits, Ordering::Relaxed);
+        self.genome_misses.fetch_add(misses, Ordering::Relaxed);
+    }
+
+    /// Roll one engine call's delta-state counts into the aggregate.
+    pub fn add_delta_counts(&self, hits: u64, misses: u64) {
+        self.delta_hits.fetch_add(hits, Ordering::Relaxed);
+        self.delta_misses.fetch_add(misses, Ordering::Relaxed);
     }
 
     /// Fetch the ready-times entry for `key`, computing it on a miss and
@@ -893,13 +934,18 @@ impl OverlapCache {
         self.ready.misses() + self.transform.misses()
     }
 
-    /// Split counters of the two tables.
+    /// Split counters of the two tables plus the aggregated search-side
+    /// memo counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             ready_hits: self.ready.hits(),
             ready_misses: self.ready.misses(),
             transform_hits: self.transform.hits(),
             transform_misses: self.transform.misses(),
+            genome_hits: self.genome_hits.load(Ordering::Relaxed),
+            genome_misses: self.genome_misses.load(Ordering::Relaxed),
+            delta_hits: self.delta_hits.load(Ordering::Relaxed),
+            delta_misses: self.delta_misses.load(Ordering::Relaxed),
         }
     }
 

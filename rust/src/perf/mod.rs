@@ -20,9 +20,13 @@
 //! dimensions are split spatially. Energy follows Table I.
 
 use crate::arch::Arch;
-use crate::mapping::{Dim, Mapping};
+use crate::mapping::{nest_fingerprint, Dim, Loop, Mapping};
 use crate::util::ceil_div;
 use crate::workload::Layer;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Evaluation result for one (layer, mapping) pair.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,6 +57,98 @@ impl LayerStats {
     #[inline]
     pub fn step_finish_cycle(&self, step: u64) -> u64 {
         (step + 1) * self.step_cycles
+    }
+}
+
+/// Everything [`PerfModel::evaluate`] reads from one sub-nest, reduced to
+/// commutative `u64` bound products — so per-nest results can be cached
+/// and recombined without changing a single bit of the final stats.
+#[derive(Debug, Clone, Copy)]
+struct NestAgg {
+    /// Product of all loop bounds per dimension (the interior tile when
+    /// this is the interior nest).
+    per_dim: [u64; 7],
+    /// Product of temporal loop bounds.
+    temporal: u64,
+    /// Product of spatial loop bounds.
+    spatial: u64,
+    /// Product of spatial bounds over reduction dims.
+    spatial_reduction: u64,
+    /// Product of temporal bounds over reduction dims.
+    temporal_reduction: u64,
+}
+
+impl NestAgg {
+    fn of(nest: &[Loop]) -> NestAgg {
+        let mut a = NestAgg {
+            per_dim: [1; 7],
+            temporal: 1,
+            spatial: 1,
+            spatial_reduction: 1,
+            temporal_reduction: 1,
+        };
+        for l in nest {
+            a.per_dim[l.dim.index()] *= l.bound;
+            if l.is_spatial() {
+                a.spatial *= l.bound;
+                if l.dim.is_reduction() {
+                    a.spatial_reduction *= l.bound;
+                }
+            } else {
+                a.temporal *= l.bound;
+                if l.dim.is_reduction() {
+                    a.temporal_reduction *= l.bound;
+                }
+            }
+        }
+        a
+    }
+}
+
+/// Incremental re-evaluation state for neighbor-move search: one
+/// instance per (search call, layer), shared across that call's
+/// candidate evaluations.
+///
+/// Two things are cached:
+///
+/// * the layer's mapping-independent output-transfer term
+///   ([`PerfModel::output_movement_cycles`]), computed once;
+/// * per-sub-nest aggregate products ([`nest_fingerprint`]-keyed) — a
+///   one-factor SA/hill-climb move rewrites exactly one sub-nest, so
+///   re-scoring a neighbor recomputes that nest's products and reuses
+///   the rest.
+///
+/// Nothing here depends on scores or the candidate stream, so results
+/// are reusable across engines within the call; the state is dropped at
+/// the end of the search call (a different layer means different nest
+/// meanings). Hit/miss counts feed `CacheStats::delta_{hits,misses}`.
+#[derive(Debug, Default)]
+pub struct EvalDelta {
+    movement: OnceLock<u64>,
+    nests: Mutex<HashMap<u64, NestAgg>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl EvalDelta {
+    fn nest(&self, nest: &[Loop]) -> NestAgg {
+        let fp = nest_fingerprint(nest);
+        let mut g = self.nests.lock().unwrap();
+        match g.entry(fp) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                *e.get()
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                *v.insert(NestAgg::of(nest))
+            }
+        }
+    }
+
+    /// `(hits, misses)` of the per-nest aggregate memo.
+    pub fn counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 }
 
@@ -185,6 +281,93 @@ impl<'a> PerfModel<'a> {
             temporal_steps,
             banks_used,
             outputs_per_step: mapping.outputs_per_step(),
+            energy_pj,
+            utilization,
+        }
+    }
+
+    /// [`PerfModel::evaluate`] with per-nest delta-state: aggregate bound
+    /// products and the layer's fixed transfer term come from `delta`
+    /// when already computed there.
+    ///
+    /// Bit-identical to `evaluate` by construction: the cached values are
+    /// exact `u64` products of loop bounds (commutative and associative,
+    /// so per-nest grouping changes nothing — and partial products are
+    /// sub-products of totals the full path already forms, so no new
+    /// overflow), and the floating-point path runs the very same
+    /// `padding_waste`/`energy_pj` calls on the mapping's stored bounds.
+    pub fn evaluate_cached(
+        &self,
+        layer: &Layer,
+        mapping: &Mapping,
+        delta: &EvalDelta,
+    ) -> LayerStats {
+        let interior = mapping.interior_idx();
+        let mut temporal_steps_raw = 1u64;
+        let mut spatial_instances = 1u64;
+        let mut reduction_groups = 1u64;
+        let mut tile = NestAgg::of(&[]);
+        for (i, nest) in mapping.nests.iter().enumerate() {
+            let agg = delta.nest(nest);
+            if i == interior {
+                tile = agg;
+            } else {
+                temporal_steps_raw *= agg.temporal;
+                spatial_instances *= agg.spatial;
+                reduction_groups *= agg.spatial_reduction;
+            }
+        }
+
+        // `step_cycles`, from the interior aggregates.
+        let lanes = self.arch.lanes_per_compute_instance().max(1);
+        let red_lanes = tile.spatial_reduction.max(1);
+        let effective_lanes = (lanes / red_lanes).max(1);
+        let outputs_per_step = tile.per_dim[Dim::N.index()]
+            * tile.per_dim[Dim::K.index()]
+            * tile.per_dim[Dim::P.index()]
+            * tile.per_dim[Dim::Q.index()];
+        let outputs = outputs_per_step.max(1);
+        let waves = ceil_div(outputs, effective_lanes);
+        let serial_macs = tile.temporal_reduction.max(1);
+        let mut step_cycles = waves * serial_macs * self.mac_cycles();
+        if red_lanes > 1 {
+            let rounds = 64 - (red_lanes - 1).leading_zeros() as u64;
+            step_cycles += waves * rounds * (self.transpose_cycles + self.add_cycles);
+        }
+
+        let temporal_steps = temporal_steps_raw.max(1);
+        let compute_cycles = step_cycles * temporal_steps;
+
+        // Movement: the layer-only transfer term (cached once per call)
+        // plus cross-bank reduction from the hierarchy aggregates.
+        let transfer = *delta.movement.get_or_init(|| self.output_movement_cycles(layer));
+        let cross_bank = if reduction_groups <= 1 {
+            0
+        } else {
+            let out_bytes = layer.output_size() * u64::from(self.word_bits) / 8;
+            let bw = self.arch.levels[self.arch.compute_level()].write_bandwidth.max(1);
+            (reduction_groups - 1) * (ceil_div(out_bytes, bw) + self.add_cycles)
+        };
+        let movement_cycles = transfer + cross_bank;
+        let latency_cycles = compute_cycles + movement_cycles;
+
+        let banks_used = spatial_instances.max(1);
+        let total_banks = self.arch.compute_instances().max(1);
+        let lane_occupancy = outputs as f64 / (waves * effective_lanes) as f64;
+        let utilization = (banks_used.min(total_banks) as f64 / total_banks as f64)
+            * lane_occupancy
+            / mapping.padding_waste(layer);
+
+        let energy_pj = self.energy_pj(layer, mapping);
+
+        LayerStats {
+            latency_cycles,
+            compute_cycles,
+            movement_cycles,
+            step_cycles,
+            temporal_steps,
+            banks_used,
+            outputs_per_step,
             energy_pj,
             utilization,
         }
@@ -341,6 +524,47 @@ mod tests {
         ]);
         assert!(pm.cross_bank_reduction_cycles(&l, &m) > 0);
         assert_eq!(pm.cross_bank_reduction_cycles(&l, &mapping()), 0);
+    }
+
+    #[test]
+    fn cached_evaluation_matches_and_hits() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let delta = EvalDelta::default();
+        let m = mapping();
+        assert_eq!(pm.evaluate(&l, &m), pm.evaluate_cached(&l, &m, &delta));
+        let (h0, m0) = delta.counts();
+        assert_eq!(h0, 0, "cold state cannot hit");
+        assert_eq!(m0, m.nests.len() as u64);
+        // Re-evaluating the same mapping hits every nest and recomputes
+        // nothing.
+        assert_eq!(pm.evaluate(&l, &m), pm.evaluate_cached(&l, &m, &delta));
+        let (h1, m1) = delta.counts();
+        assert_eq!(m1, m0);
+        assert_eq!(h1, m.nests.len() as u64);
+    }
+
+    #[test]
+    fn cached_evaluation_is_bit_identical_on_samples() {
+        let arch = Arch::dram_pim_small();
+        let pm = PerfModel::new(&arch);
+        let l = layer();
+        let ms = MapSpace::with_defaults(&arch, &l);
+        let delta = EvalDelta::default();
+        let mut rng = SplitMix64::new(23);
+        let mut seen = 0;
+        for _ in 0..60 {
+            if let Some(m) = ms.sample(&mut rng) {
+                seen += 1;
+                // `assert_eq!` on LayerStats covers the f64 fields too:
+                // the delta path must be exact, not approximately equal.
+                assert_eq!(pm.evaluate(&l, &m), pm.evaluate_cached(&l, &m, &delta));
+            }
+        }
+        assert!(seen > 0, "sampler produced no mappings");
+        let (_, misses) = delta.counts();
+        assert!(misses > 0);
     }
 
     #[test]

@@ -27,16 +27,21 @@
 //! candidate is a pure function of `(base seed, candidate index)` thanks to
 //! [`MapSpace::sample_indexed`]'s SplitMix64 stream splitting, and its
 //! score against the fixed neighbor is a pure function of the candidate.
-//! [`ParallelMapper`] therefore fans the index range across `std::thread`
-//! workers feeding off a work-stealing chunk queue (a shared atomic
-//! cursor); each worker tracks its local `(score, index)`-minimal candidate
-//! and the winners merge by the same order after the join — **no locks on
-//! the hot path, and bit-identical results at any thread count**. Repeated
-//! pair analyses are deduplicated by the [`OverlapCache`] memoizer keyed on
-//! mapping fingerprints (§IV-J: the fixed neighbor recurs across incumbent
-//! re-scores, refinement passes and the final evaluation pass), and the
-//! Transform metric's per-job ready queries by the same cache's transform
-//! table (§IV-I step 1).
+//! [`ParallelMapper`] therefore fans the index range across the run's one
+//! persistent [`WorkerPool`] (see [`pool`]) as a work-stealing chunk job
+//! (a per-job atomic cursor); each chunk tracks its local
+//! `(score, index)`-minimal candidate and the winners merge by the same
+//! order — **bit-identical results at any thread count, and one set of
+//! worker threads for the whole run** instead of per-section spawn and
+//! teardown. Repeated pair analyses are deduplicated by the
+//! [`OverlapCache`] memoizer keyed on mapping fingerprints (§IV-J: the
+//! fixed neighbor recurs across incumbent re-scores, refinement passes and
+//! the final evaluation pass), and the Transform metric's per-job ready
+//! queries by the same cache's transform table (§IV-I step 1). Guided
+//! engines add two more dedup layers on the same hot path: a per-call
+//! genome memo (duplicate offspring score once — see `GenomeMemo`) and
+//! per-nest delta-state for neighbor moves
+//! ([`crate::perf::PerfModel::evaluate_cached`]).
 //!
 //! # Pipelined multi-metric search
 //!
@@ -79,7 +84,7 @@ use crate::overlap::{
     ExhaustiveOverlap, LayerPair, OverlapAnalysis, OverlapCache, OverlapConfig, OverlapResult,
     ReadyTimes,
 };
-use crate::perf::{LayerStats, PerfModel};
+use crate::perf::{EvalDelta, LayerStats, PerfModel};
 use crate::transform::{
     merge_ready_jobs, transform_ready_jobs, transform_schedule, transform_schedule_multi,
     transform_schedule_owned, transform_schedule_with_jobs, TransformConfig, TransformResult,
@@ -90,6 +95,10 @@ use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+pub mod pool;
+
+pub use pool::WorkerPool;
 
 /// What the per-layer search optimizes (drives which of the paper's
 /// baseline mapping sets is produced).
@@ -299,11 +308,10 @@ pub struct MapperConfig {
     pub pipeline: bool,
     /// Speculatively enumerate the next layer's candidates while the
     /// current layer's winners are being scored and reduced (identical
-    /// results either way). The speculative enumeration fans out its own
-    /// `threads`-wide workers, so while it overlaps with scoring the
-    /// active worker count transiently exceeds `threads` (up to 2×) —
-    /// see ROADMAP for the shared-pool follow-up. Ignored when a deadline
-    /// is set.
+    /// results either way). The speculation runs as a detached task on
+    /// the run's shared [`WorkerPool`] and enumerates serially within
+    /// that one slot, so total concurrency stays capped at `threads`.
+    /// Ignored when a deadline is set.
     pub lookahead: bool,
     /// Replay the winning plan through the discrete-event validation
     /// simulator ([`crate::sim`]) before returning it, panicking on any
@@ -414,24 +422,34 @@ type BestCandidate = Option<(u64, u64, EvaluatedMapping)>;
 
 /// Deterministic multi-threaded candidate evaluator.
 ///
-/// Work distribution is a *work-stealing chunk queue*: a shared atomic
-/// cursor over the candidate index range that every worker bumps by
-/// [`ParallelMapper::chunk`] indices at a time, so fast workers naturally
-/// steal the share slow workers never claimed (dynamic self-scheduling).
-/// Each index is evaluated by a pure function, so the partitioning cannot
-/// change any result — only the wall-clock.
+/// Work distribution is a *work-stealing chunk job* on a persistent
+/// [`WorkerPool`]: a per-job atomic cursor over the candidate index range
+/// that every participant bumps by [`ParallelMapper::chunk`] indices at a
+/// time, so fast workers naturally steal the share slow workers never
+/// claimed (dynamic self-scheduling). Each index is evaluated by a pure
+/// function, so the partitioning cannot change any result — only the
+/// wall-clock.
 pub struct ParallelMapper {
-    /// Worker count (1 = evaluate inline on the calling thread).
+    /// Total execution slots (1 = evaluate inline on the calling thread).
     pub threads: usize,
     /// Candidate indices claimed per queue grab. Small enough to balance
     /// uneven per-candidate costs, large enough to keep the shared cursor
     /// off the hot path.
     pub chunk: u64,
+    pool: Arc<WorkerPool>,
 }
 
 impl ParallelMapper {
+    /// A mapper over a freshly-spawned private pool. Prefer
+    /// [`ParallelMapper::with_pool`] anywhere the call repeats — the whole
+    /// point of the persistent pool is paying thread spawn once per run.
     pub fn new(threads: usize) -> ParallelMapper {
-        ParallelMapper { threads: threads.max(1), chunk: 8 }
+        Self::with_pool(WorkerPool::new(threads))
+    }
+
+    /// A mapper fanning out over an existing persistent pool.
+    pub fn with_pool(pool: Arc<WorkerPool>) -> ParallelMapper {
+        ParallelMapper { threads: pool.threads(), chunk: 8, pool }
     }
 
     /// Evaluate candidates `0..budget` through `eval`, returning the
@@ -446,44 +464,66 @@ impl ParallelMapper {
     where
         F: Fn(u64) -> Option<EvaluatedMapping> + Sync,
     {
-        let queue = AtomicU64::new(0);
         let chunk = self.chunk.max(1);
         if self.threads == 1 {
+            let queue = AtomicU64::new(0);
             let (best, evaluated) = search_worker(&queue, budget, chunk, deadline, eval);
             return (best.map(|(_, _, em)| em), evaluated);
         }
-        let results: Vec<(BestCandidate, usize)> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| s.spawn(|| search_worker(&queue, budget, chunk, deadline, eval)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("search worker panicked"))
-                .collect()
-        });
-        let mut evaluated = 0usize;
-        let mut best: BestCandidate = None;
-        for (cand, n) in results {
-            evaluated += n;
-            if let Some(c) = cand {
-                let better = match &best {
+        let best: Mutex<BestCandidate> = Mutex::new(None);
+        let evaluated = AtomicU64::new(0);
+        // Merge one chunk's local minimum into the global one. The global
+        // winner is the `(score, index)`-lexicographic minimum, so the
+        // merge order — and with it the chunk partitioning — cannot change
+        // the result.
+        let merge = |local: BestCandidate, n: usize| {
+            evaluated.fetch_add(n as u64, Ordering::Relaxed);
+            if let Some(c) = local {
+                let mut g = best.lock().unwrap();
+                let better = match &*g {
                     None => true,
                     Some(cur) => (c.0, c.1) < (cur.0, cur.1),
                 };
                 if better {
-                    best = Some(c);
+                    *g = Some(c);
                 }
             }
-        }
-        (best.map(|(_, _, em)| em), evaluated)
+        };
+        self.pool.scope_chunks(budget, chunk, &|lo, hi| {
+            let mut local: BestCandidate = None;
+            let mut n = 0usize;
+            for i in lo..hi {
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        merge(local, n);
+                        return false;
+                    }
+                }
+                if let Some(em) = eval(i) {
+                    n += 1;
+                    let better = match &local {
+                        None => true,
+                        Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
+                    };
+                    if better {
+                        local = Some((em.score, i, em));
+                    }
+                }
+            }
+            merge(local, n);
+            true
+        });
+        let best = best.into_inner().unwrap().map(|(_, _, em)| em);
+        (best, evaluated.load(Ordering::Relaxed) as usize)
     }
 
     /// Evaluate every index in `0..n` through `eval`, collecting the
     /// results in index order — the *enumeration* half of a search call
-    /// (no reduction, no deadline). Workers drain the same work-stealing
-    /// chunk queue as [`ParallelMapper::run`]; each records its
-    /// `(index, value)` pairs locally and a scatter after the join
-    /// restores index order, so the output is independent of scheduling.
+    /// (no reduction, no deadline). Chunks drain the same work-stealing
+    /// job queue as [`ParallelMapper::run`]; each records its
+    /// `(index, value)` pairs locally and a scatter after the job
+    /// completes restores index order, so the output is independent of
+    /// scheduling.
     pub fn map_collect<T, F>(&self, n: u64, eval: &F) -> Vec<Option<T>>
     where
         T: Send,
@@ -492,44 +532,30 @@ impl ParallelMapper {
         if self.threads == 1 {
             return (0..n).map(eval).collect();
         }
-        let queue = AtomicU64::new(0);
         let chunk = self.chunk.max(1);
-        let parts: Vec<Vec<(u64, T)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| {
-                    s.spawn(|| {
-                        let mut part: Vec<(u64, T)> = Vec::new();
-                        drain_chunks(&queue, n, chunk, |i| {
-                            if let Some(v) = eval(i) {
-                                part.push((i, v));
-                            }
-                            true
-                        });
-                        part
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("enumeration worker panicked"))
-                .collect()
+        let parts: Mutex<Vec<(u64, T)>> = Mutex::new(Vec::new());
+        self.pool.scope_chunks(n, chunk, &|lo, hi| {
+            let mut part: Vec<(u64, T)> = Vec::new();
+            for i in lo..hi {
+                if let Some(v) = eval(i) {
+                    part.push((i, v));
+                }
+            }
+            parts.lock().unwrap().append(&mut part);
+            true
         });
         let mut out: Vec<Option<T>> = Vec::with_capacity(n as usize);
         out.resize_with(n as usize, || None);
-        for part in parts {
-            for (i, v) in part {
-                out[i as usize] = Some(v);
-            }
+        for (i, v) in parts.into_inner().unwrap() {
+            out[i as usize] = Some(v);
         }
         out
     }
 }
 
-/// Drain the shared chunk queue over `0..n`, invoking `body` for each
-/// claimed index; stops early when `body` returns `false` (deadline
-/// expiry). The single chunk-claiming loop both [`ParallelMapper::run`]'s
-/// reducing workers and [`ParallelMapper::map_collect`]'s collecting
-/// workers drain.
+/// Drain the (inline, single-thread) chunk queue over `0..n`, invoking
+/// `body` for each claimed index; stops early when `body` returns `false`
+/// (deadline expiry).
 fn drain_chunks<F>(queue: &AtomicU64, n: u64, chunk: u64, mut body: F)
 where
     F: FnMut(u64) -> bool,
@@ -548,8 +574,9 @@ where
     }
 }
 
-/// One worker: drain chunks off the shared cursor until the range (or the
-/// deadline) is exhausted, tracking the local `(score, index)` minimum.
+/// The single-thread fast path of [`ParallelMapper::run`]: drain chunks
+/// until the range (or the deadline) is exhausted, tracking the local
+/// `(score, index)` minimum.
 fn search_worker<F>(
     queue: &AtomicU64,
     budget: u64,
@@ -626,7 +653,7 @@ pub struct CandKey {
 }
 
 /// Enumerate candidates `0..budget` of `(layer, base_seed)`: sample every
-/// indexed draw and evaluate its per-layer stats, sharded across `threads`
+/// indexed draw and evaluate its per-layer stats, sharded across `pmap`'s
 /// workers. Scoring against fixed neighbors is *not* done here — that is
 /// the metric-specific half each pipelined job performs independently.
 fn enumerate_candidates(
@@ -636,7 +663,7 @@ fn enumerate_candidates(
     mapspace: &MapSpaceConfig,
     budget: u64,
     base_seed: u64,
-    threads: usize,
+    pmap: &ParallelMapper,
 ) -> CandidateSet {
     let ms = MapSpace::new(arch, layer, constraint.clone(), mapspace.clone());
     if budget >= PREFLIGHT_DRAWS && ms.prefix_infeasible(base_seed, PREFLIGHT_DRAWS) {
@@ -648,7 +675,7 @@ fn enumerate_candidates(
         let stats = pm.evaluate(layer, &mapping);
         Some((mapping, stats))
     };
-    let candidates = ParallelMapper::new(threads).map_collect(budget, &eval);
+    let candidates = pmap.map_collect(budget, &eval);
     CandidateSet { candidates, infeasible: false }
 }
 
@@ -758,12 +785,55 @@ impl Default for CandidateStore {
     }
 }
 
+/// Per-search-call memo of already-scored genomes, keyed by
+/// [`Mapping::fingerprint`]. Guided engines (GA crossover, SA/hill
+/// re-proposals) routinely emit duplicate offspring, and a candidate's
+/// metric score is a pure function of its mapping given the call's fixed
+/// neighbors — so a fingerprint hit returns the recorded score without
+/// re-pricing the genome. Because the score depends on the fixed
+/// neighbors, the memo lives and dies with one search call; it is never
+/// shared across calls (that is also why guided engines cannot reuse the
+/// cross-metric [`CandidateStore`]: their candidate streams are
+/// score-dependent). Counters drain into
+/// [`CacheStats::genome_hits`]/[`CacheStats::genome_misses`].
+#[derive(Default)]
+struct GenomeMemo {
+    scores: Mutex<HashMap<u64, u64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl GenomeMemo {
+    /// The recorded score of `fp`, if this call has already priced it.
+    fn lookup(&self, fp: u64) -> Option<u64> {
+        let got = self.scores.lock().unwrap().get(&fp).copied();
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Record a freshly-priced genome.
+    fn insert(&self, fp: u64, score: u64) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.scores.lock().unwrap().insert(fp, score);
+    }
+
+    /// `(hits, misses)` — hits count duplicate offspring skipped.
+    fn counts(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
 /// Per-layer mapping searcher.
 pub struct Mapper<'a> {
     pub arch: &'a Arch,
     pub config: MapperConfig,
     rng: SplitMix64,
     cache: Option<Arc<OverlapCache>>,
+    /// The persistent worker pool every parallel section of this mapper
+    /// fans out over (shared with the owning [`NetworkSearch`], if any).
+    pool: Arc<WorkerPool>,
     /// Valid mappings evaluated by the last `search_layer` call.
     pub last_evaluated: usize,
     /// Resolved draw count of a [`Budget::Calibrated`] config, memoized
@@ -782,14 +852,28 @@ impl<'a> Mapper<'a> {
 
     /// Construct with an externally-owned cache (shared across metric runs
     /// by [`NetworkSearch`]). `None` disables memoization regardless of
-    /// `config.cache`.
+    /// `config.cache`. Spawns a private worker pool sized to
+    /// `config.threads`; [`NetworkSearch`] routes its mappers through
+    /// [`Mapper::with_cache_and_pool`] instead so one pool serves the
+    /// whole run.
     pub fn with_cache(
         arch: &'a Arch,
         config: MapperConfig,
         cache: Option<Arc<OverlapCache>>,
     ) -> Mapper<'a> {
+        let pool = WorkerPool::new(config.threads);
+        Self::with_cache_and_pool(arch, config, cache, pool)
+    }
+
+    /// Construct sharing an existing persistent pool.
+    pub(crate) fn with_cache_and_pool(
+        arch: &'a Arch,
+        config: MapperConfig,
+        cache: Option<Arc<OverlapCache>>,
+        pool: Arc<WorkerPool>,
+    ) -> Mapper<'a> {
         let rng = SplitMix64::new(config.seed);
-        Mapper { arch, config, rng, cache, last_evaluated: 0, calibrated: None }
+        Mapper { arch, config, rng, cache, pool, last_evaluated: 0, calibrated: None }
     }
 
     /// `(hits, misses)` of the analysis memoizer, totalled across the
@@ -1181,25 +1265,59 @@ impl<'a> Mapper<'a> {
         }
         let pm = PerfModel::new(self.arch);
         let mut engine = optimize::engine_for(self.config.algo, base_seed, &self.config.optimize);
+        // Two per-call dedup layers for guided proposals, both gated on
+        // the cache knob so `cache: false` is the exact reference path:
+        // the genome memo short-circuits duplicate offspring, and the
+        // delta-state reuses per-nest aggregates across neighbor moves
+        // (a one-factor move touches one loop nest). Both return
+        // bit-identical scores — the memo because the score is a pure
+        // function of the mapping, the delta by construction
+        // ([`PerfModel::evaluate_cached`]).
+        let memo = self.cache.as_ref().map(|_| GenomeMemo::default());
+        let delta = self.cache.as_ref().map(|_| EvalDelta::default());
         let outcome = {
             let this: &Mapper<'a> = &*self;
-            let eval = |m: &Mapping| -> u64 {
-                let stats = pm.evaluate(layer, m);
+            let full_eval = |m: &Mapping| -> u64 {
+                let stats = match &delta {
+                    Some(d) => pm.evaluate_cached(layer, m, d),
+                    None => pm.evaluate(layer, m),
+                };
                 // Candidate pairs are one-shot: peek the cache, never
                 // insert.
                 this.score(metric, layer, m, &stats, ctxs, false).0
             };
+            let eval = |m: &Mapping| -> u64 {
+                let Some(memo) = &memo else { return full_eval(m) };
+                let fp = m.fingerprint();
+                if let Some(score) = memo.lookup(fp) {
+                    return score;
+                }
+                let score = full_eval(m);
+                memo.insert(fp, score);
+                score
+            };
+            let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool));
             optimize::run_search(
                 engine.as_mut(),
                 &ms,
                 budget.min((usize::MAX / 2) as u64) as usize,
                 self.config.optimize.population,
                 self.config.optimize.generations,
-                self.config.threads,
+                &pmap,
                 deadline,
                 &eval,
             )
         };
+        if let Some(c) = &self.cache {
+            if let Some(memo) = &memo {
+                let (h, m) = memo.counts();
+                c.add_genome_counts(h, m);
+            }
+            if let Some(d) = &delta {
+                let (h, m) = d.counts();
+                c.add_delta_counts(h, m);
+            }
+        }
         self.last_evaluated = outcome.evaluated;
         let (_, mapping) = outcome.best?;
         // Re-derive the winner's full evaluation (pure functions —
@@ -1233,7 +1351,7 @@ impl<'a> Mapper<'a> {
             return self.search_layer_engine(metric, layer, ctxs, base_seed);
         }
         let (budget, deadline) = self.budget_and_deadline(metric, layer, ctxs);
-        let threads = self.config.threads;
+        let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool));
 
         if let Some((store, consumers)) = share {
             if self.config.sharing_active() {
@@ -1246,7 +1364,7 @@ impl<'a> Mapper<'a> {
                         &self.config.mapspace,
                         budget,
                         base_seed,
-                        threads,
+                        &pmap,
                     )
                 });
                 if set.infeasible {
@@ -1274,7 +1392,7 @@ impl<'a> Mapper<'a> {
                         score,
                     })
                 };
-                let (best, evaluated) = ParallelMapper::new(threads).run(budget, None, &eval_one);
+                let (best, evaluated) = pmap.run(budget, None, &eval_one);
                 self.last_evaluated = evaluated;
                 return best;
             }
@@ -1309,7 +1427,7 @@ impl<'a> Mapper<'a> {
                 this.score(metric, layer, &mapping, &stats, ctxs, false);
             Some(EvaluatedMapping { mapping, stats, overlap, transform, score })
         };
-        let (best, evaluated) = ParallelMapper::new(threads).run(budget, deadline, &eval_one);
+        let (best, evaluated) = pmap.run(budget, deadline, &eval_one);
         self.last_evaluated = evaluated;
         best
     }
@@ -1440,12 +1558,31 @@ pub struct NetworkSearch<'a> {
     /// the fixed-neighbor pairs recur across the baseline matrix, and the
     /// chosen pairs recur across warm replays.
     cache: Option<Arc<OverlapCache>>,
+    /// The one persistent worker pool for every run of this searcher:
+    /// metric jobs, per-layer candidate scoring, shared enumeration and
+    /// speculative look-ahead all drain it, so total concurrency is
+    /// capped at exactly [`MapperConfig::threads`] and thread spawn is
+    /// paid once per searcher, not once per parallel section.
+    pool: Arc<WorkerPool>,
 }
 
 impl<'a> NetworkSearch<'a> {
     pub fn new(arch: &'a Arch, config: MapperConfig, strategy: SearchStrategy) -> Self {
         let cache = config.cache.then(|| Arc::new(OverlapCache::new()));
-        Self { arch, config, strategy, cache }
+        let pool = WorkerPool::new(config.threads);
+        Self { arch, config, strategy, cache, pool }
+    }
+
+    /// OS worker threads owned by this searcher's persistent pool
+    /// (`threads - 1`; the calling thread is the remaining slot).
+    pub fn pool_worker_count(&self) -> usize {
+        self.pool.worker_count()
+    }
+
+    /// Chunk jobs dispatched through the pool so far — monotonic across
+    /// consecutive runs, which is how pool reuse is observable.
+    pub fn pool_jobs_dispatched(&self) -> u64 {
+        self.pool.jobs_dispatched()
     }
 
     /// Pick the Middle start index (position in the chain) per heuristic.
@@ -1519,9 +1656,9 @@ impl<'a> NetworkSearch<'a> {
         let lookahead = self.config.lookahead && self.config.sharing_active();
         let plan = if lookahead {
             // A batch of one: the store is purely the hand-off buffer
-            // between the look-ahead thread and this run's own loop.
+            // between the look-ahead task and this run's own loop.
             let shared = SharedCandidates {
-                store: CandidateStore::new(),
+                store: Arc::new(CandidateStore::new()),
                 sweep_consumers: 1,
                 refine_consumers: 1,
             };
@@ -1550,8 +1687,12 @@ impl<'a> NetworkSearch<'a> {
             .map_or((0, 0), |c| (c.hits(), c.misses()));
         let chain = net.chain();
         assert!(!chain.is_empty(), "network has no chain layers");
-        let mut mapper =
-            Mapper::with_cache(self.arch, self.config.clone(), self.cache.clone());
+        let mut mapper = Mapper::with_cache_and_pool(
+            self.arch,
+            self.config.clone(),
+            self.cache.clone(),
+            Arc::clone(&self.pool),
+        );
         let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; chain.len()];
 
         // Determine the sweep order: a list of (position, role of the
@@ -1605,136 +1746,134 @@ impl<'a> NetworkSearch<'a> {
         }
 
         let mut mappings_evaluated = 0;
-        std::thread::scope(|scope| {
-            // Speculative look-ahead: start enumerating the NEXT call's
-            // candidates while this call's are being scored and reduced.
-            // Enumeration needs only (layer, seed) — never the running
-            // sweep's winners — so speculation cannot change any result;
-            // the store's once-cell hands the set over, or dedups the race
-            // if the main loop gets there first.
-            let prefetch_next = |call: usize| {
-                let Some(sh) = shared else { return };
-                if !self.config.lookahead {
-                    return;
-                }
-                let Some(&(li, seed)) = calls.get(call + 1) else { return };
-                if !self.config.sharing_active() {
-                    return;
-                }
-                let budget = self.config.draw_cap() as u64;
-                let consumers = if call + 1 < sweep_calls {
-                    sh.sweep_consumers
-                } else {
-                    sh.refine_consumers
-                };
-                let threads = self.config.threads;
-                let layer = &net.layers[li];
-                let constraint = self.config.constraint.clone();
-                let ms_cfg = self.config.mapspace.clone();
-                let arch = self.arch;
-                let store = &sh.store;
-                scope.spawn(move || {
-                    let key = CandKey { seed, layer: layer.fingerprint() };
-                    store.prefetch(key, consumers, || {
-                        enumerate_candidates(
-                            arch,
-                            layer,
-                            &constraint,
-                            &ms_cfg,
-                            budget,
-                            seed,
-                            threads,
-                        )
-                    });
+        // Speculative look-ahead: start enumerating the NEXT call's
+        // candidates while this call's are being scored and reduced.
+        // Enumeration needs only (layer, seed) — never the running
+        // sweep's winners — so speculation cannot change any result;
+        // the store's once-cell hands the set over, or dedups the race
+        // if the main loop gets there first. The speculation runs as a
+        // detached task on the shared pool (inline when the pool has no
+        // workers), owning clones of everything it reads, and enumerates
+        // serially — the task already occupies one pool slot and the
+        // sweep it overlaps with has the rest.
+        let prefetch_next = |call: usize| {
+            let Some(sh) = shared else { return };
+            if !self.config.lookahead {
+                return;
+            }
+            let Some(&(li, seed)) = calls.get(call + 1) else { return };
+            if !self.config.sharing_active() {
+                return;
+            }
+            let budget = self.config.draw_cap() as u64;
+            let consumers =
+                if call + 1 < sweep_calls { sh.sweep_consumers } else { sh.refine_consumers };
+            let layer = net.layers[li].clone();
+            let constraint = self.config.constraint.clone();
+            let ms_cfg = self.config.mapspace.clone();
+            let arch = self.arch.clone();
+            let store = Arc::clone(&sh.store);
+            self.pool.spawn_detached(Box::new(move || {
+                let key = CandKey { seed, layer: layer.fingerprint() };
+                store.prefetch(key, consumers, || {
+                    enumerate_candidates(
+                        &arch,
+                        &layer,
+                        &constraint,
+                        &ms_cfg,
+                        budget,
+                        seed,
+                        &ParallelMapper::new(1),
+                    )
                 });
-            };
+            }));
+        };
 
-            for (call, &(pos, neighbor)) in order.iter().enumerate() {
+        for (call, &(pos, neighbor)) in order.iter().enumerate() {
+            prefetch_next(call);
+            let layer = &net.layers[chain[pos]];
+            let share = shared.map(|sh| (&*sh.store, sh.sweep_consumers));
+            let best = {
+                let mut ctxs = Vec::new();
+                if let Some((npos, role)) = neighbor {
+                    let n = plans[npos].as_ref().expect("neighbor searched first");
+                    ctxs.push(PairContext {
+                        role,
+                        layer: &net.layers[chain[npos]],
+                        mapping: &n.mapping,
+                        stats: &n.stats,
+                    });
+                }
+                mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
+            };
+            mappings_evaluated += mapper.last_evaluated;
+            let best = best.unwrap_or_else(|| {
+                panic!("no valid mapping for layer `{}` within budget", layer.name)
+            });
+            plans[pos] = Some(best);
+        }
+
+        // Refinement passes (coordinate descent, §IV-J extension):
+        // each layer is re-searched with BOTH neighbors fixed,
+        // accepting the new mapping only when its locally-attributable
+        // contribution improves. This recovers the pairs the greedy
+        // one-directional sweep sacrifices (every chain layer is both
+        // a consumer and a producer, but the sweep only optimizes one
+        // side of it).
+        let mut call = sweep_calls;
+        for _pass in 0..self.config.refine_passes {
+            if metric == Metric::Sequential {
+                break; // nothing pair-dependent to refine
+            }
+            for pos in 0..chain.len() {
                 prefetch_next(call);
                 let layer = &net.layers[chain[pos]];
-                let share = shared.map(|sh| (&sh.store, sh.sweep_consumers));
-                let best = {
-                    let mut ctxs = Vec::new();
-                    if let Some((npos, role)) = neighbor {
-                        let n = plans[npos].as_ref().expect("neighbor searched first");
-                        ctxs.push(PairContext {
-                            role,
-                            layer: &net.layers[chain[npos]],
-                            mapping: &n.mapping,
-                            stats: &n.stats,
-                        });
-                    }
-                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
-                };
+                let mut ctxs = Vec::new();
+                if pos > 0 {
+                    let n = plans[pos - 1].as_ref().unwrap();
+                    ctxs.push(PairContext {
+                        role: NeighborRole::Producer,
+                        layer: &net.layers[chain[pos - 1]],
+                        mapping: &n.mapping,
+                        stats: &n.stats,
+                    });
+                }
+                if pos + 1 < chain.len() {
+                    let n = plans[pos + 1].as_ref().unwrap();
+                    ctxs.push(PairContext {
+                        role: NeighborRole::Consumer,
+                        layer: &net.layers[chain[pos + 1]],
+                        mapping: &n.mapping,
+                        stats: &n.stats,
+                    });
+                }
+                // Score the incumbent under the same two-sided
+                // objective, then accept the re-search winner only if
+                // strictly better.
+                let incumbent = plans[pos].as_ref().unwrap();
+                // Incumbent pairs are between chosen mappings and
+                // recur across passes and the final evaluation: worth
+                // storing.
+                let (inc_score, _, _) = mapper.score(
+                    metric,
+                    layer,
+                    &incumbent.mapping,
+                    &incumbent.stats,
+                    &ctxs,
+                    true,
+                );
+                let share = shared.map(|sh| (&*sh.store, sh.refine_consumers));
+                let challenger =
+                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
                 mappings_evaluated += mapper.last_evaluated;
-                let best = best.unwrap_or_else(|| {
-                    panic!("no valid mapping for layer `{}` within budget", layer.name)
-                });
-                plans[pos] = Some(best);
-            }
-
-            // Refinement passes (coordinate descent, §IV-J extension):
-            // each layer is re-searched with BOTH neighbors fixed,
-            // accepting the new mapping only when its locally-attributable
-            // contribution improves. This recovers the pairs the greedy
-            // one-directional sweep sacrifices (every chain layer is both
-            // a consumer and a producer, but the sweep only optimizes one
-            // side of it).
-            let mut call = sweep_calls;
-            for _pass in 0..self.config.refine_passes {
-                if metric == Metric::Sequential {
-                    break; // nothing pair-dependent to refine
+                if let Some(c) = challenger {
+                    if c.score < inc_score {
+                        plans[pos] = Some(c);
+                    }
                 }
-                for pos in 0..chain.len() {
-                    prefetch_next(call);
-                    let layer = &net.layers[chain[pos]];
-                    let mut ctxs = Vec::new();
-                    if pos > 0 {
-                        let n = plans[pos - 1].as_ref().unwrap();
-                        ctxs.push(PairContext {
-                            role: NeighborRole::Producer,
-                            layer: &net.layers[chain[pos - 1]],
-                            mapping: &n.mapping,
-                            stats: &n.stats,
-                        });
-                    }
-                    if pos + 1 < chain.len() {
-                        let n = plans[pos + 1].as_ref().unwrap();
-                        ctxs.push(PairContext {
-                            role: NeighborRole::Consumer,
-                            layer: &net.layers[chain[pos + 1]],
-                            mapping: &n.mapping,
-                            stats: &n.stats,
-                        });
-                    }
-                    // Score the incumbent under the same two-sided
-                    // objective, then accept the re-search winner only if
-                    // strictly better.
-                    let incumbent = plans[pos].as_ref().unwrap();
-                    // Incumbent pairs are between chosen mappings and
-                    // recur across passes and the final evaluation: worth
-                    // storing.
-                    let (inc_score, _, _) = mapper.score(
-                        metric,
-                        layer,
-                        &incumbent.mapping,
-                        &incumbent.stats,
-                        &ctxs,
-                        true,
-                    );
-                    let share = shared.map(|sh| (&sh.store, sh.refine_consumers));
-                    let challenger =
-                        mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
-                    mappings_evaluated += mapper.last_evaluated;
-                    if let Some(c) = challenger {
-                        if c.score < inc_score {
-                            plans[pos] = Some(c);
-                        }
-                    }
-                    call += 1;
-                }
+                call += 1;
             }
-        });
+        }
 
         // Final forward evaluation pass: regardless of how the sweep
         // visited layers, the *reported* pair numbers are producer→consumer
@@ -1814,9 +1953,10 @@ impl<'a> NetworkSearch<'a> {
     /// attribution of the shared cache to individual plans, are the only
     /// observable differences.
     ///
-    /// [`MapperConfig::threads`] is divided among the concurrent jobs
-    /// (min 1 each), so it keeps meaning "total scoring workers" in both
-    /// modes.
+    /// The jobs — and every nested parallel section inside them — share
+    /// this searcher's one persistent [`WorkerPool`], so
+    /// [`MapperConfig::threads`] keeps meaning "total scoring workers" in
+    /// both modes without any up-front division.
     pub fn run_metrics(&self, net: &Network, metrics: &[Metric]) -> Vec<NetworkPlan> {
         if matches!(self.config.budget, Budget::Calibrated { .. }) && !metrics.is_empty() {
             // Resolve the calibration ONCE, against the most expensive
@@ -1842,49 +1982,32 @@ impl<'a> NetworkSearch<'a> {
             return metrics.iter().map(|&m| self.run(net, m)).collect();
         }
         let shared = SharedCandidates {
-            store: CandidateStore::new(),
+            store: Arc::new(CandidateStore::new()),
             sweep_consumers: metrics.len() as u32,
             // Sequential-metric jobs skip refinement (nothing
             // pair-dependent to refine), so refinement-phase entries have
             // fewer consumers.
             refine_consumers: metrics.iter().filter(|&&m| m != Metric::Sequential).count() as u32,
         };
-        // Divide the configured worker budget among the concurrent jobs so
-        // `threads` keeps meaning "total scoring workers", not "workers
-        // per job" — N jobs at full width would oversubscribe the very
-        // cores the pipeline exploits. The remainder goes to the LAST
-        // jobs: callers order metrics cheap-to-expensive (Sequential
-        // before Transform), and the expensive sweeps gate the batch.
-        // Thread count never affects results, only wall-clock.
-        let n_jobs = metrics.len();
-        let (base_threads, extra_threads) =
-            (self.config.threads / n_jobs, self.config.threads % n_jobs);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = metrics
-                .iter()
-                .enumerate()
-                .map(|(j, &m)| {
-                    let sh = &shared;
-                    let per_job =
-                        (base_threads + usize::from(n_jobs - 1 - j < extra_threads)).max(1);
-                    s.spawn(move || {
-                        let mut cfg = self.config.clone();
-                        cfg.threads = per_job;
-                        let job = NetworkSearch {
-                            arch: self.arch,
-                            config: cfg,
-                            strategy: self.strategy,
-                            cache: self.cache.clone(),
-                        };
-                        job.run_shared(net, m, Some(sh))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("metric job panicked"))
-                .collect()
-        })
+        // One chunk job over the metric list, one metric per chunk: every
+        // job — and every nested per-layer section inside it — drains the
+        // same persistent pool, so total concurrency stays capped at
+        // `threads` without dividing the count up front (the old scheme's
+        // `jobs × threads` transient oversubscription is gone). Thread
+        // count never affects results, only wall-clock.
+        let slots: Vec<Mutex<Option<NetworkPlan>>> =
+            metrics.iter().map(|_| Mutex::new(None)).collect();
+        self.pool.scope_chunks(metrics.len() as u64, 1, &|lo, hi| {
+            for j in lo..hi {
+                let plan = self.run_shared(net, metrics[j as usize], Some(&shared));
+                *slots[j as usize].lock().unwrap() = Some(plan);
+            }
+            true
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("metric job completed"))
+            .collect()
     }
 
     /// Run every baseline variant needed by the overall-comparison figures
@@ -1956,7 +2079,7 @@ impl<'a> NetworkSearch<'a> {
         let lookahead = self.config.lookahead && self.config.sharing_active();
         let plan = if lookahead {
             let shared = SharedCandidates {
-                store: CandidateStore::new(),
+                store: Arc::new(CandidateStore::new()),
                 sweep_consumers: 1,
                 refine_consumers: 1,
             };
@@ -2004,8 +2127,12 @@ impl<'a> NetworkSearch<'a> {
         for (pos, &v) in topo.iter().enumerate() {
             pos_of[v] = pos;
         }
-        let mut mapper =
-            Mapper::with_cache(self.arch, self.config.clone(), self.cache.clone());
+        let mut mapper = Mapper::with_cache_and_pool(
+            self.arch,
+            self.config.clone(),
+            self.cache.clone(),
+            Arc::clone(&self.pool),
+        );
         let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; n];
 
         // Sweep order: (position, fixed neighbors as (position, role)).
@@ -2062,127 +2189,122 @@ impl<'a> NetworkSearch<'a> {
         }
 
         let mut mappings_evaluated = 0;
-        std::thread::scope(|scope| {
-            // Speculative look-ahead, identical to the chain path's:
-            // enumeration needs only (layer, seed), never the sweep's
-            // winners, so it cannot change any result.
-            let prefetch_next = |call: usize| {
-                let Some(sh) = shared else { return };
-                if !self.config.lookahead {
-                    return;
-                }
-                let Some(&(li, seed)) = calls.get(call + 1) else { return };
-                if !self.config.sharing_active() {
-                    return;
-                }
-                let budget = self.config.draw_cap() as u64;
-                let consumers = if call + 1 < sweep_calls {
-                    sh.sweep_consumers
-                } else {
-                    sh.refine_consumers
-                };
-                let threads = self.config.threads;
-                let layer = &g.layers[li];
-                let constraint = self.config.constraint.clone();
-                let ms_cfg = self.config.mapspace.clone();
-                let arch = self.arch;
-                let store = &sh.store;
-                scope.spawn(move || {
-                    let key = CandKey { seed, layer: layer.fingerprint() };
-                    store.prefetch(key, consumers, || {
-                        enumerate_candidates(
-                            arch,
-                            layer,
-                            &constraint,
-                            &ms_cfg,
-                            budget,
-                            seed,
-                            threads,
-                        )
-                    });
-                });
-            };
-
-            for (call, (pos, neighbors)) in order.iter().enumerate() {
-                prefetch_next(call);
-                let layer = &g.layers[topo[*pos]];
-                let share = shared.map(|sh| (&sh.store, sh.sweep_consumers));
-                let best = {
-                    let ctxs: Vec<PairContext<'_>> = neighbors
-                        .iter()
-                        .map(|&(npos, role)| {
-                            let nb = plans[npos].as_ref().expect("neighbor searched first");
-                            PairContext {
-                                role,
-                                layer: &g.layers[topo[npos]],
-                                mapping: &nb.mapping,
-                                stats: &nb.stats,
-                            }
-                        })
-                        .collect();
-                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
-                };
-                mappings_evaluated += mapper.last_evaluated;
-                let best = best.unwrap_or_else(|| {
-                    panic!("no valid mapping for layer `{}` within budget", layer.name)
-                });
-                plans[*pos] = Some(best);
+        // Speculative look-ahead, identical to the chain path's:
+        // enumeration needs only (layer, seed), never the sweep's
+        // winners, so it cannot change any result. Detached on the
+        // shared pool with owned clones, serial within its one slot.
+        let prefetch_next = |call: usize| {
+            let Some(sh) = shared else { return };
+            if !self.config.lookahead {
+                return;
             }
+            let Some(&(li, seed)) = calls.get(call + 1) else { return };
+            if !self.config.sharing_active() {
+                return;
+            }
+            let budget = self.config.draw_cap() as u64;
+            let consumers =
+                if call + 1 < sweep_calls { sh.sweep_consumers } else { sh.refine_consumers };
+            let layer = g.layers[li].clone();
+            let constraint = self.config.constraint.clone();
+            let ms_cfg = self.config.mapspace.clone();
+            let arch = self.arch.clone();
+            let store = Arc::clone(&sh.store);
+            self.pool.spawn_detached(Box::new(move || {
+                let key = CandKey { seed, layer: layer.fingerprint() };
+                store.prefetch(key, consumers, || {
+                    enumerate_candidates(
+                        &arch,
+                        &layer,
+                        &constraint,
+                        &ms_cfg,
+                        budget,
+                        seed,
+                        &ParallelMapper::new(1),
+                    )
+                });
+            }));
+        };
 
-            // Refinement: each node re-searched with its whole searched
-            // neighborhood fixed — all predecessors as producers, all
-            // successors as consumers (the chain's two-neighbor special
-            // case, generalized).
-            let mut call = sweep_calls;
-            for _pass in 0..self.config.refine_passes {
-                if metric == Metric::Sequential {
-                    break; // nothing pair-dependent to refine
-                }
-                for pos in 0..n {
-                    prefetch_next(call);
-                    let v = topo[pos];
-                    let layer = &g.layers[v];
-                    let mut ctxs = Vec::new();
-                    for &p in g.preds(v) {
-                        let nb = plans[pos_of[p]].as_ref().unwrap();
-                        ctxs.push(PairContext {
-                            role: NeighborRole::Producer,
-                            layer: &g.layers[p],
+        for (call, (pos, neighbors)) in order.iter().enumerate() {
+            prefetch_next(call);
+            let layer = &g.layers[topo[*pos]];
+            let share = shared.map(|sh| (&*sh.store, sh.sweep_consumers));
+            let best = {
+                let ctxs: Vec<PairContext<'_>> = neighbors
+                    .iter()
+                    .map(|&(npos, role)| {
+                        let nb = plans[npos].as_ref().expect("neighbor searched first");
+                        PairContext {
+                            role,
+                            layer: &g.layers[topo[npos]],
                             mapping: &nb.mapping,
                             stats: &nb.stats,
-                        });
-                    }
-                    for &s in g.succs(v) {
-                        let nb = plans[pos_of[s]].as_ref().unwrap();
-                        ctxs.push(PairContext {
-                            role: NeighborRole::Consumer,
-                            layer: &g.layers[s],
-                            mapping: &nb.mapping,
-                            stats: &nb.stats,
-                        });
-                    }
-                    let incumbent = plans[pos].as_ref().unwrap();
-                    let (inc_score, _, _) = mapper.score(
-                        metric,
-                        layer,
-                        &incumbent.mapping,
-                        &incumbent.stats,
-                        &ctxs,
-                        true,
-                    );
-                    let share = shared.map(|sh| (&sh.store, sh.refine_consumers));
-                    let challenger =
-                        mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
-                    mappings_evaluated += mapper.last_evaluated;
-                    if let Some(c) = challenger {
-                        if c.score < inc_score {
-                            plans[pos] = Some(c);
                         }
-                    }
-                    call += 1;
-                }
+                    })
+                    .collect();
+                mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share)
+            };
+            mappings_evaluated += mapper.last_evaluated;
+            let best = best.unwrap_or_else(|| {
+                panic!("no valid mapping for layer `{}` within budget", layer.name)
+            });
+            plans[*pos] = Some(best);
+        }
+
+        // Refinement: each node re-searched with its whole searched
+        // neighborhood fixed — all predecessors as producers, all
+        // successors as consumers (the chain's two-neighbor special
+        // case, generalized).
+        let mut call = sweep_calls;
+        for _pass in 0..self.config.refine_passes {
+            if metric == Metric::Sequential {
+                break; // nothing pair-dependent to refine
             }
-        });
+            for pos in 0..n {
+                prefetch_next(call);
+                let v = topo[pos];
+                let layer = &g.layers[v];
+                let mut ctxs = Vec::new();
+                for &p in g.preds(v) {
+                    let nb = plans[pos_of[p]].as_ref().unwrap();
+                    ctxs.push(PairContext {
+                        role: NeighborRole::Producer,
+                        layer: &g.layers[p],
+                        mapping: &nb.mapping,
+                        stats: &nb.stats,
+                    });
+                }
+                for &s in g.succs(v) {
+                    let nb = plans[pos_of[s]].as_ref().unwrap();
+                    ctxs.push(PairContext {
+                        role: NeighborRole::Consumer,
+                        layer: &g.layers[s],
+                        mapping: &nb.mapping,
+                        stats: &nb.stats,
+                    });
+                }
+                let incumbent = plans[pos].as_ref().unwrap();
+                let (inc_score, _, _) = mapper.score(
+                    metric,
+                    layer,
+                    &incumbent.mapping,
+                    &incumbent.stats,
+                    &ctxs,
+                    true,
+                );
+                let share = shared.map(|sh| (&*sh.store, sh.refine_consumers));
+                let challenger =
+                    mapper.search_layer_seeded(metric, layer, &ctxs, calls[call].1, share);
+                mappings_evaluated += mapper.last_evaluated;
+                if let Some(c) = challenger {
+                    if c.score < inc_score {
+                        plans[pos] = Some(c);
+                    }
+                }
+                call += 1;
+            }
+        }
 
         // Final evaluation pass in topological order: place every chosen
         // mapping on one shared clock, tracking absolute finish times per
@@ -2320,39 +2442,25 @@ impl<'a> NetworkSearch<'a> {
             return metrics.iter().map(|&m| self.run_graph(g, m)).collect();
         }
         let shared = SharedCandidates {
-            store: CandidateStore::new(),
+            store: Arc::new(CandidateStore::new()),
             sweep_consumers: metrics.len() as u32,
             refine_consumers: metrics.iter().filter(|&&m| m != Metric::Sequential).count() as u32,
         };
-        let n_jobs = metrics.len();
-        let (base_threads, extra_threads) =
-            (self.config.threads / n_jobs, self.config.threads % n_jobs);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = metrics
-                .iter()
-                .enumerate()
-                .map(|(j, &m)| {
-                    let sh = &shared;
-                    let per_job =
-                        (base_threads + usize::from(n_jobs - 1 - j < extra_threads)).max(1);
-                    s.spawn(move || {
-                        let mut cfg = self.config.clone();
-                        cfg.threads = per_job;
-                        let job = NetworkSearch {
-                            arch: self.arch,
-                            config: cfg,
-                            strategy: self.strategy,
-                            cache: self.cache.clone(),
-                        };
-                        job.run_graph_shared(g, m, Some(sh))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("metric job panicked"))
-                .collect()
-        })
+        // Same pool-routed dispatch as [`NetworkSearch::run_metrics`]:
+        // one metric per chunk, nested sections share the pool.
+        let slots: Vec<Mutex<Option<NetworkPlan>>> =
+            metrics.iter().map(|_| Mutex::new(None)).collect();
+        self.pool.scope_chunks(metrics.len() as u64, 1, &|lo, hi| {
+            for j in lo..hi {
+                let plan = self.run_graph_shared(g, metrics[j as usize], Some(&shared));
+                *slots[j as usize].lock().unwrap() = Some(plan);
+            }
+            true
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("metric job completed"))
+            .collect()
     }
 
     /// Every baseline variant for a graph workload: (sequential-metric
@@ -2383,6 +2491,7 @@ impl<'a> NetworkSearch<'a> {
             config: cfg,
             strategy: self.strategy,
             cache: self.cache.clone(),
+            pool: Arc::clone(&self.pool),
         }
     }
 
@@ -2407,6 +2516,7 @@ impl<'a> NetworkSearch<'a> {
             config: cfg,
             strategy: self.strategy,
             cache: self.cache.clone(),
+            pool: Arc::clone(&self.pool),
         }
     }
 }
@@ -2461,8 +2571,11 @@ pub fn calibrate_budget(
         .into_iter()
         .collect();
     // Probe through a cache-less mapper so calibration cannot warm (or
-    // be skewed by) the real run's memoizer.
-    let mapper = Mapper::with_cache(arch, config.clone(), None);
+    // be skewed by) the real run's memoizer. The probe itself is serial,
+    // so its throwaway mapper gets a worker-less pool.
+    let mut probe_cfg = config.clone();
+    probe_cfg.threads = 1;
+    let mapper = Mapper::with_cache(arch, probe_cfg, None);
     mapper.calibrate(metric, layer, &ctxs, target, probe_draws)
 }
 
@@ -2519,7 +2632,9 @@ pub fn calibrate_budget_graph(
         })
         .into_iter()
         .collect();
-    let mapper = Mapper::with_cache(arch, config.clone(), None);
+    let mut probe_cfg = config.clone();
+    probe_cfg.threads = 1;
+    let mapper = Mapper::with_cache(arch, probe_cfg, None);
     mapper.calibrate(metric, layer, &ctxs, target, probe_draws)
 }
 
@@ -2528,7 +2643,8 @@ pub fn calibrate_budget_graph(
 /// phase's entries (the consumer counts bound the store's live window —
 /// see [`CandidateStore::fetch`]).
 struct SharedCandidates {
-    store: CandidateStore,
+    /// Shared (and handed to detached look-ahead tasks, hence the `Arc`).
+    store: Arc<CandidateStore>,
     /// Jobs consuming each directional-sweep entry (all of them).
     sweep_consumers: u32,
     /// Jobs consuming each refinement-pass entry (the pair-aware ones).
@@ -2720,7 +2836,8 @@ mod tests {
         let constraint = MappingConstraint::default();
         let store = CandidateStore::new();
         let key = CandKey { seed: 99, layer: layer.fingerprint() };
-        let enumerate = || enumerate_candidates(&arch, &layer, &constraint, &cfg, 8, 99, 1);
+        let pmap = ParallelMapper::new(1);
+        let enumerate = || enumerate_candidates(&arch, &layer, &constraint, &cfg, 8, 99, &pmap);
         // Prefetch computes without consuming.
         store.prefetch(key, 2, enumerate);
         assert_eq!(store.len(), 1);

@@ -1,0 +1,496 @@
+//! The crate's one persistent worker pool.
+//!
+//! Before this module, every parallel section spawned its own transient
+//! `std::thread::scope` workers: the per-layer sampler, the optimizer's
+//! fitness batches, the speculative look-ahead enumeration and the
+//! pipelined metric matrix each paid spawn/teardown and — worse —
+//! multiplied: a three-metric pipelined run with look-ahead could hold
+//! `jobs × threads` live threads. [`WorkerPool`] replaces all of that
+//! with one set of workers, spawned once per [`crate::search::NetworkSearch`]
+//! (or standalone [`crate::search::Mapper`]) and shared by every nested
+//! parallel section, so total concurrency is capped at exactly `threads`.
+//!
+//! # Execution model
+//!
+//! A parallel section is a *chunk job* ([`WorkerPool::scope_chunks`]): an
+//! index range `0..n` drained in `chunk`-sized slices from a per-job
+//! atomic cursor (the same work-stealing discipline the old transient
+//! workers used, so any index partition yields the same results for the
+//! order-independent merges built on top). The **caller participates**:
+//! it drains its own job alongside the pool workers and returns only when
+//! every claimed chunk has finished. That rule is what makes nesting safe
+//! — a worker that calls `scope_chunks` from inside a chunk body drains
+//! the inner job itself, so progress never depends on another thread
+//! being free, and the waits-for chain follows nesting depth.
+//!
+//! Fire-and-forget work (speculative look-ahead enumeration) goes through
+//! [`WorkerPool::spawn_detached`]: it runs on a pool worker when one
+//! exists and inline otherwise, and must own all its data — detached
+//! tasks must **not** hold the pool itself (a pool owner dropping the
+//! last handle from inside a worker would self-join).
+//!
+//! # Memory safety of the type-erased body
+//!
+//! `scope_chunks` erases the caller's `&F` closure into a raw pointer +
+//! monomorphized trampoline (`RawBody`) so jobs of different closure
+//! types can share one queue. The pointer is only dereferenced while a
+//! *pending ticket* is held: the owner starts with one ticket and every
+//! worker takes one around its drain. The owner returns (or unwinds) only
+//! after the ticket count reaches zero, so the closure outlives every
+//! dereference. A worker that grabs the job Arc late — after the owner
+//! has already left — takes a ticket and immediately observes an
+//! exhausted cursor (cursor RMWs read the latest value in modification
+//! order, and both natural completion and cancellation drive the cursor
+//! to `n` before the owner can return), so it never touches the body.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Spawn one named OS thread. This is the crate's single thread-creation
+/// site for the default build: pool workers and the execution engine's
+/// bank workers all route through it, so thread naming (and any future
+/// instrumentation) lives in one place. (The only exception is the
+/// feature-gated `pjrt` device thread, which needs fallible spawning.)
+pub fn spawn_worker_thread<F>(name: &str, f: F) -> JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("failed to spawn thread `{name}`: {e}"))
+}
+
+/// A type-erased borrow of the owner's chunk-body closure.
+///
+/// `data` points at the `&F` passed to [`WorkerPool::scope_chunks`];
+/// `call` is the matching monomorphized trampoline. Validity is
+/// guaranteed by the ticket protocol described in the module docs.
+#[derive(Clone, Copy)]
+struct RawBody {
+    data: *const (),
+    call: unsafe fn(*const (), u64, u64) -> bool,
+}
+
+// SAFETY: `RawBody` is only ever dereferenced through `ChunkJob::drain`
+// while a pending ticket is held, and `scope_chunks` requires `F: Sync`
+// (shared access from many threads) with a lifetime that covers the whole
+// ticket-protected window. The raw pointer itself is freely sendable.
+unsafe impl Send for RawBody {}
+// SAFETY: as above — shared references to the underlying `F: Sync`
+// closure may be used from any thread.
+unsafe impl Sync for RawBody {}
+
+/// One parallel section: an index range drained in chunks from a shared
+/// cursor. See the module docs for the ticket protocol.
+struct ChunkJob {
+    /// Next unclaimed index. Driven to `>= n` by natural exhaustion or by
+    /// cancellation, so late arrivals claim nothing.
+    cursor: AtomicU64,
+    n: u64,
+    chunk: u64,
+    /// Outstanding tickets: 1 for the owner plus 1 per draining worker.
+    /// The body may only be called while holding a ticket.
+    pending: AtomicU64,
+    /// Owner's completion wait: condvar signalled when `pending` hits 0.
+    done: Mutex<()>,
+    done_cv: Condvar,
+    body: RawBody,
+}
+
+impl ChunkJob {
+    /// No chunk left to claim (also true after cancellation).
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Acquire) >= self.n
+    }
+
+    /// Claim and run chunks until the range is exhausted or the body asks
+    /// to stop. A `false` return from the body cancels the whole job by
+    /// driving the cursor past the end.
+    ///
+    /// Callers must hold a pending ticket across this call.
+    fn drain(&self) {
+        loop {
+            let lo = self.cursor.fetch_add(self.chunk, Ordering::AcqRel);
+            if lo >= self.n {
+                return;
+            }
+            let hi = lo.saturating_add(self.chunk).min(self.n);
+            // SAFETY: a pending ticket is held for the duration of this
+            // call, so the owner has not returned and the closure behind
+            // `body` is alive (see the module docs).
+            if !unsafe { (self.body.call)(self.body.data, lo, hi) } {
+                self.cursor.fetch_max(self.n, Ordering::AcqRel);
+                return;
+            }
+        }
+    }
+
+    /// Worker-side drain: take a ticket, drain, release — with the
+    /// release on a drop guard so a panicking body cannot strand the
+    /// owner in its completion wait.
+    fn drain_with_ticket(&self) {
+        self.pending.fetch_add(1, Ordering::AcqRel);
+        let _ticket = TicketGuard(self);
+        self.drain();
+    }
+
+    fn release_ticket(&self) {
+        if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last ticket: wake the owner. Taking the lock before
+            // notifying pairs with the owner's locked re-check of
+            // `pending`, so the wakeup cannot be lost.
+            let _g = self.done.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Releases a worker ticket even if the chunk body panics.
+struct TicketGuard<'a>(&'a ChunkJob);
+
+impl Drop for TicketGuard<'_> {
+    fn drop(&mut self) {
+        self.0.release_ticket();
+    }
+}
+
+/// Owner-side completion: cancel outstanding chunks (a no-op after a
+/// normal drain), release the owner ticket, wait for workers, unpublish.
+/// Running on a drop guard keeps the ticket invariant — no dereference of
+/// the body after the owner's frame dies — even when the owner's own
+/// chunk body panics.
+struct JobGuard<'a> {
+    pool: &'a WorkerPool,
+    job: Arc<ChunkJob>,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        self.job.cursor.fetch_max(self.job.n, Ordering::AcqRel);
+        self.job.release_ticket();
+        let mut g = self.job.done.lock().unwrap();
+        while self.job.pending.load(Ordering::Acquire) != 0 {
+            g = self.job.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        let mut st = self.pool.inner.state.lock().unwrap();
+        st.jobs.retain(|j| !Arc::ptr_eq(j, &self.job));
+    }
+}
+
+/// A fire-and-forget task (owns all its data; never holds the pool).
+type DetachedTask = Box<dyn FnOnce() + Send>;
+
+struct PoolState {
+    /// Published (not yet complete) chunk jobs, oldest first.
+    jobs: Vec<Arc<ChunkJob>>,
+    /// Queued detached tasks.
+    tasks: VecDeque<DetachedTask>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    jobs_dispatched: AtomicU64,
+}
+
+enum Work {
+    Task(DetachedTask),
+    Job(Arc<ChunkJob>),
+}
+
+impl PoolInner {
+    /// Block until there is work or the pool shuts down. Detached tasks
+    /// drain before shutdown completes, so a queued look-ahead enumeration
+    /// always runs.
+    fn next_work(&self) -> Option<Work> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(t) = st.tasks.pop_front() {
+                return Some(Work::Task(t));
+            }
+            st.jobs.retain(|j| !j.exhausted());
+            if let Some(j) = st.jobs.first() {
+                return Some(Work::Job(Arc::clone(j)));
+            }
+            if st.shutdown {
+                return None;
+            }
+            st = self.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    while let Some(work) = inner.next_work() {
+        match work {
+            Work::Task(t) => t(),
+            Work::Job(j) => j.drain_with_ticket(),
+        }
+    }
+}
+
+/// The persistent work-stealing worker pool. See the module docs.
+///
+/// Total concurrency is exactly `threads`: the pool spawns `threads - 1`
+/// workers and the calling thread participates in every job it submits,
+/// so `threads == 1` means a pool with no workers at all (every
+/// `scope_chunks` runs inline and every detached task runs eagerly).
+///
+/// Dropping the last handle shuts the workers down (after any queued
+/// detached tasks have run) and joins them.
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads.max(1)` total execution slots.
+    pub fn new(threads: usize) -> Arc<WorkerPool> {
+        let threads = threads.max(1);
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                tasks: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            jobs_dispatched: AtomicU64::new(0),
+        });
+        let workers = (0..threads - 1)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                spawn_worker_thread(&format!("fopim-worker-{i}"), move || worker_loop(&inner))
+            })
+            .collect();
+        Arc::new(WorkerPool { inner, workers, threads })
+    }
+
+    /// Total execution slots (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// OS threads owned by the pool (`threads - 1`).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Chunk jobs dispatched over the pool's lifetime (serial fast-path
+    /// dispatches included) — observability for pool-reuse tests and
+    /// `--stats`.
+    pub fn jobs_dispatched(&self) -> u64 {
+        self.inner.jobs_dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Run `body(lo, hi)` over `0..n` in `chunk`-sized slices, fanned
+    /// across the pool; returns when every claimed slice has finished.
+    /// A `false` return from any invocation cancels the remaining
+    /// unclaimed slices (in-flight slices still complete).
+    ///
+    /// The caller drains its own job alongside the workers, so this is
+    /// safe to call from inside another job's body (nested sections) and
+    /// never deadlocks waiting for a free worker.
+    pub fn scope_chunks<F>(&self, n: u64, chunk: u64, body: &F)
+    where
+        F: Fn(u64, u64) -> bool + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        self.inner.jobs_dispatched.fetch_add(1, Ordering::Relaxed);
+        let chunk = chunk.max(1);
+        if self.threads <= 1 || n <= chunk {
+            let mut lo = 0;
+            while lo < n {
+                let hi = lo.saturating_add(chunk).min(n);
+                if !body(lo, hi) {
+                    return;
+                }
+                lo = hi;
+            }
+            return;
+        }
+        // Monomorphized trampoline for `F`; coerces to the type-erased
+        // pointer in `RawBody`.
+        fn call_body<F: Fn(u64, u64) -> bool + Sync>(data: *const (), lo: u64, hi: u64) -> bool {
+            // SAFETY: `data` is the `&F` captured below; the ticket
+            // protocol keeps it alive across every call (module docs).
+            unsafe { (*data.cast::<F>())(lo, hi) }
+        }
+        let job = Arc::new(ChunkJob {
+            cursor: AtomicU64::new(0),
+            n,
+            chunk,
+            pending: AtomicU64::new(1),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            body: RawBody { data: (body as *const F).cast::<()>(), call: call_body::<F> },
+        });
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.jobs.push(Arc::clone(&job));
+        }
+        self.inner.work_cv.notify_all();
+        let _guard = JobGuard { pool: self, job: Arc::clone(&job) };
+        job.drain();
+    }
+
+    /// Queue a fire-and-forget task on a pool worker (inline when the
+    /// pool has none). The task must own its data and must not hold a
+    /// `WorkerPool` handle — see the module docs.
+    pub fn spawn_detached(&self, task: DetachedTask) {
+        if self.workers.is_empty() {
+            task();
+            return;
+        }
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.tasks.push_back(task);
+        }
+        self.inner.work_cv.notify_one();
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("jobs_dispatched", &self.jobs_dispatched())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let sum = AtomicU64::new(0);
+        let count = AtomicU64::new(0);
+        pool.scope_chunks(1000, 7, &|lo, hi| {
+            for i in lo..hi {
+                sum.fetch_add(i, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+            }
+            true
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+        assert_eq!(sum.load(Ordering::Relaxed), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert_eq!(pool.worker_count(), 0);
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(100, 8, &|lo, hi| {
+            for i in lo..hi {
+                sum.fetch_add(i, Ordering::Relaxed);
+            }
+            true
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 100 * 99 / 2);
+    }
+
+    #[test]
+    fn cancellation_stops_unclaimed_chunks() {
+        // chunk=1 makes claims sequential in index order, so exactly the
+        // indices below the cancel threshold are processed.
+        for threads in [1, 4] {
+            let pool = WorkerPool::new(threads);
+            let processed = AtomicU64::new(0);
+            pool.scope_chunks(1000, 1, &|lo, _hi| {
+                if lo >= 10 {
+                    return false;
+                }
+                processed.fetch_add(1, Ordering::Relaxed);
+                true
+            });
+            assert_eq!(processed.load(Ordering::Relaxed), 10, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn nested_jobs_complete() {
+        let pool = WorkerPool::new(4);
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(8, 1, &|lo, hi| {
+            for _ in lo..hi {
+                pool.scope_chunks(10, 3, &|ilo, ihi| {
+                    for i in ilo..ihi {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    }
+                    true
+                });
+            }
+            true
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 8 * 45);
+    }
+
+    #[test]
+    fn detached_task_runs() {
+        for threads in [1, 3] {
+            let pool = WorkerPool::new(threads);
+            let (tx, rx) = mpsc::channel();
+            pool.spawn_detached(Box::new(move || {
+                tx.send(42u64).unwrap();
+            }));
+            let got = rx.recv_timeout(Duration::from_secs(10)).expect("detached task ran");
+            assert_eq!(got, 42, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn queued_detached_tasks_survive_shutdown() {
+        let (tx, rx) = mpsc::channel();
+        {
+            let pool = WorkerPool::new(2);
+            for i in 0..16u64 {
+                let tx = tx.clone();
+                pool.spawn_detached(Box::new(move || {
+                    tx.send(i).unwrap();
+                }));
+            }
+            // Drop joins the workers, which drain queued tasks first.
+        }
+        let mut got: Vec<u64> = rx.try_iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_dispatched_counts_all_dispatches() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.jobs_dispatched(), 0);
+        pool.scope_chunks(4, 8, &|_, _| true); // serial fast path
+        pool.scope_chunks(100, 8, &|_, _| true); // pooled path
+        pool.scope_chunks(0, 8, &|_, _| true); // empty: not dispatched
+        assert_eq!(pool.jobs_dispatched(), 2);
+    }
+}

@@ -138,10 +138,11 @@ fn random_engine_reproduces_the_fused_sampler_bit_identically() {
     let ms = MapSpace::with_defaults(&arch, &layer);
     let pm = PerfModel::new(&arch);
     let eval = |m: &Mapping| pm.evaluate(&layer, m).latency_cycles;
+    let pmap = ParallelMapper::new(2);
     for batch in [1usize, 7, 16, budget] {
         let mut engine = RandomSearch::new(base_seed);
         assert_eq!(engine.name(), "random");
-        let out = run_search(&mut engine, &ms, budget, batch, 0, 2, None, &eval);
+        let out = run_search(&mut engine, &ms, budget, batch, 0, &pmap, None, &eval);
         let (score, mapping) = out.best.clone().expect("engine winner");
         assert_eq!(score, legacy.score, "batch {batch}");
         assert_eq!(mapping, legacy.mapping, "batch {batch}");

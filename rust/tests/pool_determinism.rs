@@ -1,0 +1,190 @@
+//! Guarantees of the persistent worker pool and the two new hot-path
+//! memoizations (genome dedup, incremental nest re-evaluation):
+//!
+//! * **Thread-count determinism, all engines** — whole-network plans are
+//!   bit-identical at 1, 2, 4 and 8 pool threads for every search engine
+//!   (random, GA, SA, hill-climb) under every metric, on chains and on
+//!   graph workloads alike. The pool only changes who scores a candidate,
+//!   never which candidates are scored or how ties break.
+//! * **Pool persistence** — one `NetworkSearch` spawns its workers once;
+//!   consecutive multi-metric runs reuse the same threads (the dispatch
+//!   counter grows, the worker count does not) and reproduce identical
+//!   plans.
+//! * **Genome memo** — a GA whose offspring duplicate already-scored
+//!   genomes prices them from the per-search memo (`genome_hits > 0`)
+//!   without changing any winner (memo on ≡ memo off).
+//! * **Delta re-evaluation** — SA neighbor chains share unchanged loop
+//!   nests with their parents; the per-nest aggregate cache is exercised
+//!   (`delta_hits > 0`) while staying bit-identical to full evaluation.
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::workload::zoo;
+
+fn cfg(budget: usize, seed: u64, threads: usize, cache: bool) -> MapperConfig {
+    MapperConfig {
+        budget: Budget::Evaluations(budget),
+        seed,
+        threads,
+        cache,
+        refine_passes: 1,
+        ..Default::default()
+    }
+}
+
+fn assert_plans_identical(a: &NetworkPlan, b: &NetworkPlan, what: &str) {
+    assert_eq!(a.total_sequential, b.total_sequential, "{what}: sequential total");
+    assert_eq!(a.total_overlapped, b.total_overlapped, "{what}: overlapped total");
+    assert_eq!(a.total_transformed, b.total_transformed, "{what}: transformed total");
+    assert_eq!(a.mappings_evaluated, b.mappings_evaluated, "{what}: evaluated count");
+    assert_eq!(a.layers.len(), b.layers.len(), "{what}: layer count");
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.mapping, y.mapping, "{what}: mapping of `{}`", x.name);
+        assert_eq!(x.stats, y.stats, "{what}: stats of `{}`", x.name);
+        assert_eq!(x.overlap, y.overlap, "{what}: overlap of `{}`", x.name);
+        assert_eq!(x.transform, y.transform, "{what}: transform of `{}`", x.name);
+    }
+}
+
+const ALGOS: [SearchAlgo; 4] =
+    [SearchAlgo::Random, SearchAlgo::Genetic, SearchAlgo::Annealing, SearchAlgo::HillClimb];
+
+#[test]
+fn every_engine_and_metric_is_thread_count_independent_on_chains() {
+    // The tentpole's acceptance bar: routing every parallel section
+    // through the persistent pool must leave plans bit-identical at any
+    // thread count — for the random sampler and all guided engines, under
+    // all three optimization metrics.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    for algo in ALGOS {
+        for metric in [Metric::Sequential, Metric::Overlap, Metric::Transform] {
+            let mut reference: Option<NetworkPlan> = None;
+            for threads in [1usize, 2, 4, 8] {
+                let mut c = cfg(18, 11, threads, true);
+                c.algo = algo;
+                c.optimize.population = 6;
+                let plan = NetworkSearch::new(&arch, c, SearchStrategy::Forward).run(&net, metric);
+                match &reference {
+                    None => reference = Some(plan),
+                    Some(r) => assert_plans_identical(
+                        r,
+                        &plan,
+                        &format!("{algo:?}/{metric:?} @ {threads} threads"),
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_search_is_thread_count_independent_on_the_pool() {
+    // Same bar on a branched workload: the branch-aware topological
+    // engine fans pair analyses and candidate scoring over the pool too.
+    let arch = Arch::dram_pim_small();
+    let g = zoo::resnet18_graph();
+    for algo in [SearchAlgo::Random, SearchAlgo::Genetic] {
+        let mut reference: Option<NetworkPlan> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let mut c = cfg(6, 7, threads, true);
+            c.algo = algo;
+            c.optimize.population = 4;
+            c.refine_passes = 0;
+            let plan = NetworkSearch::new(&arch, c, SearchStrategy::Forward)
+                .run_graph(&g, Metric::Transform);
+            match &reference {
+                None => reference = Some(plan),
+                Some(r) => {
+                    assert_plans_identical(r, &plan, &format!("{algo:?} graph @ {threads} threads"))
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_pool_is_reused_across_consecutive_metric_runs() {
+    // The pool is spawned once per `NetworkSearch` and every run drains
+    // it: consecutive baseline matrices reuse the same worker threads
+    // (worker count constant, dispatch counter strictly growing) and
+    // reproduce identical plans.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let search = NetworkSearch::new(&arch, cfg(12, 5, 4, true), SearchStrategy::Forward);
+    assert_eq!(search.pool_worker_count(), 3, "threads=4 => 3 workers + the caller");
+
+    let (a_seq, a_ov, a_tr) = search.run_all_metrics(&net);
+    let after_first = search.pool_jobs_dispatched();
+    assert!(after_first > 0, "the matrix must dispatch pool jobs");
+    assert_eq!(search.pool_worker_count(), 3, "no workers spawned or lost mid-run");
+
+    let (b_seq, b_ov, b_tr) = search.run_all_metrics(&net);
+    let after_second = search.pool_jobs_dispatched();
+    assert!(after_second > after_first, "the second matrix must reuse (and drain) the same pool");
+    assert_eq!(search.pool_worker_count(), 3, "still the same worker threads");
+
+    assert_plans_identical(&a_seq, &b_seq, "replayed sequential");
+    assert_plans_identical(&a_ov, &b_ov, "replayed overlap");
+    assert_plans_identical(&a_tr, &b_tr, "replayed transform");
+}
+
+#[test]
+fn ga_duplicate_offspring_hit_the_genome_memo_without_changing_winners() {
+    // With crossover and mutation off, every post-initial GA offspring is
+    // a verbatim clone of an already-scored tournament winner — the
+    // degenerate case that makes duplicate pricing certain. The memo must
+    // absorb those duplicates (`genome_hits > 0`) and must not change a
+    // single winner relative to the memo-less run (the memo is keyed by
+    // the full mapping fingerprint and only short-circuits the price of a
+    // genome the same search call already scored).
+    let arch = Arch::dram_pim();
+    let net = zoo::mobilenet();
+    let tune = |cache: bool| {
+        let mut c = cfg(24, 3, 2, cache);
+        c.algo = SearchAlgo::Genetic;
+        c.optimize.population = 8;
+        c.optimize.crossover_rate = 0.0;
+        c.optimize.mutation_rate = 0.0;
+        c
+    };
+    let memo = NetworkSearch::new(&arch, tune(true), SearchStrategy::Forward);
+    let with_memo = memo.run(&net, Metric::Sequential);
+    let stats = memo.cache_stats();
+    assert!(
+        stats.genome_hits > 0,
+        "cloned offspring must be priced from the genome memo: {stats:?}"
+    );
+
+    let without_memo = NetworkSearch::new(&arch, tune(false), SearchStrategy::Forward)
+        .run(&net, Metric::Sequential);
+    assert_plans_identical(&with_memo, &without_memo, "genome memo on vs off");
+}
+
+#[test]
+fn sa_neighbor_moves_exercise_delta_reevaluation_bit_identically() {
+    // SA proposals are neighbor edits of the incumbent chain states, so
+    // most loop nests survive from one evaluation to the next — exactly
+    // what the per-nest aggregate cache feeds on. The cached evaluator
+    // must be hit (`delta_hits > 0`) and must reproduce the uncached
+    // plans exactly (its per-nest aggregates are the same integer sums
+    // `PerfModel::evaluate` folds, just computed once per distinct nest).
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let tune = |cache: bool| {
+        let mut c = cfg(24, 9, 2, cache);
+        c.algo = SearchAlgo::Annealing;
+        c.optimize.population = 4;
+        c
+    };
+    let cached = NetworkSearch::new(&arch, tune(true), SearchStrategy::Forward);
+    let with_delta = cached.run(&net, Metric::Sequential);
+    let stats = cached.cache_stats();
+    assert!(
+        stats.delta_hits > 0,
+        "neighbor chains must hit the per-nest aggregate cache: {stats:?}"
+    );
+
+    let without_delta = NetworkSearch::new(&arch, tune(false), SearchStrategy::Forward)
+        .run(&net, Metric::Sequential);
+    assert_plans_identical(&with_delta, &without_delta, "delta re-evaluation on vs off");
+}

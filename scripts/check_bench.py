@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Perf-regression guard over the figure-bench JSON records.
+
+The CI bench-smoke job writes *fresh* records (``BENCH_*.fresh.json``,
+via ``FOPIM_BENCH_JSON``) next to the *committed baselines*
+(``rust/BENCH_fig14.json``, ``rust/BENCH_convergence.json``). This script
+compares the two and exits non-zero when the hot path regressed:
+
+* **fig14** — the warm pipelined multi-metric matrix must not be slower
+  than the serial three-pass reference: ``pipeline_speedup_warm >= 1.0``
+  (an absolute check on the fresh record, no baseline needed).
+* **convergence** — for every ``<net>_best_match_pct`` key the baseline
+  records (the budget fraction at which the best guided engine matched
+  the random sampler's bar), the fresh run must still match the bar and
+  must not need more than ``REL_TOLERANCE`` (20%) extra budget fraction.
+
+A baseline with ``"provisional": 1`` is a placeholder committed before
+real hardware numbers existed: relative comparisons are skipped and the
+script prints how to promote the fresh record to the new baseline.
+
+Stdlib only — no pip installs. Usage (from ``rust/``):
+
+    python3 ../scripts/check_bench.py \
+        --fig14 BENCH_fig14.fresh.json --fig14-baseline BENCH_fig14.json \
+        --convergence BENCH_convergence.fresh.json \
+        --convergence-baseline BENCH_convergence.json
+"""
+
+import argparse
+import json
+import sys
+
+REL_TOLERANCE = 1.2  # fresh budget fraction may exceed baseline by <= 20%
+
+
+def load(path, required):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        if required:
+            print(f"error: bench record `{path}` not found", file=sys.stderr)
+            sys.exit(2)
+        print(f"note: no baseline at `{path}`; skipping relative checks")
+        return None
+    except json.JSONDecodeError as e:
+        print(f"error: bench record `{path}` is not valid JSON: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def is_provisional(baseline, path):
+    if baseline is not None and baseline.get("provisional"):
+        print(
+            f"note: baseline `{path}` is provisional (placeholder numbers); "
+            "skipping relative checks.\n"
+            "      To promote real numbers: run the bench with "
+            "FOPIM_BENCH_JSON=<fresh>.json, then copy the fresh record over "
+            "the committed baseline and drop its `provisional` field."
+        )
+        return True
+    return False
+
+
+def check_fig14(fresh_path, baseline_path):
+    fresh = load(fresh_path, required=True)
+    failures = []
+    warm = fresh.get("pipeline_speedup_warm")
+    if warm is None:
+        failures.append(f"{fresh_path}: missing `pipeline_speedup_warm`")
+    elif warm < 1.0:
+        failures.append(
+            f"{fresh_path}: warm pipelined matrix slower than the serial "
+            f"three-pass reference (speedup {warm:.3f} < 1.0)"
+        )
+    else:
+        print(f"fig14: warm pipeline speedup {warm:.2f}x (>= 1.0) OK")
+    baseline = load(baseline_path, required=False)
+    if baseline is not None and not is_provisional(baseline, baseline_path):
+        base_warm = baseline.get("pipeline_speedup_warm")
+        if base_warm is not None and warm is not None:
+            print(
+                f"fig14: warm speedup {warm:.2f}x vs baseline {base_warm:.2f}x "
+                "(informational; only the >= 1.0 floor gates)"
+            )
+    return failures
+
+
+def check_convergence(fresh_path, baseline_path):
+    fresh = load(fresh_path, required=True)
+    baseline = load(baseline_path, required=False)
+    if baseline is None or is_provisional(baseline, baseline_path):
+        return []
+    failures = []
+    for key, base_pct in baseline.items():
+        if not key.endswith("_best_match_pct"):
+            continue
+        net = key[: -len("_best_match_pct")]
+        fresh_pct = fresh.get(key)
+        if fresh_pct is None:
+            failures.append(f"{fresh_path}: missing `{key}` (baseline has it)")
+            continue
+        if base_pct < 0:
+            # The baseline never matched the random bar: nothing to hold
+            # the fresh run to.
+            continue
+        if fresh_pct < 0:
+            failures.append(
+                f"{net}: guided engines no longer reach the random bar "
+                f"(baseline matched at {base_pct:.0f}% of the budget)"
+            )
+        elif fresh_pct > base_pct * REL_TOLERANCE:
+            failures.append(
+                f"{net}: guided engines need {fresh_pct:.0f}% of the budget to "
+                f"match the random bar; baseline needed {base_pct:.0f}% "
+                f"(allowed: <= {base_pct * REL_TOLERANCE:.0f}%)"
+            )
+        else:
+            print(
+                f"convergence: {net} matched the random bar at {fresh_pct:.0f}% "
+                f"of the budget (baseline {base_pct:.0f}%) OK"
+            )
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fig14", required=True, help="fresh fig14 record")
+    ap.add_argument("--fig14-baseline", default=None, help="committed fig14 baseline")
+    ap.add_argument("--convergence", required=True, help="fresh convergence record")
+    ap.add_argument(
+        "--convergence-baseline", default=None, help="committed convergence baseline"
+    )
+    args = ap.parse_args()
+
+    failures = []
+    failures += check_fig14(args.fig14, args.fig14_baseline or "")
+    failures += check_convergence(args.convergence, args.convergence_baseline or "")
+    if failures:
+        print("\nperf-regression guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("perf-regression guard passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
