@@ -98,12 +98,12 @@ pub fn run_algorithms(
     refine_passes: usize,
     strategy: SearchStrategy,
 ) -> AlgTotals {
-    let cfg = MapperConfig {
-        budget: Budget::Evaluations(budget),
-        seed,
-        refine_passes,
-        ..Default::default()
-    };
+    let cfg = MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(seed)
+        .refine_passes(refine_passes)
+        .build()
+        .expect("valid bench config");
     let search = NetworkSearch::new(arch, cfg, strategy);
     let (seq_plan, ov_plan, tr_plan) = search.run_all_metrics(net);
     let totals = Algorithm::ALL

@@ -27,17 +27,17 @@ use fastoverlapim::report::{cycles, Table};
 use fastoverlapim::workload::zoo;
 
 fn plan_total(arch: &Arch, net: &Network, algo: SearchAlgo, budget: usize, threads: usize) -> u64 {
-    let mut cfg = MapperConfig {
-        budget: Budget::Evaluations(budget),
-        seed: common::seed(),
-        refine_passes: 0,
-        threads,
-        ..Default::default()
-    };
-    cfg.algo = algo;
     // Population scales with the budget so even the smallest fraction
     // gets a couple of generations of guided edits.
-    cfg.optimize.population = (budget / 4).clamp(4, 16);
+    let cfg = MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(common::seed())
+        .refine_passes(0)
+        .threads(threads)
+        .algo(algo)
+        .population((budget / 4).clamp(4, 16))
+        .build()
+        .expect("valid bench config");
     NetworkSearch::new(arch, cfg, SearchStrategy::Forward)
         .run(net, Metric::Transform)
         .total_transformed

@@ -22,12 +22,13 @@ fn main() {
     let arch = Arch::dram_pim();
     let budget = common::budget(80);
     for net in [zoo::resnet18(), zoo::vgg16()] {
-        let cfg = MapperConfig {
-            budget: Budget::Evaluations(budget),
-            seed: common::seed(),
-            refine_passes: 0, // Best Original: no pair-aware search at all
-            ..Default::default()
-        };
+        // Best Original: no pair-aware search at all (refine 0).
+        let cfg = MapperConfig::builder()
+            .budget_evals(budget)
+            .seed(common::seed())
+            .refine_passes(0)
+            .build()
+            .expect("valid bench config");
         let plan =
             NetworkSearch::new(&arch, cfg, SearchStrategy::Forward).run(&net, Metric::Sequential);
         let mut t = Table::new(

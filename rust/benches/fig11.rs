@@ -27,16 +27,13 @@ use fastoverlapim::workload::zoo;
 use std::time::Duration;
 
 fn engine_config(engine: AnalysisEngine, target: Duration) -> MapperConfig {
-    let mut cfg = MapperConfig {
-        budget: Budget::Calibrated {
-            target,
-            probe_draws: common::env_u64("FOPIM_PROBE", 16) as usize,
-        },
-        seed: common::seed(),
-        refine_passes: 0,
-        engine,
-        ..Default::default()
-    };
+    let mut cfg = MapperConfig::builder()
+        .calibrated(target, common::env_u64("FOPIM_PROBE", 16) as usize)
+        .seed(common::seed())
+        .refine_passes(0)
+        .engine(engine)
+        .build()
+        .expect("valid bench config");
     // Modest probe count for BOTH engines so a single exhaustive pair
     // evaluation cannot dominate the calibration probe by minutes.
     // Identical probing keeps the comparison fair.

@@ -169,18 +169,18 @@ fn main() {
     }
     sweep.push(max_threads.max(1));
     for workers in sweep {
-        let cfg = fastoverlapim::search::MapperConfig {
-            budget: Budget::Evaluations(budget),
-            seed: common::seed(),
-            refine_passes: 0,
-            threads: workers,
-            // Measure ParallelMapper scaling in isolation: with lookahead
-            // on, even the 1-thread row would overlap next-layer
-            // enumeration on a helper thread and deflate the baseline.
-            pipeline: false,
-            lookahead: false,
-            ..Default::default()
-        };
+        // Measure ParallelMapper scaling in isolation: with lookahead
+        // on, even the 1-thread row would overlap next-layer enumeration
+        // on a helper thread and deflate the baseline.
+        let cfg = fastoverlapim::search::MapperConfig::builder()
+            .budget_evals(budget)
+            .seed(common::seed())
+            .refine_passes(0)
+            .threads(workers)
+            .pipeline(false)
+            .lookahead(false)
+            .build()
+            .expect("valid bench config");
         let plan = NetworkSearch::new(&arch, cfg, SearchStrategy::Forward)
             .run(&net, Metric::Transform);
         let secs = plan.wallclock.as_secs_f64().max(1e-9);
@@ -216,13 +216,13 @@ fn main() {
     // job queries), the configuration the ROADMAP speedup target meters.
     let mm_budget = common::env_u64("FOPIM_MM_BUDGET", 12) as usize;
     let vgg = fastoverlapim::workload::zoo::vgg16();
-    let base_cfg = fastoverlapim::search::MapperConfig {
-        budget: Budget::Evaluations(mm_budget),
-        seed: common::seed(),
-        refine_passes: 0,
-        threads: max_threads.max(1),
-        ..Default::default()
-    };
+    let base_cfg = fastoverlapim::search::MapperConfig::builder()
+        .budget_evals(mm_budget)
+        .seed(common::seed())
+        .refine_passes(0)
+        .threads(max_threads.max(1))
+        .build()
+        .expect("valid bench config");
     let mut serial_cfg = base_cfg.clone();
     serial_cfg.pipeline = false;
     serial_cfg.lookahead = false;

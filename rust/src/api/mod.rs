@@ -1,0 +1,821 @@
+//! The typed request/response API — the single wire format.
+//!
+//! Every programmatic entry point speaks the same versioned JSON schema:
+//! `repro serve` (the mapping-as-a-service server), `repro request` (its
+//! client), and `repro search --json` (one-shot CLI emission). The schema
+//! is deliberately tiny and std-only — [`crate::report::Json`] both ways,
+//! no serde — and versioned with a top-level `"v": 1` so later PRs can
+//! evolve it without breaking recorded responses.
+//!
+//! Shapes (documented in `rust/ARCHITECTURE.md` §11):
+//!
+//! * [`SearchRequest`] — what to search: a network (zoo name or inline
+//!   YAML), an architecture (preset name or inline YAML), metric, a
+//!   deterministic evaluation budget, engine, strategy, seed.
+//! * [`SearchResponse`] — a deterministic `plan` section (totals,
+//!   per-layer mappings, per-edge overlap) that is **byte-identical** for
+//!   identical plan keys, plus a nondeterministic `server` section
+//!   (timings, cache/pool counters) that callers must ignore when
+//!   comparing plans.
+//! * [`ApiError`] — a closed set of stable error codes
+//!   ([`ApiErrorKind`]) mapped onto HTTP statuses and the CLI's exit-2
+//!   convention.
+//!
+//! Determinism is the contract: a request's plan is a pure function of
+//! its [`plan_key`] — `(arch fingerprint, network fingerprint, metric,
+//! budget, algo, strategy, seed, refine)` — which is why requests only
+//! carry [`Budget::Evaluations`]-style budgets (wall-clock budgets are
+//! timing-dependent and would break `same key ⇒ same plan`).
+
+use crate::arch::{arch_from_yaml, Arch};
+use crate::optimize::SearchAlgo;
+use crate::overlap::CacheStats;
+use crate::report::Json;
+use crate::search::{
+    MapperConfig, Metric, MiddleHeuristic, NetworkPlan, NetworkSearch, SearchStrategy,
+};
+use crate::util::Fnv64;
+use crate::workload::{parser, zoo, Network, NetworkGraph};
+
+/// Wire-format schema version emitted and required by this build.
+pub const API_VERSION: u64 = 1;
+
+/// Stable machine-readable error codes — a *closed* enum: new failure
+/// modes must map onto one of these rather than inventing ad-hoc codes,
+/// so clients can switch on them forever.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ApiErrorKind {
+    /// Malformed request: bad JSON, a missing or ill-typed field, an
+    /// unknown enum value, or a config that fails builder validation.
+    BadRequest,
+    /// The named architecture or network preset does not exist.
+    UnknownPreset,
+    /// The network parsed but failed semantic validation (channel
+    /// mismatches, cycles, ambiguous sinks, ...).
+    InvalidNetwork,
+    /// Admission control turned the request away; retry later.
+    Busy,
+    /// The search itself failed — a server-side bug, never the client's
+    /// fault.
+    Internal,
+}
+
+impl ApiErrorKind {
+    /// The stable wire code (pinned by `tests/cli_errors.rs`).
+    pub fn code(self) -> &'static str {
+        match self {
+            ApiErrorKind::BadRequest => "bad_request",
+            ApiErrorKind::UnknownPreset => "unknown_preset",
+            ApiErrorKind::InvalidNetwork => "invalid_network",
+            ApiErrorKind::Busy => "busy",
+            ApiErrorKind::Internal => "internal",
+        }
+    }
+
+    /// The HTTP status the serve layer maps this code onto.
+    pub fn http_status(self) -> (u16, &'static str) {
+        match self {
+            ApiErrorKind::BadRequest => (400, "Bad Request"),
+            ApiErrorKind::UnknownPreset => (404, "Not Found"),
+            ApiErrorKind::InvalidNetwork => (422, "Unprocessable Entity"),
+            ApiErrorKind::Busy => (429, "Too Many Requests"),
+            ApiErrorKind::Internal => (500, "Internal Server Error"),
+        }
+    }
+
+    /// Inverse of [`ApiErrorKind::code`].
+    pub fn from_code(code: &str) -> Option<ApiErrorKind> {
+        match code {
+            "bad_request" => Some(ApiErrorKind::BadRequest),
+            "unknown_preset" => Some(ApiErrorKind::UnknownPreset),
+            "invalid_network" => Some(ApiErrorKind::InvalidNetwork),
+            "busy" => Some(ApiErrorKind::Busy),
+            "internal" => Some(ApiErrorKind::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// A typed API error: a stable code plus a human-readable message.
+///
+/// Displays as `code: message`, which is what the CLI prints (behind its
+/// `repro: error: ` prefix) before exiting 2, and what the server wraps
+/// as `{"v":1,"error":{"code":...,"message":...}}`.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    pub kind: ApiErrorKind,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn new(kind: ApiErrorKind, message: impl Into<String>) -> ApiError {
+        ApiError { kind, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ApiError {
+        ApiError::new(ApiErrorKind::BadRequest, message)
+    }
+
+    pub fn unknown_preset(message: impl Into<String>) -> ApiError {
+        ApiError::new(ApiErrorKind::UnknownPreset, message)
+    }
+
+    pub fn invalid_network(message: impl Into<String>) -> ApiError {
+        ApiError::new(ApiErrorKind::InvalidNetwork, message)
+    }
+
+    pub fn busy(message: impl Into<String>) -> ApiError {
+        ApiError::new(ApiErrorKind::Busy, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError::new(ApiErrorKind::Internal, message)
+    }
+
+    /// The wire shape: `{"v":1,"error":{"code":...,"message":...}}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("v".into(), Json::num(API_VERSION as u32)),
+            (
+                "error".into(),
+                Json::Obj(vec![
+                    ("code".into(), Json::str(self.kind.code())),
+                    ("message".into(), Json::str(self.message.clone())),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Re-hydrate a wire error (the `repro request` client uses this to
+    /// print the server's code + message verbatim).
+    pub fn parse(text: &str) -> Option<ApiError> {
+        let doc = Json::parse(text).ok()?;
+        let err = doc.get("error")?;
+        let kind = ApiErrorKind::from_code(err.get("code")?.as_str()?)?;
+        let message = err.get("message")?.as_str()?.to_string();
+        Some(ApiError { kind, message })
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.kind.code(), self.message)
+    }
+}
+
+/// A network or architecture reference: a preset name, or inline YAML.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Source {
+    /// A zoo / preset name (`"resnet18"`, `"dram"`).
+    Name(String),
+    /// Inline YAML text (`{"yaml": "..."}` on the wire).
+    Yaml(String),
+}
+
+impl Source {
+    fn to_json(&self) -> Json {
+        match self {
+            Source::Name(n) => Json::str(n.clone()),
+            Source::Yaml(y) => Json::Obj(vec![("yaml".into(), Json::str(y.clone()))]),
+        }
+    }
+
+    fn from_json(field: &str, j: &Json) -> Result<Source, ApiError> {
+        if let Some(name) = j.as_str() {
+            return Ok(Source::Name(name.to_string()));
+        }
+        if let Some(yaml) = j.get("yaml").and_then(Json::as_str) {
+            return Ok(Source::Yaml(yaml.to_string()));
+        }
+        Err(ApiError::bad_request(format!(
+            "`{field}` must be a preset name string or {{\"yaml\": \"...\"}}"
+        )))
+    }
+}
+
+/// A resolved `network` reference: a layer chain or a computation graph.
+#[derive(Debug, Clone)]
+pub enum RequestWorkload {
+    Chain(Network),
+    Graph(NetworkGraph),
+}
+
+impl RequestWorkload {
+    pub fn name(&self) -> &str {
+        match self {
+            RequestWorkload::Chain(n) => &n.name,
+            RequestWorkload::Graph(g) => &g.name,
+        }
+    }
+
+    /// Shape fingerprint, tagged by representation: a chain and its
+    /// graph promotion run different sweeps, so they must never share a
+    /// plan-cache key.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        match self {
+            RequestWorkload::Chain(n) => {
+                h.write(1);
+                h.write(n.fingerprint());
+            }
+            RequestWorkload::Graph(g) => {
+                h.write(2);
+                h.write(g.fingerprint());
+            }
+        }
+        h.finish()
+    }
+}
+
+/// A versioned search request — everything that determines the plan,
+/// and nothing that doesn't (no thread counts, no cache toggles: those
+/// are server-side serving knobs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchRequest {
+    /// What to map: zoo chain/graph preset name, or inline YAML (chain
+    /// or graph syntax — auto-detected).
+    pub network: Source,
+    /// Target architecture: `dram`/`reram`/`small`, or inline YAML.
+    pub arch: Source,
+    /// Which metric the per-layer searches optimize.
+    pub metric: Metric,
+    /// Deterministic per-layer draw budget ([`crate::search::Budget::Evaluations`]).
+    /// Wall-clock budget variants are deliberately not expressible here:
+    /// they would break `same key ⇒ same plan`.
+    pub budget_evals: usize,
+    /// Search engine.
+    pub algo: SearchAlgo,
+    /// Whole-network traversal strategy.
+    pub strategy: SearchStrategy,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Coordinate-descent refinement sweeps.
+    pub refine_passes: usize,
+    /// Replay the winning plan through the validation simulator before
+    /// responding (server-side assertion; does not change the plan).
+    pub verify: bool,
+}
+
+impl Default for SearchRequest {
+    fn default() -> Self {
+        let cfg = MapperConfig::default();
+        SearchRequest {
+            network: Source::Name("resnet18".into()),
+            arch: Source::Name("dram".into()),
+            metric: Metric::Transform,
+            budget_evals: 100,
+            algo: SearchAlgo::Random,
+            strategy: SearchStrategy::Forward,
+            seed: cfg.seed,
+            refine_passes: cfg.refine_passes,
+            verify: false,
+        }
+    }
+}
+
+impl SearchRequest {
+    /// Serialize to the versioned wire shape.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("v".into(), Json::num(API_VERSION as u32)),
+            ("network".into(), self.network.to_json()),
+            ("arch".into(), self.arch.to_json()),
+            ("metric".into(), Json::str(metric_tag(self.metric))),
+            ("budget".into(), Json::Num(self.budget_evals as f64)),
+            ("algo".into(), Json::str(self.algo.name())),
+            ("strategy".into(), Json::str(strategy_tag(self.strategy))),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("refine".into(), Json::Num(self.refine_passes as f64)),
+            ("verify".into(), Json::Bool(self.verify)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse a request document. Every field except `network` is
+    /// optional and defaults as in [`SearchRequest::default`]; unknown
+    /// versions and ill-typed fields are [`ApiErrorKind::BadRequest`].
+    pub fn parse(text: &str) -> Result<SearchRequest, ApiError> {
+        let doc = Json::parse(text)
+            .map_err(|e| ApiError::bad_request(format!("invalid JSON: {e}")))?;
+        SearchRequest::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<SearchRequest, ApiError> {
+        if !matches!(doc, Json::Obj(_)) {
+            return Err(ApiError::bad_request("request must be a JSON object"));
+        }
+        if let Some(v) = doc.get("v") {
+            let v = v
+                .as_u64()
+                .ok_or_else(|| ApiError::bad_request("`v` must be a whole number"))?;
+            if v != API_VERSION {
+                return Err(ApiError::bad_request(format!(
+                    "unsupported schema version {v} (this build speaks v{API_VERSION})"
+                )));
+            }
+        }
+        let defaults = SearchRequest::default();
+        let network = doc
+            .get("network")
+            .ok_or_else(|| ApiError::bad_request("missing required field `network`"))
+            .and_then(|j| Source::from_json("network", j))?;
+        let arch = match doc.get("arch") {
+            Some(j) => Source::from_json("arch", j)?,
+            None => defaults.arch,
+        };
+        let metric = match doc.get("metric") {
+            Some(j) => {
+                let tag = j
+                    .as_str()
+                    .ok_or_else(|| ApiError::bad_request("`metric` must be a string"))?;
+                parse_metric(tag).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "unknown metric `{tag}` (valid: seq|overlap|transform)"
+                    ))
+                })?
+            }
+            None => defaults.metric,
+        };
+        let algo = match doc.get("algo") {
+            Some(j) => {
+                let tag = j
+                    .as_str()
+                    .ok_or_else(|| ApiError::bad_request("`algo` must be a string"))?;
+                SearchAlgo::parse(tag).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "unknown algo `{tag}` (valid: random|ga|sa|hill)"
+                    ))
+                })?
+            }
+            None => defaults.algo,
+        };
+        let strategy = match doc.get("strategy") {
+            Some(j) => {
+                let tag = j
+                    .as_str()
+                    .ok_or_else(|| ApiError::bad_request("`strategy` must be a string"))?;
+                parse_strategy(tag).ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "unknown strategy `{tag}` (valid: forward|backward|middle|middle2)"
+                    ))
+                })?
+            }
+            None => defaults.strategy,
+        };
+        let u64_field = |name: &str, default: u64| -> Result<u64, ApiError> {
+            match doc.get(name) {
+                Some(j) => j.as_u64().ok_or_else(|| {
+                    ApiError::bad_request(format!("`{name}` must be a non-negative whole number"))
+                }),
+                None => Ok(default),
+            }
+        };
+        let budget_evals = u64_field("budget", defaults.budget_evals as u64)? as usize;
+        if budget_evals == 0 {
+            return Err(ApiError::bad_request("`budget` must be >= 1"));
+        }
+        let seed = u64_field("seed", defaults.seed)?;
+        let refine_passes = u64_field("refine", defaults.refine_passes as u64)? as usize;
+        let verify = match doc.get("verify") {
+            Some(j) => j
+                .as_bool()
+                .ok_or_else(|| ApiError::bad_request("`verify` must be a boolean"))?,
+            None => defaults.verify,
+        };
+        Ok(SearchRequest {
+            network,
+            arch,
+            metric,
+            budget_evals,
+            algo,
+            strategy,
+            seed,
+            refine_passes,
+            verify,
+        })
+    }
+
+    /// Resolve the `arch` reference. Unknown preset names are
+    /// [`ApiErrorKind::UnknownPreset`]; YAML that fails to parse is
+    /// [`ApiErrorKind::BadRequest`].
+    pub fn resolve_arch(&self) -> Result<Arch, ApiError> {
+        match &self.arch {
+            Source::Name(name) => match name.as_str() {
+                "dram" => Ok(Arch::dram_pim()),
+                "reram" => Ok(Arch::reram_pim()),
+                "small" => Ok(Arch::dram_pim_small()),
+                other => Err(ApiError::unknown_preset(format!(
+                    "unknown arch preset `{other}` (valid: dram|reram|small)"
+                ))),
+            },
+            Source::Yaml(text) => arch_from_yaml(text)
+                .map_err(|e| ApiError::bad_request(format!("parsing arch YAML: {e}"))),
+        }
+    }
+
+    /// Resolve the `network` reference. Unknown preset names are
+    /// [`ApiErrorKind::UnknownPreset`]; YAML that parses but fails
+    /// validation is [`ApiErrorKind::InvalidNetwork`].
+    pub fn resolve_workload(&self) -> Result<RequestWorkload, ApiError> {
+        match &self.network {
+            Source::Name(name) => {
+                if let Some(g) = zoo::graph_by_name(name) {
+                    return Ok(RequestWorkload::Graph(g));
+                }
+                if let Some(net) = zoo::by_name(name) {
+                    return Ok(RequestWorkload::Chain(net));
+                }
+                let chains: Vec<&str> = zoo::all().iter().map(|(n, _)| *n).collect();
+                let graphs: Vec<&str> = zoo::graphs().iter().map(|(n, _)| *n).collect();
+                Err(ApiError::unknown_preset(format!(
+                    "unknown network preset `{name}` (chains: {}; graphs: {})",
+                    chains.join("|"),
+                    graphs.join("|")
+                )))
+            }
+            Source::Yaml(text) => {
+                if parser::yaml_is_graph(text) {
+                    parser::graph_from_yaml(text)
+                        .map(RequestWorkload::Graph)
+                        .map_err(|e| ApiError::invalid_network(format!("network YAML: {e}")))
+                } else {
+                    parser::network_from_yaml(text)
+                        .map(RequestWorkload::Chain)
+                        .map_err(|e| ApiError::invalid_network(format!("network YAML: {e}")))
+                }
+            }
+        }
+    }
+
+    /// Build the validated [`MapperConfig`] this request implies.
+    /// `threads` is a serving knob, not a request field — plans are
+    /// bit-identical at any thread count for evaluation budgets.
+    pub fn mapper_config(&self, threads: usize) -> Result<MapperConfig, ApiError> {
+        MapperConfig::builder()
+            .budget_evals(self.budget_evals)
+            .algo(self.algo)
+            .seed(self.seed)
+            .refine_passes(self.refine_passes)
+            .verify(self.verify)
+            .threads(threads)
+            .build()
+            .map_err(|e| ApiError::bad_request(e.to_string()))
+    }
+}
+
+/// The deterministic plan-cache key: same key ⇒ bit-identical plan.
+/// Hashes the resolved shapes (arch + workload fingerprints) rather than
+/// the request text, so `"resnet18"` and its exported YAML share an
+/// entry, while a chain and its graph promotion do not.
+pub fn plan_key(req: &SearchRequest, arch: &Arch, workload: &RequestWorkload) -> u64 {
+    let mut h = Fnv64::new();
+    h.write(API_VERSION);
+    h.write(arch.fingerprint());
+    h.write(workload.fingerprint());
+    h.write(metric_ordinal(req.metric));
+    h.write(req.budget_evals as u64);
+    h.write(algo_ordinal(req.algo));
+    h.write(strategy_ordinal(req.strategy));
+    h.write(req.seed);
+    h.write(req.refine_passes as u64);
+    h.finish()
+}
+
+/// Run a resolved request's search on an existing searcher.
+pub fn run_workload(
+    search: &NetworkSearch<'_>,
+    workload: &RequestWorkload,
+    metric: Metric,
+) -> NetworkPlan {
+    match workload {
+        RequestWorkload::Chain(net) => search.run(net, metric),
+        RequestWorkload::Graph(g) => search.run_graph(g, metric),
+    }
+}
+
+/// A versioned search response: a deterministic `plan` section plus a
+/// nondeterministic `server` section. Renders as
+/// `{"v":1,"plan":{...},"server":{...}}`; plan bytes are the determinism
+/// contract, the server section carries timings and cache counters that
+/// differ run to run.
+#[derive(Debug, Clone)]
+pub struct SearchResponse {
+    /// Rendered deterministic plan payload (see [`plan_to_json`]) —
+    /// kept as the exact byte string so disk-cached plans round-trip
+    /// without any float re-rendering.
+    pub plan_raw: String,
+    /// Serving metadata (timings, cache outcome, pool stats).
+    pub server: Json,
+}
+
+impl SearchResponse {
+    pub fn new(plan: &Json, server: Json) -> SearchResponse {
+        SearchResponse { plan_raw: plan.render(), server }
+    }
+
+    /// Assemble from an already-rendered plan (the disk-cache hit path:
+    /// the stored bytes are spliced in verbatim, guaranteeing
+    /// byte-identity across restarts).
+    pub fn from_raw(plan_raw: String, server: Json) -> SearchResponse {
+        SearchResponse { plan_raw, server }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{{\"v\":{API_VERSION},\"plan\":{},\"server\":{}}}",
+            self.plan_raw,
+            self.server.render()
+        )
+    }
+
+    /// Parse a response document (client side).
+    pub fn parse(text: &str) -> Result<SearchResponse, ApiError> {
+        let doc = Json::parse(text)
+            .map_err(|e| ApiError::bad_request(format!("invalid response JSON: {e}")))?;
+        let plan = doc
+            .get("plan")
+            .ok_or_else(|| ApiError::bad_request("response has no `plan` section"))?;
+        let server = doc.get("server").cloned().unwrap_or(Json::Obj(vec![]));
+        Ok(SearchResponse { plan_raw: plan.render(), server })
+    }
+
+    /// Slice the raw plan bytes out of a rendered response without
+    /// re-parsing — the byte-identity comparisons in the tests (and the
+    /// disk cache) use this so float formatting never round-trips.
+    pub fn extract_plan_raw(text: &str) -> Option<&str> {
+        let prefix = format!("{{\"v\":{API_VERSION},\"plan\":");
+        let rest = text.strip_prefix(prefix.as_str())?;
+        let end = rest.rfind(",\"server\":")?;
+        Some(&rest[..end])
+    }
+}
+
+/// Serialize the deterministic parts of a [`NetworkPlan`]: totals,
+/// per-layer mappings and contributions, per-edge pairwise overlap.
+/// Wall-clock and cache counters are deliberately *excluded* — they vary
+/// run to run and belong in the response's `server` section.
+pub fn plan_to_json(plan: &NetworkPlan, arch: &Arch) -> Json {
+    let layers: Vec<Json> = plan
+        .layers
+        .iter()
+        .map(|l| {
+            let overlap = match &l.overlap {
+                Some(o) => Json::Obj(vec![
+                    ("added".into(), Json::Num(o.added_latency as f64)),
+                    ("saving".into(), Json::Num(o.saving as f64)),
+                    ("fraction".into(), Json::Num(o.overlap_fraction)),
+                ]),
+                None => Json::Null,
+            };
+            let transform = match &l.transform {
+                Some(t) => Json::Obj(vec![
+                    ("added".into(), Json::Num(t.added_latency as f64)),
+                    ("saving".into(), Json::Num(t.saving as f64)),
+                    ("moved_fraction".into(), Json::Num(t.moved_fraction)),
+                    ("penalty".into(), Json::Num(t.penalty_cycles as f64)),
+                ]),
+                None => Json::Null,
+            };
+            Json::Obj(vec![
+                ("index".into(), Json::Num(l.layer_index as f64)),
+                ("name".into(), Json::str(l.name.clone())),
+                ("mapping".into(), Json::str(l.mapping.render(arch))),
+                (
+                    "mapping_fingerprint".into(),
+                    Json::str(format!("{:016x}", l.mapping.fingerprint())),
+                ),
+                ("latency".into(), Json::Num(l.stats.latency_cycles as f64)),
+                ("energy_pj".into(), Json::Num(l.stats.energy_pj)),
+                ("utilization".into(), Json::Num(l.stats.utilization)),
+                ("sequential".into(), Json::Num(l.sequential_contribution() as f64)),
+                ("overlapped".into(), Json::Num(l.overlapped_contribution() as f64)),
+                ("transformed".into(), Json::Num(l.transformed_contribution() as f64)),
+                ("overlap".into(), overlap),
+                ("transform".into(), transform),
+            ])
+        })
+        .collect();
+    let edges: Vec<Json> = plan
+        .edge_overlaps
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("from".into(), Json::Num(e.from as f64)),
+                ("to".into(), Json::Num(e.to as f64)),
+                ("overlap_added".into(), Json::Num(e.overlap.added_latency as f64)),
+                ("transform_added".into(), Json::Num(e.transform.added_latency as f64)),
+                ("saving".into(), Json::Num(e.overlap.saving as f64)),
+                ("fraction".into(), Json::Num(e.overlap.overlap_fraction)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("network".into(), Json::str(plan.network.clone())),
+        ("arch".into(), Json::str(arch.name.clone())),
+        ("strategy".into(), Json::str(strategy_tag(plan.strategy))),
+        ("metric".into(), Json::str(metric_tag(plan.metric))),
+        ("total_sequential".into(), Json::Num(plan.total_sequential as f64)),
+        ("total_overlapped".into(), Json::Num(plan.total_overlapped as f64)),
+        ("total_transformed".into(), Json::Num(plan.total_transformed as f64)),
+        ("mappings_evaluated".into(), Json::Num(plan.mappings_evaluated as f64)),
+        ("layers".into(), Json::Arr(layers)),
+        ("edges".into(), Json::Arr(edges)),
+    ])
+}
+
+/// Serialize the full analysis-cache counters (server section).
+pub fn cache_stats_json(stats: &CacheStats) -> Json {
+    Json::Obj(vec![
+        ("ready_hits".into(), Json::Num(stats.ready_hits as f64)),
+        ("ready_misses".into(), Json::Num(stats.ready_misses as f64)),
+        ("transform_hits".into(), Json::Num(stats.transform_hits as f64)),
+        ("transform_misses".into(), Json::Num(stats.transform_misses as f64)),
+        ("genome_hits".into(), Json::Num(stats.genome_hits as f64)),
+        ("genome_misses".into(), Json::Num(stats.genome_misses as f64)),
+        ("delta_hits".into(), Json::Num(stats.delta_hits as f64)),
+        ("delta_misses".into(), Json::Num(stats.delta_misses as f64)),
+    ])
+}
+
+/// The API's lowercase metric tag (`seq|overlap|transform`).
+pub fn metric_tag(metric: Metric) -> &'static str {
+    match metric {
+        Metric::Sequential => "seq",
+        Metric::Overlap => "overlap",
+        Metric::Transform => "transform",
+    }
+}
+
+/// Inverse of [`metric_tag`] (also accepts `sequential`).
+pub fn parse_metric(tag: &str) -> Option<Metric> {
+    match tag {
+        "seq" | "sequential" => Some(Metric::Sequential),
+        "overlap" => Some(Metric::Overlap),
+        "transform" => Some(Metric::Transform),
+        _ => None,
+    }
+}
+
+/// The API's lowercase strategy tag (`forward|backward|middle|middle2`).
+pub fn strategy_tag(strategy: SearchStrategy) -> &'static str {
+    match strategy {
+        SearchStrategy::Forward => "forward",
+        SearchStrategy::Backward => "backward",
+        SearchStrategy::Middle(MiddleHeuristic::LargestOutput) => "middle",
+        SearchStrategy::Middle(MiddleHeuristic::LargestOverall) => "middle2",
+    }
+}
+
+/// Inverse of [`strategy_tag`].
+pub fn parse_strategy(tag: &str) -> Option<SearchStrategy> {
+    match tag {
+        "forward" => Some(SearchStrategy::Forward),
+        "backward" => Some(SearchStrategy::Backward),
+        "middle" => Some(SearchStrategy::Middle(MiddleHeuristic::LargestOutput)),
+        "middle2" => Some(SearchStrategy::Middle(MiddleHeuristic::LargestOverall)),
+        _ => None,
+    }
+}
+
+fn metric_ordinal(metric: Metric) -> u64 {
+    match metric {
+        Metric::Sequential => 0,
+        Metric::Overlap => 1,
+        Metric::Transform => 2,
+    }
+}
+
+fn algo_ordinal(algo: SearchAlgo) -> u64 {
+    match algo {
+        SearchAlgo::Random => 0,
+        SearchAlgo::Genetic => 1,
+        SearchAlgo::Annealing => 2,
+        SearchAlgo::HillClimb => 3,
+    }
+}
+
+fn strategy_ordinal(strategy: SearchStrategy) -> u64 {
+    match strategy {
+        SearchStrategy::Forward => 0,
+        SearchStrategy::Backward => 1,
+        SearchStrategy::Middle(MiddleHeuristic::LargestOutput) => 2,
+        SearchStrategy::Middle(MiddleHeuristic::LargestOverall) => 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_through_json() {
+        let req = SearchRequest {
+            network: Source::Name("tiny-cnn".into()),
+            arch: Source::Name("small".into()),
+            metric: Metric::Overlap,
+            budget_evals: 12,
+            algo: SearchAlgo::Genetic,
+            strategy: SearchStrategy::Backward,
+            seed: 7,
+            refine_passes: 0,
+            verify: true,
+        };
+        let text = req.render();
+        assert_eq!(SearchRequest::parse(&text).unwrap(), req);
+    }
+
+    #[test]
+    fn request_defaults_apply() {
+        let req = SearchRequest::parse(r#"{"network":"tiny-cnn"}"#).unwrap();
+        assert_eq!(req.metric, Metric::Transform);
+        assert_eq!(req.budget_evals, 100);
+        assert_eq!(req.algo, SearchAlgo::Random);
+        assert_eq!(req.arch, Source::Name("dram".into()));
+    }
+
+    #[test]
+    fn request_rejects_bad_fields() {
+        for (text, want) in [
+            ("{", "invalid JSON"),
+            ("{}", "missing required field `network`"),
+            (r#"{"v":2,"network":"tiny-cnn"}"#, "unsupported schema version"),
+            (r#"{"network":"tiny-cnn","metric":"fast"}"#, "unknown metric"),
+            (r#"{"network":"tiny-cnn","algo":"brute"}"#, "unknown algo"),
+            (r#"{"network":"tiny-cnn","strategy":"up"}"#, "unknown strategy"),
+            (r#"{"network":"tiny-cnn","budget":0}"#, "`budget` must be >= 1"),
+            (r#"{"network":42}"#, "`network` must be"),
+        ] {
+            let err = SearchRequest::parse(text).unwrap_err();
+            assert_eq!(err.kind, ApiErrorKind::BadRequest, "{text}");
+            assert!(err.message.contains(want), "{text}: {}", err.message);
+        }
+    }
+
+    #[test]
+    fn resolution_maps_error_codes() {
+        let mut req = SearchRequest { network: Source::Name("nope".into()), ..Default::default() };
+        assert_eq!(req.resolve_workload().unwrap_err().kind, ApiErrorKind::UnknownPreset);
+        req.arch = Source::Name("tpu".into());
+        assert_eq!(req.resolve_arch().unwrap_err().kind, ApiErrorKind::UnknownPreset);
+        req.network = Source::Yaml("layers:\n  - nonsense".into());
+        assert_eq!(req.resolve_workload().unwrap_err().kind, ApiErrorKind::InvalidNetwork);
+    }
+
+    #[test]
+    fn plan_key_tracks_plan_affecting_fields_only() {
+        let req = SearchRequest {
+            network: Source::Name("tiny-cnn".into()),
+            arch: Source::Name("small".into()),
+            ..Default::default()
+        };
+        let arch = req.resolve_arch().unwrap();
+        let wl = req.resolve_workload().unwrap();
+        let base = plan_key(&req, &arch, &wl);
+        assert_eq!(base, plan_key(&req, &arch, &wl), "stable");
+        let mut seeded = req.clone();
+        seeded.seed += 1;
+        assert_ne!(base, plan_key(&seeded, &arch, &wl));
+        let mut verified = req.clone();
+        verified.verify = true;
+        assert_eq!(base, plan_key(&verified, &arch, &wl), "verify is not plan-affecting");
+    }
+
+    #[test]
+    fn error_codes_are_stable() {
+        let pairs = [
+            (ApiErrorKind::BadRequest, "bad_request", 400),
+            (ApiErrorKind::UnknownPreset, "unknown_preset", 404),
+            (ApiErrorKind::InvalidNetwork, "invalid_network", 422),
+            (ApiErrorKind::Busy, "busy", 429),
+            (ApiErrorKind::Internal, "internal", 500),
+        ];
+        for (kind, code, status) in pairs {
+            assert_eq!(kind.code(), code);
+            assert_eq!(kind.http_status().0, status);
+            assert_eq!(ApiErrorKind::from_code(code), Some(kind));
+        }
+        let err = ApiError::busy("1 request in flight");
+        let wire = err.render();
+        let back = ApiError::parse(&wire).unwrap();
+        assert_eq!(back.kind, ApiErrorKind::Busy);
+        assert_eq!(back.message, "1 request in flight");
+    }
+
+    #[test]
+    fn response_plan_bytes_roundtrip() {
+        let plan = Json::Obj(vec![("total".into(), Json::num(42u32))]);
+        let server = Json::Obj(vec![("elapsed_us".into(), Json::num(7u32))]);
+        let resp = SearchResponse::new(&plan, server);
+        let text = resp.render();
+        assert_eq!(SearchResponse::extract_plan_raw(&text), Some(r#"{"total":42}"#));
+        let parsed = SearchResponse::parse(&text).unwrap();
+        assert_eq!(parsed.plan_raw, plan.render());
+    }
+}

@@ -150,6 +150,25 @@ impl From<yaml::ParseError> for ArchError {
 }
 
 impl Arch {
+    /// Stable 64-bit fingerprint of the complete architecture description,
+    /// hashed over the canonical YAML dump ([`arch_to_yaml`]) so every
+    /// field that affects analysis — levels, timing, energy, clock, host
+    /// bus — is covered and presets agree with their YAML round-trips.
+    /// Used to key the serve-mode plan cache and to scope shared
+    /// overlap-analysis caches per architecture.
+    pub fn fingerprint(&self) -> u64 {
+        let dump = arch_to_yaml(self);
+        let bytes = dump.as_bytes();
+        let mut h = crate::util::Fnv64::new();
+        h.write(bytes.len() as u64);
+        for chunk in bytes.chunks(8) {
+            let mut word = [0u8; 8];
+            word[..chunk.len()].copy_from_slice(chunk);
+            h.write(u64::from_le_bytes(word));
+        }
+        h.finish()
+    }
+
     /// Index of the compute level: the innermost level that supports PIM ops.
     pub fn compute_level(&self) -> usize {
         self.levels

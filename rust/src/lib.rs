@@ -64,6 +64,14 @@
 //! * [`exec`] — an overlap-scheduled functional execution engine that runs
 //!   a real (small) network through the PJRT executables following the
 //!   searched schedule, proving the schedules are causally valid.
+//! * [`api`] — the typed request/response wire format (`SearchRequest`,
+//!   `SearchResponse`, `ApiError` with stable machine-readable error
+//!   codes): a versioned std-only JSON schema shared by `repro serve`,
+//!   `repro request` and `repro search --json`.
+//! * [`serve`] — `repro serve`: a persistent mapping-as-a-service HTTP
+//!   server over one warm `WorkerPool` + per-architecture
+//!   `OverlapCache`s, with a deterministic, optionally disk-persisted
+//!   plan cache (same request key ⇒ bit-identical plan bytes).
 //! * [`report`] — table / CSV / JSON emitters used by the figure benches.
 //! * [`util`] — PRNG (with stream splitting for sharded sampling),
 //!   factorization, YAML-subset parser, CLI helper, error type and a small
@@ -73,6 +81,7 @@
 //! `rust/ARCHITECTURE.md` walks the workload → mapspace → overlap/transform
 //! → search → report dataflow end to end.
 
+pub mod api;
 pub mod arch;
 pub mod dataspace;
 pub mod exec;
@@ -84,6 +93,7 @@ pub mod perf;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod sim;
 pub mod transform;
 pub mod util;
@@ -91,6 +101,7 @@ pub mod workload;
 
 /// Convenience re-exports of the types that make up the public API surface.
 pub mod prelude {
+    pub use crate::api::{ApiError, ApiErrorKind, SearchRequest, SearchResponse, Source};
     pub use crate::arch::{Arch, Level, PimOp};
     pub use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range, ReferenceGen};
     pub use crate::mapping::{Dim, Loop, LoopKind, Mapping};
@@ -107,8 +118,9 @@ pub mod prelude {
     pub use crate::perf::{LayerStats, PerfModel};
     pub use crate::search::{
         calibrate_budget, calibrate_budget_graph, Algorithm, AnalysisEngine, Budget,
-        CandidateStore, EdgeOverlap, EvaluatedMapping, Mapper, MapperConfig, Metric,
-        MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy, WorkerPool,
+        CandidateStore, EdgeOverlap, EvaluatedMapping, Mapper, MapperConfig, MapperConfigBuilder,
+        Metric, MiddleHeuristic, NetworkPlan, NetworkSearch, ParallelMapper, SearchStrategy,
+        WorkerPool,
     };
     pub use crate::sim::{
         simulate_graph_plan, simulate_network_plan, NodeSim, SimConfig, SimReport, Trace,

@@ -3,7 +3,13 @@
 //! Subcommands:
 //!
 //! * `search`    — whole-network mapping optimization (the paper's flow);
-//!   chain and graph workloads alike (graphs get per-edge overlap reports)
+//!   chain and graph workloads alike (graphs get per-edge overlap reports);
+//!   `--json` emits the typed [`fastoverlapim::api`] response document
+//! * `serve`     — mapping-as-a-service: a persistent HTTP server with one
+//!   warm worker pool, shared analysis caches and a deterministic
+//!   (optionally disk-persisted) plan cache
+//! * `request`   — client for `serve`: build a typed request from the same
+//!   flags `search` takes, post it, and print the plan
 //! * `simulate`  — search a plan, replay it through the discrete-event
 //!   validation simulator, and emit a Chrome/Perfetto trace (`--trace`)
 //! * `analyze`   — overlap analysis of one consecutive-layer pair
@@ -26,6 +32,8 @@ fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
         Some("search") => cmd_search(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("request") => cmd_request(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("graph") => cmd_graph(&args),
@@ -58,7 +66,7 @@ SUBCOMMANDS
            [--deadline-ms T] [--calibrate-ms T [--probe N]]
            [--refine N] [--threads N] [--cache on|off]
            [--pipeline on|off] [--lookahead on|off] [--per-layer] [--stats]
-           [--csv]
+           [--csv] [--json]
            (--metric all runs the whole baseline matrix: the three metric
             sweeps as pipelined jobs sharing candidate enumeration;
             --algo selects the search engine — ga/sa/hill are the guided
@@ -71,7 +79,24 @@ SUBCOMMANDS
             and worker-pool dispatch counts;
             graph workloads — graph zoo presets like resnet18-graph or a
             YAML file using `inputs:` edges — search with the branch-aware
-            topological engine and report per-edge overlap)
+            topological engine and report per-edge overlap;
+            --json prints the typed v1 API response document instead of
+            tables — the same schema `repro serve` answers with)
+  serve    [--port P] [--host H] [--threads N] [--cache-dir DIR]
+           [--max-inflight N] [--cache on|off]
+           (mapping-as-a-service: POST /v1/search takes a typed JSON
+            request, GET /v1/health and /v1/stats report liveness and
+            cache/pool counters, POST /v1/shutdown exits cleanly;
+            --port 0 picks an ephemeral port — the bound address is
+            printed on startup; --cache-dir persists the plan cache as
+            JSON lines so restarts answer repeat requests from disk;
+            the same plan key always returns bit-identical plan bytes)
+  request  --addr HOST:PORT [--file req.json | <search flags>] [--raw]
+           (post one search to a running `repro serve` — either a
+            pre-built request document via --file, or the same
+            --net/--arch/--metric/--budget/--algo/--strategy/--seed
+            flags `search` takes; --raw prints the JSON response instead
+            of tables; server errors exit 2 with the stable error code)
   simulate --net <zoo|graph-zoo|file.yaml> [--arch dram|reram|small|file.yaml]
            [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
            [--metric seq|overlap|transform] [--algo random|ga|sa|hill]
@@ -86,7 +111,9 @@ SUBCOMMANDS
   graph    --net <graph-zoo|zoo|file.yaml> [--dot]
            (chains are viewed as linear graphs; --dot emits Graphviz DOT)
   arch     [--config dram|reram|small|file.yaml] [--dump]
-  export   --net <zoo> [--out file.yaml]
+  export   --net <zoo> [--out file.yaml] [--request]
+           (--request writes a typed v1 API request document instead of
+            workload YAML — ready to post via `repro request --file`)
   exec     [--policy inorder|transformed|both] [--budget N] [--seed S]
            [--workers N] [--artifacts DIR]
   list
@@ -186,11 +213,6 @@ fn int_arg(args: &Args, key: &str) -> Option<u64> {
 }
 
 fn mapper_config(args: &Args) -> MapperConfig {
-    let mut cfg = MapperConfig {
-        budget: Budget::Evaluations(int_arg(args, "budget").unwrap_or(100) as usize),
-        seed: int_arg(args, "seed").unwrap_or(0xFA57),
-        ..Default::default()
-    };
     // Budget modes: --budget/--budget-evals set a fixed evaluation count,
     // --calibrate-ms resolves a wall-clock target to a fixed evaluation
     // count via a probe (reproducible), --deadline-ms is the raw
@@ -208,43 +230,50 @@ fn mapper_config(args: &Args) -> MapperConfig {
             modes.join(", --")
         ));
     }
-    if let Some(n) = int_arg(args, "budget-evals") {
-        cfg.budget = Budget::Evaluations(n as usize);
+    let mut builder = MapperConfig::builder().seed(int_arg(args, "seed").unwrap_or(0xFA57));
+    if let Some(n) = int_arg(args, "budget").or_else(|| int_arg(args, "budget-evals")) {
+        builder = builder.budget_evals(n as usize);
     } else if let Some(ms) = int_arg(args, "calibrate-ms") {
-        cfg.budget = Budget::Calibrated {
-            target: Duration::from_millis(ms),
-            probe_draws: int_arg(args, "probe").unwrap_or(24) as usize,
-        };
+        builder = builder.calibrated(
+            Duration::from_millis(ms),
+            int_arg(args, "probe").unwrap_or(24) as usize,
+        );
     } else if let Some(ms) = int_arg(args, "deadline-ms") {
-        cfg.budget = Budget::Deadline(Duration::from_millis(ms));
+        builder = builder.deadline(Duration::from_millis(ms));
     }
-    cfg.refine_passes = int_arg(args, "refine").unwrap_or(1) as usize;
-    cfg.engine = match args.get_or("engine", "analytical") {
+    builder = builder.refine_passes(int_arg(args, "refine").unwrap_or(1) as usize);
+    builder = builder.engine(match args.get_or("engine", "analytical") {
         "analytical" => AnalysisEngine::Analytical,
         "exhaustive" => AnalysisEngine::Exhaustive,
         other => fail(format!("unknown engine `{other}` (valid: analytical|exhaustive)")),
-    };
+    });
     // Search engine: random (the bit-identical baseline) or a guided
     // optimizer over factorization genomes.
     let algo_tag = args.get_or("algo", "random");
-    cfg.algo = SearchAlgo::parse(algo_tag)
+    let algo = SearchAlgo::parse(algo_tag)
         .unwrap_or_else(|| fail(format!("unknown algo `{algo_tag}` (valid: random|ga|sa|hill)")));
-    cfg.optimize.population =
-        (int_arg(args, "population").unwrap_or(cfg.optimize.population as u64) as usize).max(1);
-    cfg.optimize.generations =
-        int_arg(args, "generations").unwrap_or(cfg.optimize.generations as u64) as usize;
+    builder = builder.algo(algo);
+    if let Some(n) = int_arg(args, "population") {
+        builder = builder.population(n as usize);
+    }
+    if let Some(n) = int_arg(args, "generations") {
+        builder = builder.generations(n as usize);
+    }
     // Parallel search knobs: worker threads for per-layer candidate
     // evaluation (results are bit-identical at any thread count when no
     // deadline is set) and the analysis memoization cache.
-    cfg.threads = args.get_usize("threads", 1).max(1);
-    cfg.cache = args.get_switch("cache", true);
+    builder = builder.threads(args.get_usize("threads", 1).max(1));
+    builder = builder.cache(args.get_switch("cache", true));
     // Pipelining knobs: concurrent metric jobs with shared candidate
     // enumeration (`--metric all`), and speculative next-layer
     // enumeration. Both are observationally transparent; both are ignored
     // under a deadline.
-    cfg.pipeline = args.get_switch("pipeline", true);
-    cfg.lookahead = args.get_switch("lookahead", true);
-    cfg
+    builder = builder.pipeline(args.get_switch("pipeline", true));
+    builder = builder.lookahead(args.get_switch("lookahead", true));
+    // Cross-field validation (zero budgets, bad rates, ...) lives in the
+    // builder so the CLI, the server and library callers reject the same
+    // configs the same way.
+    builder.build().unwrap_or_else(|e| fail(e.to_string()))
 }
 
 fn strategy(args: &Args) -> SearchStrategy {
@@ -297,6 +326,10 @@ fn metric_arg(args: &Args) -> Option<Metric> {
 }
 
 fn cmd_search(args: &Args) {
+    if args.has_flag("json") {
+        cmd_search_json(args);
+        return;
+    }
     let arch = load_arch(args);
     let cfg = mapper_config(args);
     let strat = strategy(args);
@@ -304,6 +337,195 @@ fn cmd_search(args: &Args) {
         Workload::Chain(net) => cmd_search_chain(args, &arch, &net, cfg, strat),
         Workload::Graph(g) => cmd_search_graph(args, &arch, &g, cfg, strat),
     }
+}
+
+/// Resolve a `--net`/`--arch` value into an API [`Source`]: an existing
+/// file is inlined as YAML (so the server never needs our filesystem);
+/// anything else is passed through as a preset name for the server (or
+/// the local resolver) to judge.
+fn source_arg(args: &Args, key: &str, default: &str) -> Source {
+    let value = args.get_or(key, default);
+    if std::path::Path::new(value).is_file() {
+        let text = std::fs::read_to_string(value)
+            .unwrap_or_else(|e| fail(format!("reading `{value}`: {e}")));
+        Source::Yaml(text)
+    } else {
+        Source::Name(value.to_string())
+    }
+}
+
+/// Build a typed [`SearchRequest`] from the same flags `search` takes.
+/// Wall-clock budget flags are rejected: the API only carries
+/// deterministic evaluation budgets (`same key ⇒ same plan`).
+fn request_from_flags(args: &Args) -> SearchRequest {
+    use fastoverlapim::api::{parse_metric, parse_strategy};
+    for key in ["calibrate-ms", "deadline-ms"] {
+        if args.get(key).is_some() {
+            fail(format!(
+                "--{key} is not expressible in the typed API — it carries deterministic \
+                 evaluation budgets only (use --budget N)"
+            ));
+        }
+    }
+    let defaults = SearchRequest::default();
+    let metric = match args.get("metric") {
+        Some(tag) => parse_metric(tag).unwrap_or_else(|| {
+            fail(format!("unknown metric `{tag}` (valid: seq|overlap|transform)"))
+        }),
+        None => defaults.metric,
+    };
+    let algo_tag = args.get_or("algo", "random");
+    let algo = SearchAlgo::parse(algo_tag)
+        .unwrap_or_else(|| fail(format!("unknown algo `{algo_tag}` (valid: random|ga|sa|hill)")));
+    let strategy_tag = args.get_or("strategy", "forward");
+    let strategy = parse_strategy(strategy_tag).unwrap_or_else(|| {
+        fail(format!("unknown strategy `{strategy_tag}` (valid: forward|backward|middle|middle2)"))
+    });
+    SearchRequest {
+        network: source_arg(args, "net", "resnet18"),
+        arch: source_arg(args, "arch", "dram"),
+        metric,
+        budget_evals: int_arg(args, "budget")
+            .or_else(|| int_arg(args, "budget-evals"))
+            .unwrap_or(defaults.budget_evals as u64) as usize,
+        algo,
+        strategy,
+        seed: int_arg(args, "seed").unwrap_or(defaults.seed),
+        refine_passes: int_arg(args, "refine").unwrap_or(defaults.refine_passes as u64) as usize,
+        verify: args.has_flag("verify"),
+    }
+}
+
+/// `search --json`: run one search locally and print the typed v1
+/// response document — the exact schema `repro serve` answers with, so
+/// scripts can switch between one-shot CLI runs and the server without
+/// changing their parser.
+fn cmd_search_json(args: &Args) {
+    use fastoverlapim::api;
+    use fastoverlapim::report::Json;
+    if args.get_or("metric", "transform") == "all" {
+        fail("--json emits one plan document (--metric seq|overlap|transform, not all)");
+    }
+    let req = request_from_flags(args);
+    let arch = req.resolve_arch().unwrap_or_else(|e| fail(e.to_string()));
+    let workload = req.resolve_workload().unwrap_or_else(|e| fail(e.to_string()));
+    let threads = args.get_usize("threads", 1).max(1);
+    let cfg = req.mapper_config(threads).unwrap_or_else(|e| fail(e.to_string()));
+    let started = std::time::Instant::now();
+    let search = NetworkSearch::new(&arch, cfg, req.strategy);
+    let plan = api::run_workload(&search, &workload, req.metric);
+    let server = Json::Obj(vec![
+        ("elapsed_us".into(), Json::Num(started.elapsed().as_micros() as f64)),
+        ("plan_cache".into(), Json::str("off")),
+        ("plan_key".into(), Json::str(format!("{:016x}", api::plan_key(&req, &arch, &workload)))),
+        ("analysis_cache".into(), api::cache_stats_json(&search.cache_stats())),
+        ("threads".into(), Json::Num(threads as f64)),
+    ]);
+    let resp = SearchResponse::new(&api::plan_to_json(&plan, &arch), server);
+    println!("{}", resp.render());
+}
+
+/// `repro serve`: bind the mapping-as-a-service server and run until a
+/// `POST /v1/shutdown` arrives. The bound address is printed first (and
+/// flushed) so scripts and tests can scrape it under `--port 0`.
+fn cmd_serve(args: &Args) {
+    use fastoverlapim::serve::{ServeConfig, Server};
+    let port = int_arg(args, "port").unwrap_or(7171);
+    if port > u64::from(u16::MAX) {
+        fail(format!("--port {port} out of range (0-65535; 0 picks an ephemeral port)"));
+    }
+    let config = ServeConfig {
+        host: args.get_or("host", "127.0.0.1").to_string(),
+        port: port as u16,
+        threads: args.get_usize("threads", 1).max(1),
+        cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
+        max_inflight: int_arg(args, "max-inflight").unwrap_or(16).max(1),
+        analysis_cache: args.get_switch("cache", true),
+    };
+    let server = Server::bind(&config).unwrap_or_else(|e| fail(e.to_string()));
+    println!(
+        "repro serve: listening on {} ({} thread{}, plan cache: {}{})",
+        server.local_addr(),
+        config.threads,
+        if config.threads == 1 { "" } else { "s" },
+        match &config.cache_dir {
+            Some(dir) => format!("persistent in {}", dir.display()),
+            None => "in-memory".to_string(),
+        },
+        if server.plans_loaded() > 0 {
+            format!(", {} plans loaded from disk", server.plans_loaded())
+        } else {
+            String::new()
+        }
+    );
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    server.run().unwrap_or_else(|e| fail(e.to_string()));
+}
+
+/// `repro request`: post one typed search to a running `repro serve` and
+/// print the plan. Server-side errors surface their stable code and exit
+/// 2, same as every other CLI failure.
+fn cmd_request(args: &Args) {
+    use fastoverlapim::serve::http;
+    let Some(addr) = args.get("addr") else {
+        fail("--addr HOST:PORT is required (e.g. --addr 127.0.0.1:7171)")
+    };
+    let body = match args.get("file") {
+        Some(path) => std::fs::read_to_string(path)
+            .unwrap_or_else(|e| fail(format!("reading request file `{path}`: {e}"))),
+        None => request_from_flags(args).render(),
+    };
+    let (status, text) =
+        http::post(addr, "/v1/search", &body).unwrap_or_else(|e| fail(e.to_string()));
+    if status != 200 {
+        match ApiError::parse(&text) {
+            Some(err) => fail(format!("server returned {status}: {err}")),
+            None => fail(format!("server returned {status}: {}", text.trim())),
+        }
+    }
+    if args.has_flag("raw") {
+        println!("{text}");
+        return;
+    }
+    let resp = SearchResponse::parse(&text)
+        .unwrap_or_else(|e| fail(format!("parsing server response: {e}")));
+    print_response_summary(&resp);
+}
+
+/// Render a typed response the way `search` prints its tables, plus the
+/// serving metadata (cache outcome, server-side timing).
+fn print_response_summary(resp: &SearchResponse) {
+    use fastoverlapim::report::Json;
+    let plan = Json::parse(&resp.plan_raw)
+        .unwrap_or_else(|e| fail(format!("parsing plan section: {e}")));
+    let total = |key: &str| plan.get(key).and_then(Json::as_u64).unwrap_or(0);
+    let label = |key: &str| plan.get(key).and_then(Json::as_str).unwrap_or("?").to_string();
+    let seq = total("total_sequential");
+    let mut t = Table::new(
+        &format!("{} / {} / {}", label("network"), label("arch"), label("metric")),
+        &["total", "cycles", "vs sequential"],
+    );
+    t.row(vec!["sequential".into(), cycles(seq), "1.0x".into()]);
+    t.row(vec![
+        "overlapped".into(),
+        cycles(total("total_overlapped")),
+        speedup(seq, total("total_overlapped")),
+    ]);
+    t.row(vec![
+        "transformed".into(),
+        cycles(total("total_transformed")),
+        speedup(seq, total("total_transformed")),
+    ]);
+    println!("{}", t.render());
+    let outcome =
+        resp.server.get("plan_cache").and_then(Json::as_str).unwrap_or("?").to_string();
+    let elapsed = resp.server.get("elapsed_us").and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "server: plan cache {outcome}, {} mappings evaluated, {:.1} ms server-side",
+        total("mappings_evaluated"),
+        elapsed / 1000.0
+    );
 }
 
 fn cmd_search_chain(
@@ -800,9 +1022,18 @@ fn cmd_arch(args: &Args) {
 }
 
 fn cmd_export(args: &Args) {
-    let text = match load_workload(args) {
-        Workload::Chain(net) => parser::network_to_yaml(&net),
-        Workload::Graph(g) => parser::graph_to_yaml(&g),
+    // `--request` emits a typed v1 API request document (the network
+    // resolved exactly like `repro request` would resolve it) instead of
+    // workload YAML — ready for `repro request --file` or curl.
+    let text = if args.has_flag("request") {
+        let mut doc = request_from_flags(args).render();
+        doc.push('\n');
+        doc
+    } else {
+        match load_workload(args) {
+            Workload::Chain(net) => parser::network_to_yaml(&net),
+            Workload::Graph(g) => parser::graph_to_yaml(&g),
+        }
     };
     match args.get("out") {
         Some(path) => {

@@ -323,6 +323,14 @@ pub struct MapperConfig {
 }
 
 impl MapperConfig {
+    /// Start building a config from the defaults. The builder validates
+    /// cross-field constraints once, in [`MapperConfigBuilder::build`],
+    /// instead of at first use deep inside a search; the plain struct
+    /// stays `pub` for back-compat.
+    pub fn builder() -> MapperConfigBuilder {
+        MapperConfigBuilder::default()
+    }
+
     /// Whether the shared candidate store — and with it cross-metric
     /// candidate sharing and speculative look-ahead — is active for this
     /// configuration: requires the random engine (guided engines propose
@@ -379,6 +387,212 @@ impl Default for MapperConfig {
             lookahead: true,
             verify: false,
         }
+    }
+}
+
+/// Chainable constructor for [`MapperConfig`] with one validation point.
+///
+/// Every setter overwrites the corresponding field of an initially-default
+/// config; [`MapperConfigBuilder::build`] then checks the cross-field
+/// constraints (non-zero budgets, `threads >= 1`, guided-engine knobs in
+/// range) and returns the validated config. Used by the CLI, the serve
+/// API and the benches so a bad combination fails with one friendly
+/// message instead of panicking mid-search.
+///
+/// ```
+/// use fastoverlapim::search::{Budget, MapperConfig};
+///
+/// let cfg = MapperConfig::builder()
+///     .budget_evals(32)
+///     .seed(7)
+///     .threads(2)
+///     .build()
+///     .unwrap();
+/// assert_eq!(cfg.budget, Budget::Evaluations(32));
+///
+/// // Cross-field validation happens in one place:
+/// assert!(MapperConfig::builder().threads(0).build().is_err());
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct MapperConfigBuilder {
+    cfg: MapperConfig,
+}
+
+impl MapperConfigBuilder {
+    /// Set the search-effort budget (see [`Budget`]).
+    #[must_use]
+    pub fn budget(mut self, budget: Budget) -> Self {
+        self.cfg.budget = budget;
+        self
+    }
+
+    /// Shorthand for [`Budget::Evaluations`].
+    #[must_use]
+    pub fn budget_evals(mut self, n: usize) -> Self {
+        self.cfg.budget = Budget::Evaluations(n);
+        self
+    }
+
+    /// Shorthand for [`Budget::Calibrated`].
+    #[must_use]
+    pub fn calibrated(mut self, target: Duration, probe_draws: usize) -> Self {
+        self.cfg.budget = Budget::Calibrated { target, probe_draws };
+        self
+    }
+
+    /// Shorthand for [`Budget::Deadline`].
+    #[must_use]
+    pub fn deadline(mut self, target: Duration) -> Self {
+        self.cfg.budget = Budget::Deadline(target);
+        self
+    }
+
+    /// Select the search engine (see [`SearchAlgo`]).
+    #[must_use]
+    pub fn algo(mut self, algo: SearchAlgo) -> Self {
+        self.cfg.algo = algo;
+        self
+    }
+
+    /// Replace the guided-engine knobs wholesale.
+    #[must_use]
+    pub fn optimize(mut self, optimize: OptimizeConfig) -> Self {
+        self.cfg.optimize = optimize;
+        self
+    }
+
+    /// Guided-engine population size (GA population / SA chain count).
+    #[must_use]
+    pub fn population(mut self, population: usize) -> Self {
+        self.cfg.optimize.population = population;
+        self
+    }
+
+    /// Guided-engine generation cap (`0` = budget-terminated).
+    #[must_use]
+    pub fn generations(mut self, generations: usize) -> Self {
+        self.cfg.optimize.generations = generations;
+        self
+    }
+
+    /// PRNG seed — fixed seed ⇒ reproducible search.
+    #[must_use]
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Map-space knobs.
+    #[must_use]
+    pub fn mapspace(mut self, mapspace: MapSpaceConfig) -> Self {
+        self.cfg.mapspace = mapspace;
+        self
+    }
+
+    /// Per-layer mapping constraints.
+    #[must_use]
+    pub fn constraint(mut self, constraint: MappingConstraint) -> Self {
+        self.cfg.constraint = constraint;
+        self
+    }
+
+    /// Analysis engine (analytical vs exhaustive).
+    #[must_use]
+    pub fn engine(mut self, engine: AnalysisEngine) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    /// Coordinate-descent refinement sweeps after the directional pass.
+    #[must_use]
+    pub fn refine_passes(mut self, refine_passes: usize) -> Self {
+        self.cfg.refine_passes = refine_passes;
+        self
+    }
+
+    /// Worker threads for candidate evaluation (1 = inline).
+    #[must_use]
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Enable the analysis memoization cache.
+    #[must_use]
+    pub fn cache(mut self, cache: bool) -> Self {
+        self.cfg.cache = cache;
+        self
+    }
+
+    /// Run the metric baseline matrix pipelined.
+    #[must_use]
+    pub fn pipeline(mut self, pipeline: bool) -> Self {
+        self.cfg.pipeline = pipeline;
+        self
+    }
+
+    /// Speculatively enumerate the next layer's candidates.
+    #[must_use]
+    pub fn lookahead(mut self, lookahead: bool) -> Self {
+        self.cfg.lookahead = lookahead;
+        self
+    }
+
+    /// Replay winning plans through the validation simulator.
+    #[must_use]
+    pub fn verify(mut self, verify: bool) -> Self {
+        self.cfg.verify = verify;
+        self
+    }
+
+    /// Validate the cross-field constraints and return the config.
+    pub fn build(self) -> crate::util::error::Result<MapperConfig> {
+        let cfg = self.cfg;
+        crate::ensure!(cfg.threads >= 1, "threads must be >= 1 (got {})", cfg.threads);
+        match cfg.budget {
+            Budget::Evaluations(n) => {
+                crate::ensure!(n >= 1, "evaluation budget must be >= 1 (got {n})");
+            }
+            Budget::Calibrated { target, probe_draws } => {
+                crate::ensure!(
+                    probe_draws >= 1,
+                    "calibrated budget needs probe_draws >= 1 (got {probe_draws})"
+                );
+                crate::ensure!(
+                    !target.is_zero(),
+                    "calibrated budget needs a non-zero wall-clock target"
+                );
+            }
+            Budget::Deadline(d) => {
+                crate::ensure!(!d.is_zero(), "deadline budget needs a non-zero duration");
+            }
+        }
+        if cfg.algo != SearchAlgo::Random {
+            let o = &cfg.optimize;
+            crate::ensure!(
+                o.population >= 1,
+                "guided engines need population >= 1 (got {})",
+                o.population
+            );
+            crate::ensure!(
+                o.tournament >= 1,
+                "genetic search needs tournament >= 1 (got {})",
+                o.tournament
+            );
+            let rates = [("crossover_rate", o.crossover_rate), ("mutation_rate", o.mutation_rate)];
+            for (name, rate) in rates {
+                crate::ensure!(
+                    (0.0..=1.0).contains(&rate),
+                    "{name} must be within [0, 1] (got {rate})"
+                );
+            }
+        }
+        crate::ensure!(
+            cfg.refine_passes <= 64,
+            "refine_passes {} is unreasonably large (cap 64)",
+            cfg.refine_passes
+        );
+        Ok(cfg)
     }
 }
 
@@ -1570,6 +1784,26 @@ impl<'a> NetworkSearch<'a> {
     pub fn new(arch: &'a Arch, config: MapperConfig, strategy: SearchStrategy) -> Self {
         let cache = config.cache.then(|| Arc::new(OverlapCache::new()));
         let pool = WorkerPool::new(config.threads);
+        Self { arch, config, strategy, cache, pool }
+    }
+
+    /// Build a searcher over *externally owned* warm state: a live
+    /// analysis cache and a persistent worker pool shared with other
+    /// searchers. This is the serve-mode constructor — the server keeps
+    /// one pool plus one cache per architecture fingerprint and threads
+    /// every request's searcher through them, so cache entries and worker
+    /// threads stay warm across requests (both are observationally
+    /// transparent, so plans match the cold path bit for bit). Pass
+    /// `cache: None` to run uncached regardless of `config.cache`; the
+    /// pool caps this searcher's concurrency, so `config.threads` should
+    /// match the pool it was built with.
+    pub fn with_shared(
+        arch: &'a Arch,
+        config: MapperConfig,
+        strategy: SearchStrategy,
+        cache: Option<Arc<OverlapCache>>,
+        pool: Arc<WorkerPool>,
+    ) -> Self {
         Self { arch, config, strategy, cache, pool }
     }
 

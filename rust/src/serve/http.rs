@@ -1,0 +1,145 @@
+//! A hand-rolled HTTP/1.1 micro-implementation over `std::net` — just
+//! enough for the v1 API: one request per connection (`Connection:
+//! close`), `Content-Length` bodies, no chunking, no TLS, no keep-alive.
+//! Both the server loop and the `repro request` client (plus the
+//! integration tests) speak through these helpers, so the two ends can
+//! never drift apart.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cap on accepted request bodies (1 MiB) — inline network YAML for any
+/// realistic workload is a few KiB; anything bigger is abuse.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// A parsed inbound HTTP request (the slice of HTTP the API uses).
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read and parse one request from the stream.
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, String> {
+    let mut reader = BufReader::new(&mut *stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| format!("reading request line: {e}"))?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let path = parts.next().ok_or("request line has no path")?.to_string();
+    let version = parts.next().ok_or("request line has no version")?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported protocol `{version}`"));
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad content-length `{}`", value.trim()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(format!("body of {content_length} bytes exceeds cap {MAX_BODY_BYTES}"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| format!("reading body: {e}"))?;
+    let body = String::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Write a complete response and flush. The body is always JSON here.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Client side: one round-trip — connect, send, read the full response.
+/// Returns `(status, body)`.
+pub fn roundtrip(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String), String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connecting to {addr}: {e}"))?;
+    // Searches can legitimately take a while; reads should not hang
+    // forever if the server dies mid-response.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(600)));
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).map_err(|e| format!("sending request: {e}"))?;
+    stream.write_all(body.as_bytes()).map_err(|e| format!("sending body: {e}"))?;
+    stream.flush().map_err(|e| format!("sending request: {e}"))?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).map_err(|e| format!("reading status: {e}"))?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line `{}`", status_line.trim_end()))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).map_err(|e| format!("reading header: {e}"))?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body.resize(n, 0);
+            reader.read_exact(&mut body).map_err(|e| format!("reading body: {e}"))?;
+        }
+        None => {
+            reader.read_to_end(&mut body).map_err(|e| format!("reading body: {e}"))?;
+        }
+    }
+    let body = String::from_utf8(body).map_err(|_| "response body is not UTF-8".to_string())?;
+    Ok((status, body))
+}
+
+/// `POST` helper — the shape the API actually uses.
+pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String), String> {
+    roundtrip(addr, "POST", path, body)
+}
+
+/// `GET` helper.
+pub fn get(addr: &str, path: &str) -> Result<(u16, String), String> {
+    roundtrip(addr, "GET", path, "")
+}

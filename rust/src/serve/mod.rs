@@ -1,0 +1,340 @@
+//! `repro serve` — mapping-as-a-service.
+//!
+//! A long-running HTTP/1.1 server (hand-rolled over
+//! `std::net::TcpListener`, std-only — see [`http`]) that accepts
+//! [`crate::api::SearchRequest`]s and answers with
+//! [`crate::api::SearchResponse`]s. The point is *warm state*: where the
+//! CLI pays a fresh process with cold caches per plan, the server keeps
+//!
+//! * **one persistent [`WorkerPool`]** shared by every request — the
+//!   pool supports concurrent owners, so simultaneous searches interleave
+//!   their chunk jobs over the same `threads` cap instead of
+//!   oversubscribing the machine;
+//! * **one [`OverlapCache`] per architecture fingerprint** — analysis
+//!   memo entries (ready times, transform jobs) survive across requests,
+//!   so repeated layer pairs are priced once per server, not once per
+//!   request (observationally transparent: warm plans are bit-identical
+//!   to cold ones);
+//! * **a deterministic plan cache** ([`plan_cache::PlanCache`]) keyed by
+//!   [`crate::api::plan_key`], optionally persisted as JSON lines under
+//!   `--cache-dir` so restarts are warm too.
+//!
+//! Endpoints (all bodies JSON, one request per connection):
+//!
+//! | method + path     | body                | answer                           |
+//! |-------------------|---------------------|----------------------------------|
+//! | `POST /v1/search` | [`crate::api::SearchRequest`] | [`crate::api::SearchResponse`] |
+//! | `GET /v1/health`  | —                   | `{"v":1,"ok":true,...}`          |
+//! | `GET /v1/stats`   | —                   | cache/pool counters              |
+//! | `POST /v1/shutdown` | —                 | `{"v":1,"ok":true}`, then exits  |
+//!
+//! Determinism is the contract: the same plan key returns bit-identical
+//! plan bytes whether computed cold, served warm from memory, served
+//! from the disk cache after a restart, or raced by concurrent clients
+//! (`tests/serve_roundtrip.rs` hammers exactly this).
+
+pub mod http;
+pub mod plan_cache;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::{self, ApiError, SearchRequest, SearchResponse};
+use crate::arch::Arch;
+use crate::overlap::OverlapCache;
+use crate::report::Json;
+use crate::search::{NetworkSearch, WorkerPool};
+use crate::util::error::{Context as _, Result};
+
+pub use plan_cache::{CacheOutcome, PlanCache};
+
+/// Server settings (the `repro serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind host; the default stays loopback-only.
+    pub host: String,
+    /// Bind port; `0` picks an ephemeral port (printed on startup).
+    pub port: u16,
+    /// Worker-pool width shared by all requests.
+    pub threads: usize,
+    /// Plan-cache persistence directory (`None` = in-memory only).
+    pub cache_dir: Option<PathBuf>,
+    /// Admission cap: concurrent searches beyond this are turned away
+    /// with [`crate::api::ApiErrorKind::Busy`].
+    pub max_inflight: u64,
+    /// Share per-architecture analysis caches across requests.
+    pub analysis_cache: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 0,
+            threads: 1,
+            cache_dir: None,
+            max_inflight: 16,
+            analysis_cache: true,
+        }
+    }
+}
+
+/// Shared warm state — everything a request handler touches.
+struct ServerState {
+    pool: Arc<WorkerPool>,
+    threads: usize,
+    use_analysis_cache: bool,
+    /// One analysis memoizer per architecture fingerprint: overlap-cache
+    /// keys hash mappings and layers but not the architecture, so one
+    /// shared table across different arches would alias.
+    analysis_caches: Mutex<HashMap<u64, Arc<OverlapCache>>>,
+    plans: PlanCache,
+    inflight: AtomicU64,
+    max_inflight: u64,
+    searches_run: AtomicU64,
+    requests: AtomicU64,
+    started: Instant,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+}
+
+impl ServerState {
+    fn analysis_cache_for(&self, arch: &Arch) -> Arc<OverlapCache> {
+        let mut map = self.analysis_caches.lock().unwrap();
+        Arc::clone(map.entry(arch.fingerprint()).or_insert_with(|| Arc::new(OverlapCache::new())))
+    }
+}
+
+/// A bound, not-yet-running server. [`Server::bind`] then [`Server::run`];
+/// the split lets callers learn the ephemeral port before serving.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    pub fn bind(config: &ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind((config.host.as_str(), config.port))
+            .with_context(|| format!("binding {}:{}", config.host, config.port))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let plans = match &config.cache_dir {
+            Some(dir) => PlanCache::persistent(dir)
+                .with_context(|| format!("opening plan cache in `{}`", dir.display()))?,
+            None => PlanCache::in_memory(),
+        };
+        let threads = config.threads.max(1);
+        let state = Arc::new(ServerState {
+            pool: WorkerPool::new(threads),
+            threads,
+            use_analysis_cache: config.analysis_cache,
+            analysis_caches: Mutex::new(HashMap::new()),
+            plans,
+            inflight: AtomicU64::new(0),
+            max_inflight: config.max_inflight.max(1),
+            searches_run: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            addr,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The actually-bound address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Plan-cache entries loaded from disk at startup.
+    pub fn plans_loaded(&self) -> u64 {
+        self.state.plans.loaded_from_disk()
+    }
+
+    /// Serve until a `POST /v1/shutdown` arrives. One thread per
+    /// connection; the worker pool (not the connection count) bounds
+    /// search parallelism, and `max_inflight` bounds admitted searches.
+    pub fn run(self) -> Result<()> {
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for conn in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let state = Arc::clone(&self.state);
+            handles.retain(|h| !h.is_finished());
+            handles.push(std::thread::spawn(move || handle_connection(stream, &state)));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            respond_error(&mut stream, &ApiError::bad_request(format!("malformed HTTP: {e}")));
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/search") => match handle_search(state, &req.body) {
+            Ok(body) => respond_json(&mut stream, 200, "OK", &body),
+            Err(err) => respond_error(&mut stream, &err),
+        },
+        ("GET", "/v1/health") => {
+            let body = Json::Obj(vec![
+                ("v".into(), Json::num(1u32)),
+                ("ok".into(), Json::Bool(true)),
+                ("uptime_us".into(), Json::Num(state.started.elapsed().as_micros() as f64)),
+            ]);
+            respond_json(&mut stream, 200, "OK", &body.render());
+        }
+        ("GET", "/v1/stats") => {
+            respond_json(&mut stream, 200, "OK", &stats_json(state).render());
+        }
+        ("POST", "/v1/shutdown") => {
+            state.shutdown.store(true, Ordering::SeqCst);
+            let body = Json::Obj(vec![
+                ("v".into(), Json::num(1u32)),
+                ("ok".into(), Json::Bool(true)),
+            ]);
+            respond_json(&mut stream, 200, "OK", &body.render());
+            // The accept loop blocks in `incoming()`; poke it so it
+            // observes the flag and drains.
+            let _ = TcpStream::connect(state.addr);
+        }
+        (method, path) => {
+            respond_error(
+                &mut stream,
+                &ApiError::bad_request(format!("no such endpoint: {method} {path}")),
+            );
+        }
+    }
+}
+
+/// Decrements the in-flight gauge when a search handler exits any way.
+struct InflightGuard<'a>(&'a AtomicU64);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_search(state: &ServerState, body: &str) -> Result<String, ApiError> {
+    let inflight = state.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+    let _guard = InflightGuard(&state.inflight);
+    if inflight > state.max_inflight {
+        return Err(ApiError::busy(format!(
+            "{inflight} searches in flight (cap {}); retry shortly",
+            state.max_inflight
+        )));
+    }
+    let started = Instant::now();
+    let req = SearchRequest::parse(body)?;
+    let arch = req.resolve_arch()?;
+    let workload = req.resolve_workload()?;
+    let cfg = req.mapper_config(state.threads)?;
+    let key = api::plan_key(&req, &arch, &workload);
+    let analysis_cache = state.use_analysis_cache.then(|| state.analysis_cache_for(&arch));
+
+    let (plan_raw, outcome) = state.plans.get_or_compute(key, || {
+        state.searches_run.fetch_add(1, Ordering::Relaxed);
+        let search = NetworkSearch::with_shared(
+            &arch,
+            cfg,
+            req.strategy,
+            analysis_cache.clone(),
+            Arc::clone(&state.pool),
+        );
+        // A search that cannot find a valid mapping within budget panics;
+        // inside the server that is an `internal` error on this request,
+        // never a crashed process. Nothing is cached on failure.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            api::run_workload(&search, &workload, req.metric)
+        }));
+        match outcome {
+            Ok(plan) => Ok(api::plan_to_json(&plan, &arch).render()),
+            Err(payload) => Err(ApiError::internal(format!(
+                "search failed: {}",
+                panic_message(payload.as_ref())
+            ))),
+        }
+    })?;
+
+    let mut server = vec![
+        ("elapsed_us".into(), Json::Num(started.elapsed().as_micros() as f64)),
+        ("plan_cache".into(), Json::str(outcome.tag())),
+        ("plan_key".into(), Json::str(format!("{key:016x}"))),
+    ];
+    if let Some(cache) = &analysis_cache {
+        server.push(("analysis_cache".into(), api::cache_stats_json(&cache.stats())));
+    }
+    server.extend(stats_fields(state));
+    Ok(SearchResponse::from_raw(plan_raw, Json::Obj(server)).render())
+}
+
+fn panic_message(payload: &dyn std::any::Any) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "search panicked"
+    }
+}
+
+/// The counters shared by `/v1/stats` and every response's `server`
+/// section.
+fn stats_fields(state: &ServerState) -> Vec<(String, Json)> {
+    vec![
+        ("plan_cache_entries".into(), Json::Num(state.plans.len() as f64)),
+        ("plan_cache_memory_hits".into(), Json::Num(state.plans.memory_hits() as f64)),
+        ("plan_cache_disk_hits".into(), Json::Num(state.plans.disk_hits() as f64)),
+        ("plan_cache_misses".into(), Json::Num(state.plans.misses() as f64)),
+        ("plan_cache_loaded".into(), Json::Num(state.plans.loaded_from_disk() as f64)),
+        ("searches_run".into(), Json::Num(state.searches_run.load(Ordering::Relaxed) as f64)),
+        ("requests".into(), Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+        ("pool_workers".into(), Json::Num(state.pool.worker_count() as f64)),
+        ("pool_jobs_dispatched".into(), Json::Num(state.pool.jobs_dispatched() as f64)),
+        ("threads".into(), Json::Num(state.threads as f64)),
+    ]
+}
+
+fn stats_json(state: &ServerState) -> Json {
+    let mut fields = vec![
+        ("v".into(), Json::num(1u32)),
+        ("uptime_us".into(), Json::Num(state.started.elapsed().as_micros() as f64)),
+    ];
+    fields.extend(stats_fields(state));
+    let caches = state.analysis_caches.lock().unwrap();
+    let mut arch_caches: Vec<Json> = Vec::new();
+    for (fp, cache) in caches.iter() {
+        arch_caches.push(Json::Obj(vec![
+            ("arch_fingerprint".into(), Json::str(format!("{fp:016x}"))),
+            ("stats".into(), api::cache_stats_json(&cache.stats())),
+        ]));
+    }
+    fields.push(("analysis_caches".into(), Json::Arr(arch_caches)));
+    Json::Obj(fields)
+}
+
+fn respond_json(stream: &mut TcpStream, status: u16, reason: &str, body: &str) {
+    let _ = http::write_response(stream, status, reason, body);
+}
+
+fn respond_error(stream: &mut TcpStream, err: &ApiError) {
+    let (status, reason) = err.kind.http_status();
+    respond_json(stream, status, reason, &err.render());
+}

@@ -1,0 +1,280 @@
+//! The persistent deterministic plan cache.
+//!
+//! Keyed by [`crate::api::plan_key`] — `(arch fingerprint, network
+//! fingerprint, metric, budget, algo, strategy, seed, refine)` — under
+//! the contract that a plan is a *pure function* of its key: requests
+//! only carry deterministic evaluation budgets, so serving a cached plan
+//! is observationally identical to recomputing it.
+//!
+//! Three properties matter here:
+//!
+//! 1. **Byte identity.** Plans are stored as their exact rendered JSON
+//!    bytes and spliced back verbatim — floats never round-trip through
+//!    a parser, so a cold plan, a warm plan, and a plan loaded from disk
+//!    after a restart are the same byte string.
+//! 2. **Concurrent dedup.** Each key owns a tiny entry mutex; the first
+//!    requester computes while holding it and every concurrent identical
+//!    request blocks on that entry (not the whole cache) and then reads
+//!    the finished plan. Distinct keys never contend.
+//! 3. **Warm restarts.** With a `--cache-dir`, every computed plan is
+//!    appended to `plans.jsonl` (one `{"key":"<16-hex>","plan":{...}}`
+//!    line per entry) and reloaded on startup; corrupt lines are skipped,
+//!    not fatal.
+//!
+//! Errors are never cached: a failed compute leaves the entry empty so a
+//! later retry gets a fresh attempt.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::ApiError;
+use crate::report::Json;
+
+/// Where a served plan came from (surfaced as `server.plan_cache`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Computed fresh by this request.
+    Miss,
+    /// Served from a plan computed earlier in this process.
+    Memory,
+    /// Served from a plan persisted by a previous process.
+    Disk,
+}
+
+impl CacheOutcome {
+    pub fn tag(self) -> &'static str {
+        match self {
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Memory => "memory",
+            CacheOutcome::Disk => "disk",
+        }
+    }
+}
+
+struct Entry {
+    /// `(rendered plan bytes, loaded-from-disk)`; `None` until the first
+    /// successful compute.
+    plan: Mutex<Option<(String, bool)>>,
+}
+
+/// The cache: an in-memory key → plan map with optional JSONL
+/// persistence. All counters are monotonic for the process lifetime.
+pub struct PlanCache {
+    entries: Mutex<HashMap<u64, Arc<Entry>>>,
+    /// Append handle for the persistence file (None = in-memory only).
+    file: Option<Mutex<File>>,
+    path: Option<PathBuf>,
+    memory_hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    loaded: u64,
+}
+
+impl PlanCache {
+    /// In-memory only.
+    pub fn in_memory() -> PlanCache {
+        PlanCache {
+            entries: Mutex::new(HashMap::new()),
+            file: None,
+            path: None,
+            memory_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            loaded: 0,
+        }
+    }
+
+    /// Persistent: load `dir/plans.jsonl` if present (creating `dir` if
+    /// needed) and append every future computed plan to it.
+    pub fn persistent(dir: &Path) -> std::io::Result<PlanCache> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join("plans.jsonl");
+        let mut entries = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for line in text.lines() {
+                if let Some((key, plan)) = parse_line(line) {
+                    entries.insert(
+                        key,
+                        Arc::new(Entry { plan: Mutex::new(Some((plan.to_string(), true))) }),
+                    );
+                }
+            }
+        }
+        let loaded = entries.len() as u64;
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(PlanCache {
+            entries: Mutex::new(entries),
+            file: Some(Mutex::new(file)),
+            path: Some(path),
+            memory_hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            loaded,
+        })
+    }
+
+    /// Serve `key` from the cache, or compute, store and persist it.
+    /// Concurrent identical requests block on the per-key entry and then
+    /// read the one computed plan; errors are returned to the caller and
+    /// never cached.
+    pub fn get_or_compute<F>(
+        &self,
+        key: u64,
+        compute: F,
+    ) -> Result<(String, CacheOutcome), ApiError>
+    where
+        F: FnOnce() -> Result<String, ApiError>,
+    {
+        let entry = {
+            let mut map = self.entries.lock().unwrap();
+            Arc::clone(
+                map.entry(key)
+                    .or_insert_with(|| Arc::new(Entry { plan: Mutex::new(None) })),
+            )
+        };
+        let mut slot = entry.plan.lock().unwrap();
+        if let Some((plan, from_disk)) = slot.as_ref() {
+            let outcome = if *from_disk {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                CacheOutcome::Disk
+            } else {
+                self.memory_hits.fetch_add(1, Ordering::Relaxed);
+                CacheOutcome::Memory
+            };
+            return Ok((plan.clone(), outcome));
+        }
+        let plan = compute()?;
+        *slot = Some((plan.clone(), false));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.append(key, &plan);
+        Ok((plan, CacheOutcome::Miss))
+    }
+
+    fn append(&self, key: u64, plan: &str) {
+        if let Some(file) = &self.file {
+            let line = format!("{{\"key\":\"{key:016x}\",\"plan\":{plan}}}\n");
+            let mut f = file.lock().unwrap();
+            // Persistence is best-effort: a full disk degrades the cache
+            // to in-memory, it does not fail the request.
+            let _ = f.write_all(line.as_bytes());
+            let _ = f.flush();
+        }
+    }
+
+    /// Entries currently held (loaded + computed).
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries loaded from disk at startup.
+    pub fn loaded_from_disk(&self) -> u64 {
+        self.loaded
+    }
+
+    pub fn memory_hits(&self) -> u64 {
+        self.memory_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// The persistence file path, when persistent.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+/// Parse one persisted line, returning the key and the *raw* plan bytes.
+/// The plan substring is validated as JSON but returned as the original
+/// slice, so re-serving it is byte-exact. Returns `None` (skip) for
+/// anything malformed.
+fn parse_line(line: &str) -> Option<(u64, &str)> {
+    let rest = line.strip_prefix("{\"key\":\"")?;
+    let hex = rest.get(..16)?;
+    let key = u64::from_str_radix(hex, 16).ok()?;
+    let plan = rest.get(16..)?.strip_prefix("\",\"plan\":")?.strip_suffix('}')?;
+    Json::parse(plan).ok()?;
+    Some((key, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fopim_plan_cache_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn memory_roundtrip_and_outcomes() {
+        let cache = PlanCache::in_memory();
+        let (plan, outcome) =
+            cache.get_or_compute(7, || Ok("{\"a\":1}".to_string())).unwrap();
+        assert_eq!((plan.as_str(), outcome), ("{\"a\":1}", CacheOutcome::Miss));
+        let (plan, outcome) =
+            cache.get_or_compute(7, || panic!("must not recompute")).unwrap();
+        assert_eq!((plan.as_str(), outcome), ("{\"a\":1}", CacheOutcome::Memory));
+        assert_eq!((cache.misses(), cache.memory_hits(), cache.disk_hits()), (1, 1, 0));
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = PlanCache::in_memory();
+        let err = cache
+            .get_or_compute(1, || Err(ApiError::internal("boom")))
+            .unwrap_err();
+        assert_eq!(err.kind, crate::api::ApiErrorKind::Internal);
+        let (plan, outcome) = cache.get_or_compute(1, || Ok("{}".to_string())).unwrap();
+        assert_eq!((plan.as_str(), outcome), ("{}", CacheOutcome::Miss));
+    }
+
+    #[test]
+    fn persists_across_instances() {
+        let dir = temp_dir("restart");
+        {
+            let cache = PlanCache::persistent(&dir).unwrap();
+            cache.get_or_compute(42, || Ok("{\"plan\":true}".to_string())).unwrap();
+            assert_eq!(cache.loaded_from_disk(), 0);
+        }
+        let cache = PlanCache::persistent(&dir).unwrap();
+        assert_eq!(cache.loaded_from_disk(), 1);
+        let (plan, outcome) =
+            cache.get_or_compute(42, || panic!("must come from disk")).unwrap();
+        assert_eq!((plan.as_str(), outcome), ("{\"plan\":true}", CacheOutcome::Disk));
+        assert_eq!(cache.disk_hits(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_lines_are_skipped() {
+        let dir = temp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("plans.jsonl"),
+            "{\"key\":\"000000000000002a\",\"plan\":{\"ok\":1}}\nnot json\n\
+             {\"key\":\"zzzz\",\"plan\":{}}\n{\"key\":\"0000000000000001\",\"plan\":{broken}\n",
+        )
+        .unwrap();
+        let cache = PlanCache::persistent(&dir).unwrap();
+        assert_eq!(cache.loaded_from_disk(), 1);
+        let (plan, _) = cache.get_or_compute(42, || panic!("loaded")).unwrap();
+        assert_eq!(plan, "{\"ok\":1}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -183,6 +183,25 @@ impl NetworkGraph {
         self.layers.iter().map(Layer::macs).sum()
     }
 
+    /// Stable 64-bit fingerprint of the graph's *shape*: every layer's
+    /// [`Layer::fingerprint`] in node order plus the edge list. Names are
+    /// excluded (see [`Network::fingerprint`]); a chain-promoted graph
+    /// therefore fingerprints differently from its source [`Network`],
+    /// which is intentional — the two run through different sweeps.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write(self.layers.len() as u64);
+        for l in &self.layers {
+            h.write(l.fingerprint());
+        }
+        h.write(self.edges.len() as u64);
+        for &(a, b) in &self.edges {
+            h.write(a as u64);
+            h.write(b as u64);
+        }
+        h.finish()
+    }
+
     /// Per-edge channel consistency, the graph generalization of
     /// [`Network::validate`]'s chain rule:
     ///

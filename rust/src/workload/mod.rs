@@ -360,6 +360,21 @@ impl Network {
             .collect()
     }
 
+    /// Stable 64-bit fingerprint of the network's *shape*: every layer's
+    /// [`Layer::fingerprint`] plus its skip flag, in order. The network
+    /// name is excluded for the same reason layer names are — two
+    /// identically-shaped networks search identically, so they may share
+    /// plan-cache entries.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::Fnv64::new();
+        h.write(self.layers.len() as u64);
+        for l in &self.layers {
+            h.write(l.fingerprint());
+            h.write(u64::from(l.skip));
+        }
+        h.finish()
+    }
+
     /// Validate every layer plus inter-layer channel consistency along the
     /// chain (producer K == consumer C for Conv/Fc chains; MatMul chains
     /// follow the §VI encoding).

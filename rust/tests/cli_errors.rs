@@ -106,6 +106,78 @@ layers:
     std::fs::remove_file(&path).ok();
 }
 
+/// The builder validates configs for every entry point, so a zero budget
+/// fails with one friendly message — not a mid-search panic.
+#[test]
+fn zero_budget_is_rejected_by_the_config_builder() {
+    let out = repro()
+        .args(["search", "--net", "tiny-cnn", "--arch", "small", "--budget", "0"])
+        .output()
+        .expect("run repro search");
+    assert_eq!(out.status.code(), Some(2), "zero budgets must exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(stderr, "repro: error: evaluation budget must be >= 1 (got 0)\n");
+}
+
+#[test]
+fn search_json_emits_one_plan_at_a_time() {
+    let out = repro()
+        .args(["search", "--net", "tiny-cnn", "--json", "--metric", "all"])
+        .output()
+        .expect("run repro search --json");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr,
+        "repro: error: --json emits one plan document (--metric seq|overlap|transform, not all)\n"
+    );
+}
+
+/// Wall-clock budgets are timing-dependent and deliberately not part of
+/// the typed API (`same key ⇒ same plan`); the flags are rejected, not
+/// silently dropped.
+#[test]
+fn wallclock_budgets_are_not_expressible_in_the_api() {
+    let out = repro()
+        .args(["search", "--net", "tiny-cnn", "--json", "--calibrate-ms", "5"])
+        .output()
+        .expect("run repro search --json");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr,
+        "repro: error: --calibrate-ms is not expressible in the typed API — it carries \
+         deterministic evaluation budgets only (use --budget N)\n"
+    );
+}
+
+#[test]
+fn request_requires_an_address() {
+    let out = repro().args(["request", "--net", "tiny-cnn"]).output().expect("run repro request");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr,
+        "repro: error: --addr HOST:PORT is required (e.g. --addr 127.0.0.1:7171)\n"
+    );
+}
+
+/// Unknown-preset resolution through the API carries its stable code in
+/// the CLI diagnostic, same as over HTTP.
+#[test]
+fn search_json_surfaces_stable_error_codes() {
+    let out = repro()
+        .args(["search", "--json", "--net", "tiny-cnn", "--arch", "tpu"])
+        .output()
+        .expect("run repro search --json");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        stderr,
+        "repro: error: unknown_preset: unknown arch preset `tpu` (valid: dram|reram|small)\n"
+    );
+}
+
 #[test]
 fn simulate_replays_one_metric_at_a_time() {
     let out = repro()

@@ -16,14 +16,14 @@ use fastoverlapim::prelude::*;
 use fastoverlapim::workload::{parser, zoo};
 
 fn cfg(budget: usize, seed: u64, threads: usize) -> MapperConfig {
-    MapperConfig {
-        budget: Budget::Evaluations(budget),
-        seed,
-        threads,
-        cache: true,
-        refine_passes: 1,
-        ..Default::default()
-    }
+    MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(seed)
+        .threads(threads)
+        .cache(true)
+        .refine_passes(1)
+        .build()
+        .expect("valid test config")
 }
 
 /// Bit-identity between a chain plan and its linear-graph counterpart.

@@ -18,13 +18,13 @@ use fastoverlapim::prelude::*;
 use fastoverlapim::workload::zoo;
 
 fn cfg(budget: usize, seed: u64, threads: usize) -> MapperConfig {
-    MapperConfig {
-        budget: Budget::Evaluations(budget),
-        seed,
-        threads,
-        refine_passes: 1,
-        ..Default::default()
-    }
+    MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(seed)
+        .threads(threads)
+        .refine_passes(1)
+        .build()
+        .expect("valid test config")
 }
 
 fn assert_plans_identical(a: &NetworkPlan, b: &NetworkPlan, what: &str) {

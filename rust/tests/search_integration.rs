@@ -9,12 +9,12 @@ use fastoverlapim::workload::{parser, zoo};
 use std::time::Duration;
 
 fn cfg(budget: usize, seed: u64) -> MapperConfig {
-    MapperConfig {
-        budget: Budget::Evaluations(budget),
-        seed,
-        refine_passes: 1,
-        ..Default::default()
-    }
+    MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(seed)
+        .refine_passes(1)
+        .build()
+        .expect("valid test config")
 }
 
 #[test]

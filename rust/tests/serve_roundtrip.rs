@@ -1,0 +1,299 @@
+//! End-to-end tests for `repro serve` and the typed v1 API.
+//!
+//! The contract under test is determinism: the same plan key must return
+//! **bit-identical plan bytes** whether the plan is computed cold, served
+//! warm from memory, raced by concurrent clients, served by `repro
+//! search --json` without a server at all, or answered from the disk
+//! cache by a freshly restarted server process.
+//!
+//! The in-process tests drive [`fastoverlapim::serve::Server`] directly
+//! (fast, no subprocess plumbing); the CLI test spawns the real `repro
+//! serve` binary, scrapes its ephemeral port off stdout, and goes through
+//! `repro request` — including a genuine process restart against the same
+//! `--cache-dir`.
+
+use std::io::BufRead as _;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+use fastoverlapim::prelude::*;
+use fastoverlapim::report::Json;
+use fastoverlapim::serve::{http, ServeConfig, Server};
+
+/// A deterministic request small enough for debug-mode CI.
+const REQ: &str = concat!(
+    r#"{"v":1,"network":"tiny-cnn","arch":"small","metric":"transform","#,
+    r#""budget":4,"algo":"random","strategy":"forward","seed":1,"refine":0}"#
+);
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fopim_serve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn start_server(
+    threads: usize,
+    cache_dir: Option<PathBuf>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let config = ServeConfig {
+        host: "127.0.0.1".into(),
+        port: 0,
+        threads,
+        cache_dir,
+        max_inflight: 64,
+        analysis_cache: true,
+    };
+    let server = Server::bind(&config).expect("bind server on an ephemeral port");
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+fn shutdown(addr: &str, handle: std::thread::JoinHandle<()>) {
+    let (status, _) = http::post(addr, "/v1/shutdown", "").expect("shutdown roundtrip");
+    assert_eq!(status, 200, "shutdown must be acknowledged");
+    handle.join().expect("server thread exits after shutdown");
+}
+
+/// The deterministic plan bytes of a rendered response.
+fn plan_bytes(text: &str) -> &str {
+    SearchResponse::extract_plan_raw(text).expect("response has a plan section")
+}
+
+/// A field of the response's nondeterministic `server` section.
+fn server_str(text: &str, key: &str) -> String {
+    Json::parse(text)
+        .expect("response parses")
+        .get("server")
+        .and_then(|s| s.get(key))
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("server section has string `{key}`"))
+        .to_string()
+}
+
+fn server_num(text: &str, key: &str) -> u64 {
+    Json::parse(text)
+        .expect("response parses")
+        .get("server")
+        .and_then(|s| s.get(key))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("server section has number `{key}`"))
+}
+
+#[test]
+fn concurrent_identical_requests_dedup_to_one_bitexact_plan() {
+    let (addr, handle) = start_server(2, None);
+
+    // Eight clients race the same cold key: exactly one computes, the
+    // rest block on the per-key entry and read the finished plan.
+    let clients: Vec<_> = (0..8)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || http::post(&addr, "/v1/search", REQ).expect("post search"))
+        })
+        .collect();
+    let responses: Vec<(u16, String)> =
+        clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+
+    let reference = plan_bytes(&responses[0].1).to_string();
+    assert!(reference.contains("\"network\":\"tiny-cnn\""), "plan names the network");
+    let mut misses = 0;
+    let mut memory = 0;
+    for (status, text) in &responses {
+        assert_eq!(*status, 200, "every racer succeeds: {text}");
+        assert_eq!(plan_bytes(text), reference, "all racers see bit-identical plan bytes");
+        match server_str(text, "plan_cache").as_str() {
+            "miss" => misses += 1,
+            "memory" => memory += 1,
+            other => panic!("unexpected plan_cache outcome `{other}`"),
+        }
+    }
+    assert_eq!(misses, 1, "exactly one racer computes");
+    assert_eq!(memory, 7, "the other seven hit the in-memory plan");
+
+    // A warm sequential repeat is also byte-identical, and the cache
+    // counters in /v1/stats reflect the traffic.
+    let (status, text) = http::post(&addr, "/v1/search", REQ).expect("warm repeat");
+    assert_eq!(status, 200);
+    assert_eq!(plan_bytes(&text), reference);
+    assert_eq!(server_str(&text, "plan_cache"), "memory");
+    assert_eq!(server_num(&text, "searches_run"), 1, "one search ran for nine requests");
+    assert_eq!(server_num(&text, "plan_cache_entries"), 1);
+    assert_eq!(server_num(&text, "plan_cache_memory_hits"), 8);
+
+    // A different seed is a different plan key: computed fresh.
+    let distinct = REQ.replace("\"seed\":1", "\"seed\":2");
+    let (status, text) = http::post(&addr, "/v1/search", &distinct).expect("distinct request");
+    assert_eq!(status, 200);
+    assert_eq!(server_str(&text, "plan_cache"), "miss");
+    assert_eq!(server_num(&text, "plan_cache_entries"), 2);
+
+    let (status, stats) = http::get(&addr, "/v1/stats").expect("stats");
+    assert_eq!(status, 200);
+    let doc = Json::parse(&stats).expect("stats parse");
+    assert_eq!(doc.get("searches_run").and_then(Json::as_u64), Some(2));
+    assert_eq!(doc.get("plan_cache_entries").and_then(Json::as_u64), Some(2));
+
+    let (status, health) = http::get(&addr, "/v1/health").expect("health");
+    assert_eq!(status, 200);
+    assert_eq!(Json::parse(&health).unwrap().get("ok").and_then(Json::as_bool), Some(true));
+
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn http_errors_carry_stable_codes_and_statuses() {
+    let (addr, handle) = start_server(1, None);
+    let cases = [
+        ("/v1/search", "{not json", 400, "bad_request"),
+        ("/v1/search", r#"{"network":"no-such-net"}"#, 404, "unknown_preset"),
+        ("/v1/search", r#"{"network":"tiny-cnn","arch":"tpu"}"#, 404, "unknown_preset"),
+        (
+            "/v1/search",
+            r#"{"network":{"yaml":"layers:\n  - nonsense"}}"#,
+            422,
+            "invalid_network",
+        ),
+        ("/v1/search", r#"{"v":9,"network":"tiny-cnn"}"#, 400, "bad_request"),
+        ("/v2/search", REQ, 400, "bad_request"),
+    ];
+    for (path, body, want_status, want_code) in cases {
+        let (status, text) = http::post(&addr, path, body).expect("post");
+        assert_eq!(status, want_status, "{path} {body}: {text}");
+        let err = ApiError::parse(&text)
+            .unwrap_or_else(|| panic!("error body parses as ApiError: {text}"));
+        assert_eq!(err.kind.code(), want_code, "{path} {body}");
+    }
+    shutdown(&addr, handle);
+}
+
+#[test]
+fn disk_persisted_plans_survive_a_server_restart() {
+    let dir = temp_dir("restart");
+    let (addr, handle) = start_server(1, Some(dir.clone()));
+    let (status, cold) = http::post(&addr, "/v1/search", REQ).expect("cold request");
+    assert_eq!(status, 200);
+    assert_eq!(server_str(&cold, "plan_cache"), "miss");
+    let reference = plan_bytes(&cold).to_string();
+    shutdown(&addr, handle);
+
+    // A new server instance over the same directory answers the repeat
+    // from the persisted cache without re-searching, byte-identically.
+    let (addr, handle) = start_server(1, Some(dir.clone()));
+    let (status, warm) = http::post(&addr, "/v1/search", REQ).expect("post-restart repeat");
+    assert_eq!(status, 200);
+    assert_eq!(server_str(&warm, "plan_cache"), "disk");
+    assert_eq!(plan_bytes(&warm), reference, "disk-served plan bytes are identical");
+    assert_eq!(server_num(&warm, "searches_run"), 0, "no search ran after the restart");
+    assert_eq!(server_num(&warm, "plan_cache_loaded"), 1);
+    shutdown(&addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kills the spawned `repro serve` child if a test panics before its
+/// orderly shutdown, so failed CI runs don't leak listeners.
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Spawn the real binary and scrape the bound address off stdout.
+fn spawn_serve_cli(cache_dir: &std::path::Path) -> (String, ChildGuard) {
+    let child = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["serve", "--port", "0", "--threads", "2"])
+        .args(["--cache-dir", cache_dir.to_str().expect("utf-8 temp path")])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn repro serve");
+    let mut guard = ChildGuard(child);
+    let stdout = guard.0.stdout.take().expect("piped stdout");
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).expect("read startup line");
+    let addr = line
+        .strip_prefix("repro serve: listening on ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unexpected startup line `{line}`"))
+        .to_string();
+    (addr, guard)
+}
+
+fn request_cli(addr: &str, extra: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["request", "--addr", addr])
+        .args(["--net", "tiny-cnn", "--arch", "small", "--metric", "transform"])
+        .args(["--budget", "4", "--seed", "1", "--refine", "0"])
+        .args(extra)
+        .output()
+        .expect("run repro request")
+}
+
+#[test]
+fn serve_and_request_binaries_roundtrip_with_warm_restart() {
+    let dir = temp_dir("cli");
+    let (addr, mut guard) = spawn_serve_cli(&dir);
+
+    let cold = request_cli(&addr, &["--raw"]);
+    assert!(cold.status.success(), "stderr: {}", String::from_utf8_lossy(&cold.stderr));
+    let cold_text = String::from_utf8(cold.stdout).expect("utf-8 response");
+    assert_eq!(server_str(&cold_text, "plan_cache"), "miss");
+    let reference = plan_bytes(cold_text.trim_end()).to_string();
+
+    let warm = request_cli(&addr, &["--raw"]);
+    assert!(warm.status.success());
+    let warm_text = String::from_utf8(warm.stdout).expect("utf-8 response");
+    assert_eq!(server_str(&warm_text, "plan_cache"), "memory");
+    assert_eq!(plan_bytes(warm_text.trim_end()), reference);
+
+    // The human-readable client view mentions the cache outcome.
+    let pretty = request_cli(&addr, &[]);
+    assert!(pretty.status.success());
+    let out = String::from_utf8_lossy(&pretty.stdout).to_string();
+    assert!(out.contains("server: plan cache memory"), "stdout:\n{out}");
+    assert!(out.contains("tiny-cnn"), "stdout:\n{out}");
+
+    // A server-side error surfaces its stable code and exits 2.
+    let bad = request_cli(&addr, &["--arch", "tpu"]);
+    assert_eq!(bad.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(
+        stderr.contains("server returned 404: unknown_preset:"),
+        "stderr:\n{stderr}"
+    );
+
+    // `repro search --json` (no server at all) emits the same plan bytes
+    // for the same plan key — the API is one schema, not two.
+    let oneshot = Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["search", "--json", "--net", "tiny-cnn", "--arch", "small"])
+        .args(["--metric", "transform", "--budget", "4", "--seed", "1", "--refine", "0"])
+        .output()
+        .expect("run repro search --json");
+    assert!(oneshot.status.success(), "{}", String::from_utf8_lossy(&oneshot.stderr));
+    let oneshot_text = String::from_utf8(oneshot.stdout).expect("utf-8 response");
+    assert_eq!(plan_bytes(oneshot_text.trim_end()), reference);
+    assert_eq!(server_str(&oneshot_text, "plan_cache"), "off");
+
+    let (status, _) = http::post(&addr, "/v1/shutdown", "").expect("shutdown");
+    assert_eq!(status, 200);
+    let exit = guard.0.wait().expect("server process exits");
+    assert!(exit.success(), "serve must exit 0 after /v1/shutdown");
+
+    // Restart the *process* over the same --cache-dir: the repeat is
+    // answered from disk with byte-identical plan bytes.
+    let (addr, mut guard) = spawn_serve_cli(&dir);
+    let disk = request_cli(&addr, &["--raw"]);
+    assert!(disk.status.success(), "stderr: {}", String::from_utf8_lossy(&disk.stderr));
+    let disk_text = String::from_utf8(disk.stdout).expect("utf-8 response");
+    assert_eq!(server_str(&disk_text, "plan_cache"), "disk");
+    assert_eq!(plan_bytes(disk_text.trim_end()), reference);
+
+    let (status, _) = http::post(&addr, "/v1/shutdown", "").expect("second shutdown");
+    assert_eq!(status, 200);
+    assert!(guard.0.wait().expect("exit").success());
+    let _ = std::fs::remove_dir_all(&dir);
+}

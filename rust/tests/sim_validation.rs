@@ -31,16 +31,19 @@ const METRICS: [Metric; 3] = [Metric::Sequential, Metric::Overlap, Metric::Trans
 /// debug CI *and* constantly exercises the sampled-tolerance paths of
 /// the equality contract.
 fn sweep_config(algo: SearchAlgo, seed: u64, threads: usize) -> MapperConfig {
-    MapperConfig {
-        budget: Budget::Evaluations(4),
-        algo,
-        seed,
-        refine_passes: 0,
-        threads,
-        overlap: OverlapConfig { max_probe_steps: 64 },
-        transform: TransformConfig { max_probe_jobs: 64 },
-        ..Default::default()
-    }
+    let mut cfg = MapperConfig::builder()
+        .budget_evals(4)
+        .algo(algo)
+        .seed(seed)
+        .refine_passes(0)
+        .threads(threads)
+        .build()
+        .expect("valid sweep config");
+    // Probe caps have no builder setters (analysis tuning, not search
+    // configuration); the built struct stays plain-old-data for these.
+    cfg.overlap = OverlapConfig { max_probe_steps: 64 };
+    cfg.transform = TransformConfig { max_probe_jobs: 64 };
+    cfg
 }
 
 /// Seed → (traversal strategy, worker threads). The three sweep seeds
