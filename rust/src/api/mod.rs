@@ -258,6 +258,11 @@ pub struct SearchRequest {
     /// Replay the winning plan through the validation simulator before
     /// responding (server-side assertion; does not change the plan).
     pub verify: bool,
+    /// Record search-phase spans ([`crate::obs::Recorder`]) and return
+    /// the Chrome-trace profile in the response's nondeterministic
+    /// `server` section. Observationally transparent — never
+    /// plan-affecting, never part of [`plan_key`].
+    pub profile: bool,
 }
 
 impl Default for SearchRequest {
@@ -273,14 +278,16 @@ impl Default for SearchRequest {
             seed: cfg.seed,
             refine_passes: cfg.refine_passes,
             verify: false,
+            profile: false,
         }
     }
 }
 
 impl SearchRequest {
-    /// Serialize to the versioned wire shape.
+    /// Serialize to the versioned wire shape. `profile` is emitted only
+    /// when set, so pre-profiler request documents render byte-identically.
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields = vec![
             ("v".into(), Json::num(API_VERSION as u32)),
             ("network".into(), self.network.to_json()),
             ("arch".into(), self.arch.to_json()),
@@ -291,7 +298,11 @@ impl SearchRequest {
             ("seed".into(), Json::Num(self.seed as f64)),
             ("refine".into(), Json::Num(self.refine_passes as f64)),
             ("verify".into(), Json::Bool(self.verify)),
-        ])
+        ];
+        if self.profile {
+            fields.push(("profile".into(), Json::Bool(true)));
+        }
+        Json::Obj(fields)
     }
 
     pub fn render(&self) -> String {
@@ -389,6 +400,12 @@ impl SearchRequest {
                 .ok_or_else(|| ApiError::bad_request("`verify` must be a boolean"))?,
             None => defaults.verify,
         };
+        let profile = match doc.get("profile") {
+            Some(j) => j
+                .as_bool()
+                .ok_or_else(|| ApiError::bad_request("`profile` must be a boolean"))?,
+            None => defaults.profile,
+        };
         Ok(SearchRequest {
             network,
             arch,
@@ -399,6 +416,7 @@ impl SearchRequest {
             seed,
             refine_passes,
             verify,
+            profile,
         })
     }
 
@@ -630,18 +648,16 @@ pub fn plan_to_json(plan: &NetworkPlan, arch: &Arch) -> Json {
     ])
 }
 
-/// Serialize the full analysis-cache counters (server section).
+/// Serialize the full analysis-cache counters (server section), in the
+/// one field order [`CacheStats::fields`] defines for every surface.
 pub fn cache_stats_json(stats: &CacheStats) -> Json {
-    Json::Obj(vec![
-        ("ready_hits".into(), Json::Num(stats.ready_hits as f64)),
-        ("ready_misses".into(), Json::Num(stats.ready_misses as f64)),
-        ("transform_hits".into(), Json::Num(stats.transform_hits as f64)),
-        ("transform_misses".into(), Json::Num(stats.transform_misses as f64)),
-        ("genome_hits".into(), Json::Num(stats.genome_hits as f64)),
-        ("genome_misses".into(), Json::Num(stats.genome_misses as f64)),
-        ("delta_hits".into(), Json::Num(stats.delta_hits as f64)),
-        ("delta_misses".into(), Json::Num(stats.delta_misses as f64)),
-    ])
+    Json::Obj(
+        stats
+            .fields()
+            .iter()
+            .map(|&(name, value)| (name.to_string(), Json::Num(value as f64)))
+            .collect(),
+    )
 }
 
 /// The API's lowercase metric tag (`seq|overlap|transform`).
@@ -726,9 +742,15 @@ mod tests {
             seed: 7,
             refine_passes: 0,
             verify: true,
+            profile: true,
         };
         let text = req.render();
         assert_eq!(SearchRequest::parse(&text).unwrap(), req);
+        // `profile` is emitted only when set: an unprofiled request
+        // renders exactly the pre-profiler wire bytes.
+        let plain = SearchRequest { profile: false, ..req };
+        assert!(!plain.render().contains("profile"));
+        assert_eq!(SearchRequest::parse(&plain.render()).unwrap(), plain);
     }
 
     #[test]
@@ -785,6 +807,9 @@ mod tests {
         let mut verified = req.clone();
         verified.verify = true;
         assert_eq!(base, plan_key(&verified, &arch, &wl), "verify is not plan-affecting");
+        let mut profiled = req.clone();
+        profiled.profile = true;
+        assert_eq!(base, plan_key(&profiled, &arch, &wl), "profile is not plan-affecting");
     }
 
     #[test]

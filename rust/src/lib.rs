@@ -64,6 +64,13 @@
 //! * [`exec`] — an overlap-scheduled functional execution engine that runs
 //!   a real (small) network through the PJRT executables following the
 //!   searched schedule, proving the schedules are causally valid.
+//! * [`obs`] — unified observability: the `Recorder`/`Span` search
+//!   profiler (`repro search --profile`, Chrome/Perfetto output via the
+//!   generalized [`obs::Trace`] serializer the simulator re-exports) and
+//!   the crate-wide metrics [`obs::Registry`] (counters, gauges, latency
+//!   histograms) behind `--stats`, `/v1/stats` and `GET /v1/metrics` —
+//!   all observationally transparent: plans are bit-identical with
+//!   tracing on or off, at any thread count.
 //! * [`api`] — the typed request/response wire format (`SearchRequest`,
 //!   `SearchResponse`, `ApiError` with stable machine-readable error
 //!   codes): a versioned std-only JSON schema shared by `repro serve`,
@@ -87,6 +94,7 @@ pub mod dataspace;
 pub mod exec;
 pub mod mapping;
 pub mod mapspace;
+pub mod obs;
 pub mod optimize;
 pub mod overlap;
 pub mod perf;
@@ -106,6 +114,7 @@ pub mod prelude {
     pub use crate::dataspace::{AnalyticalGen, DataSpace, LoopTable, Range, ReferenceGen};
     pub use crate::mapping::{Dim, Loop, LoopKind, Mapping};
     pub use crate::mapspace::{FactorTable, MapSpace, MapSpaceConfig, MappingConstraint};
+    pub use crate::obs::{Counter, Gauge, Histogram, Recorder, Registry, Span};
     pub use crate::optimize::{
         GeneticAlgorithm, OptimizeConfig, RandomSearch, Scored, SearchAlgo, SearchEngine,
         SimulatedAnnealing,

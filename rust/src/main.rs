@@ -66,7 +66,7 @@ SUBCOMMANDS
            [--deadline-ms T] [--calibrate-ms T [--probe N]]
            [--refine N] [--threads N] [--cache on|off]
            [--pipeline on|off] [--lookahead on|off] [--per-layer] [--stats]
-           [--csv] [--json]
+           [--csv] [--json] [--profile out.json]
            (--metric all runs the whole baseline matrix: the three metric
             sweeps as pipelined jobs sharing candidate enumeration;
             --algo selects the search engine — ga/sa/hill are the guided
@@ -81,22 +81,32 @@ SUBCOMMANDS
             YAML file using `inputs:` edges — search with the branch-aware
             topological engine and report per-edge overlap;
             --json prints the typed v1 API response document instead of
-            tables — the same schema `repro serve` answers with)
+            tables — the same schema `repro serve` answers with;
+            --profile writes the search-phase spans — enumeration,
+            scoring chunks, engine generations, overlap analyses — as
+            Chrome/Perfetto trace JSON viewable at ui.perfetto.dev,
+            without changing the plan by a single bit)
   serve    [--port P] [--host H] [--threads N] [--cache-dir DIR]
-           [--max-inflight N] [--cache on|off]
+           [--max-inflight N] [--cache on|off] [--log-json]
            (mapping-as-a-service: POST /v1/search takes a typed JSON
             request, GET /v1/health and /v1/stats report liveness and
-            cache/pool counters, POST /v1/shutdown exits cleanly;
-            --port 0 picks an ephemeral port — the bound address is
-            printed on startup; --cache-dir persists the plan cache as
-            JSON lines so restarts answer repeat requests from disk;
-            the same plan key always returns bit-identical plan bytes)
+            cache/pool counters, GET /v1/metrics exposes the same
+            counters in Prometheus text format, POST /v1/shutdown exits
+            cleanly; --port 0 picks an ephemeral port — the bound
+            address is printed on startup; --cache-dir persists the plan
+            cache as JSON lines so restarts answer repeat requests from
+            disk; --log-json prints a one-line JSON access log per
+            connection; the same plan key always returns bit-identical
+            plan bytes)
   request  --addr HOST:PORT [--file req.json | <search flags>] [--raw]
+           [--profile]
            (post one search to a running `repro serve` — either a
             pre-built request document via --file, or the same
             --net/--arch/--metric/--budget/--algo/--strategy/--seed
             flags `search` takes; --raw prints the JSON response instead
-            of tables; server errors exit 2 with the stable error code)
+            of tables; --profile asks the server to embed a search-span
+            trace in the response's server section; server errors exit 2
+            with the stable error code)
   simulate --net <zoo|graph-zoo|file.yaml> [--arch dram|reram|small|file.yaml]
            [--budget N] [--seed S] [--strategy forward|backward|middle|middle2]
            [--metric seq|overlap|transform] [--algo random|ga|sa|hill]
@@ -291,26 +301,35 @@ fn strategy(args: &Args) -> SearchStrategy {
 /// `--stats`: the full memoization picture after a search — the per-pair
 /// analysis tables, the genome memo (duplicate offspring scored once and
 /// then priced from the memo), the incremental re-evaluation cache, and
-/// the persistent worker pool's dispatch counters.
+/// the persistent worker pool's dispatch counters. The values are read
+/// back out of [`NetworkSearch::stats_registry`] — the same registry the
+/// server exposes — so this surface can never drift from `/v1/stats`.
 fn print_search_stats(search: &NetworkSearch<'_>) {
-    let stats = search.cache_stats();
+    let fields: std::collections::BTreeMap<String, u64> =
+        search.stats_registry().json_fields().into_iter().collect();
+    let get = |key: &str| fields.get(key).copied().unwrap_or(0);
     println!(
         "analysis cache: ready {}h/{}m, transform {}h/{}m",
-        stats.ready_hits, stats.ready_misses, stats.transform_hits, stats.transform_misses
+        get("ready_hits"),
+        get("ready_misses"),
+        get("transform_hits"),
+        get("transform_misses")
     );
     println!(
         "genome memo: {} duplicate offspring deduped / {} scored fresh",
-        stats.genome_hits, stats.genome_misses
+        get("genome_hits"),
+        get("genome_misses")
     );
     println!(
         "delta re-evaluation: {} nest-aggregate hits / {} misses",
-        stats.delta_hits, stats.delta_misses
+        get("delta_hits"),
+        get("delta_misses")
     );
     println!(
         "worker pool: {} worker thread{}, {} jobs dispatched",
-        search.pool_worker_count(),
-        if search.pool_worker_count() == 1 { "" } else { "s" },
-        search.pool_jobs_dispatched()
+        get("pool_workers"),
+        if get("pool_workers") == 1 { "" } else { "s" },
+        get("pool_jobs_dispatched")
     );
 }
 
@@ -393,7 +412,29 @@ fn request_from_flags(args: &Args) -> SearchRequest {
         seed: int_arg(args, "seed").unwrap_or(defaults.seed),
         refine_passes: int_arg(args, "refine").unwrap_or(defaults.refine_passes as u64) as usize,
         verify: args.has_flag("verify"),
+        profile: args.has_flag("profile"),
     }
+}
+
+/// `--profile out.json`: an enabled span recorder when a profile path
+/// was given, the free disabled recorder otherwise.
+fn profile_recorder(args: &Args) -> Recorder {
+    if args.get("profile").is_some() {
+        Recorder::enabled()
+    } else {
+        Recorder::disabled()
+    }
+}
+
+/// Write the spans recorded during a search as Chrome/Perfetto trace
+/// JSON (viewable at ui.perfetto.dev). The notice goes to stderr like
+/// the progress lines, so `--json` output stays one document.
+fn write_profile(args: &Args, recorder: &Recorder, network: &str) {
+    let Some(path) = args.get("profile") else { return };
+    let trace = recorder.finish(network);
+    std::fs::write(path, trace.chrome_json())
+        .unwrap_or_else(|e| fail(format!("writing profile `{path}`: {e}")));
+    eprintln!("profile: {path} ({} spans)", trace.events.len());
 }
 
 /// `search --json`: run one search locally and print the typed v1
@@ -412,17 +453,26 @@ fn cmd_search_json(args: &Args) {
     let threads = args.get_usize("threads", 1).max(1);
     let cfg = req.mapper_config(threads).unwrap_or_else(|e| fail(e.to_string()));
     let started = std::time::Instant::now();
-    let search = NetworkSearch::new(&arch, cfg, req.strategy);
+    let recorder = if req.profile || args.get("profile").is_some() {
+        Recorder::enabled()
+    } else {
+        Recorder::disabled()
+    };
+    let search = NetworkSearch::new(&arch, cfg, req.strategy).with_recorder(recorder.clone());
     let plan = api::run_workload(&search, &workload, req.metric);
-    let server = Json::Obj(vec![
+    let mut server = vec![
         ("elapsed_us".into(), Json::Num(started.elapsed().as_micros() as f64)),
         ("plan_cache".into(), Json::str("off")),
         ("plan_key".into(), Json::str(format!("{:016x}", api::plan_key(&req, &arch, &workload)))),
         ("analysis_cache".into(), api::cache_stats_json(&search.cache_stats())),
         ("threads".into(), Json::Num(threads as f64)),
-    ]);
-    let resp = SearchResponse::new(&api::plan_to_json(&plan, &arch), server);
+    ];
+    if req.profile {
+        server.push(("profile".into(), recorder.finish(workload.name()).to_json()));
+    }
+    let resp = SearchResponse::new(&api::plan_to_json(&plan, &arch), Json::Obj(server));
     println!("{}", resp.render());
+    write_profile(args, &recorder, workload.name());
 }
 
 /// `repro serve`: bind the mapping-as-a-service server and run until a
@@ -441,6 +491,7 @@ fn cmd_serve(args: &Args) {
         cache_dir: args.get("cache-dir").map(std::path::PathBuf::from),
         max_inflight: int_arg(args, "max-inflight").unwrap_or(16).max(1),
         analysis_cache: args.get_switch("cache", true),
+        log_json: args.has_flag("log-json"),
     };
     let server = Server::bind(&config).unwrap_or_else(|e| fail(e.to_string()));
     println!(
@@ -550,7 +601,8 @@ fn cmd_search_chain(
         cfg.engine
     );
     let threads = cfg.threads;
-    let search = NetworkSearch::new(&arch, cfg, strat);
+    let recorder = profile_recorder(args);
+    let search = NetworkSearch::new(&arch, cfg, strat).with_recorder(recorder.clone());
     let plan = search.run(&net, metric);
 
     let mut t = Table::new(
@@ -589,6 +641,7 @@ fn cmd_search_chain(
     if args.has_flag("per-layer") {
         print_per_layer(args, &plan, "per-layer contributions (cycles)");
     }
+    write_profile(args, &recorder, &net.name);
 }
 
 /// `search --metric all`: the full baseline matrix — the three metric
@@ -624,7 +677,8 @@ fn cmd_search_matrix(
         "searching {} on {} under all three metrics ({mode}, budget {}, {:?})...",
         net.name, arch.name, cfg.budget, strat
     );
-    let search = NetworkSearch::new(arch, cfg, strat);
+    let recorder = profile_recorder(args);
+    let search = NetworkSearch::new(arch, cfg, strat).with_recorder(recorder.clone());
     let started = std::time::Instant::now();
     let (seq, ov, tr) = search.run_all_metrics(net);
     let wallclock = started.elapsed();
@@ -665,6 +719,7 @@ fn cmd_search_matrix(
             );
         }
     }
+    write_profile(args, &recorder, &net.name);
 }
 
 fn cmd_search_graph(
@@ -691,7 +746,8 @@ fn cmd_search_graph(
         cfg.engine
     );
     let threads = cfg.threads;
-    let search = NetworkSearch::new(arch, cfg, strat);
+    let recorder = profile_recorder(args);
+    let search = NetworkSearch::new(arch, cfg, strat).with_recorder(recorder.clone());
     let plan = search.run_graph(g, metric);
 
     let mut t = Table::new(
@@ -730,6 +786,7 @@ fn cmd_search_graph(
     if args.has_flag("per-layer") {
         print_per_layer(args, &plan, "per-layer contributions (cycles)");
     }
+    write_profile(args, &recorder, &g.name);
 }
 
 /// `search --metric all` on a graph workload: the baseline matrix under
@@ -751,7 +808,8 @@ fn cmd_search_matrix_graph(
         cfg.budget,
         strat
     );
-    let search = NetworkSearch::new(arch, cfg, strat);
+    let recorder = profile_recorder(args);
+    let search = NetworkSearch::new(arch, cfg, strat).with_recorder(recorder.clone());
     let started = std::time::Instant::now();
     let (seq, ov, tr) = search.run_graph_all_metrics(g);
     let wallclock = started.elapsed();
@@ -792,6 +850,7 @@ fn cmd_search_matrix_graph(
             );
         }
     }
+    write_profile(args, &recorder, &g.name);
 }
 
 /// Per-edge pairwise overlap report for a graph plan (each

@@ -1,0 +1,351 @@
+//! The crate-wide metrics registry: counters, gauges, and fixed-bucket
+//! latency histograms behind one exposition surface.
+//!
+//! Metric names are the raw JSON stat keys the CLI and server already
+//! print (`plan_cache_misses`, `pool_jobs_dispatched`, …); the `fopim_`
+//! Prometheus namespace prefix is added only at render time by
+//! [`Registry::prometheus`], so one registration backs `--stats`,
+//! `/v1/stats`, `SearchResponse.server` *and* `GET /v1/metrics` with no
+//! counter drift between them.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap atomic
+//! clones; registration is idempotent, so re-registering a name returns
+//! the existing handle. Histograms (and any metric registered hidden)
+//! are Prometheus-only: [`Registry::json_fields`] renders exactly the
+//! visible counters and gauges, in registration order, which is what
+//! keeps the pinned `/v1/stats` field set stable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing count.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    value: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the count — for mirroring an externally maintained
+    /// monotonic counter (e.g. the plan cache's own atomics) into the
+    /// registry before a render.
+    pub fn set(&self, n: u64) {
+        self.value.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A value that can go up and down.
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    value: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.value.store(n, Ordering::Relaxed);
+    }
+
+    /// Increment and return the *new* value — one atomic op, so a gauge
+    /// can back an admission counter (inflight requests) race-free.
+    pub fn inc(&self) -> u64 {
+        self.value.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn dec(&self) {
+        self.value.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (µs) of the finite latency buckets: powers of 4 from
+/// 1 µs to ~67 s, 14 buckets + the implicit `+Inf`. Fixed bounds keep
+/// the exposition schema stable across runs and versions.
+pub const LATENCY_BUCKETS_US: [u64; 14] = [
+    1,
+    4,
+    16,
+    64,
+    256,
+    1024,
+    4096,
+    16384,
+    65536,
+    262144,
+    1048576,
+    4194304,
+    16777216,
+    67108864,
+];
+
+struct HistogramInner {
+    /// Per-bucket observation counts, `buckets[i]` ≤ `LATENCY_BUCKETS_US[i]`
+    /// (non-cumulative; the Prometheus render accumulates). The final
+    /// slot is the `+Inf` overflow bucket.
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// A fixed-log-bucket latency histogram (microseconds).
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistogramInner>,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            inner: Arc::new(HistogramInner {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                sum: AtomicU64::new(0),
+                count: AtomicU64::new(0),
+            }),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one latency observation, in microseconds.
+    pub fn observe(&self, us: u64) {
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        self.inner.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.inner.sum.fetch_add(us, Ordering::Relaxed);
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.inner.sum.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Handle {
+    fn kind(&self) -> &'static str {
+        match self {
+            Handle::Counter(_) => "counter",
+            Handle::Gauge(_) => "gauge",
+            Handle::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    /// Whether [`Registry::json_fields`] renders this metric (hidden
+    /// metrics are Prometheus-only).
+    json: bool,
+    handle: Handle,
+}
+
+/// One named collection of metrics, rendered to JSON stat fields and to
+/// Prometheus text exposition from the same handles.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, json: bool, handle: Handle) -> Handle {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            assert_eq!(
+                e.handle.kind(),
+                handle.kind(),
+                "metric `{name}` re-registered as a different kind"
+            );
+            return e.handle.clone();
+        }
+        entries.push(Entry { name: name.into(), help: help.into(), json, handle: handle.clone() });
+        handle
+    }
+
+    /// Register (or look up) a counter, visible in the JSON stat fields.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        match self.register(name, help, true, Handle::Counter(Counter::default())) {
+            Handle::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a gauge, visible in the JSON stat fields.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        match self.register(name, help, true, Handle::Gauge(Gauge::default())) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a Prometheus-only gauge, excluded from the
+    /// JSON stat fields (which are pinned by the serve roundtrip suite).
+    pub fn hidden_gauge(&self, name: &str, help: &str) -> Gauge {
+        match self.register(name, help, false, Handle::Gauge(Gauge::default())) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Register (or look up) a latency histogram — always
+    /// Prometheus-only.
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        match self.register(name, help, false, Handle::Histogram(Histogram::default())) {
+            Handle::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    /// The visible counters and gauges as `(name, value)` pairs, in
+    /// registration order — the single source for every JSON stats
+    /// surface (`--stats`, `/v1/stats`, `SearchResponse.server`).
+    pub fn json_fields(&self) -> Vec<(String, u64)> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.json)
+            .map(|e| {
+                let v = match &e.handle {
+                    Handle::Counter(c) => c.get(),
+                    Handle::Gauge(g) => g.get(),
+                    Handle::Histogram(h) => h.count(),
+                };
+                (e.name.clone(), v)
+            })
+            .collect()
+    }
+
+    /// Render every metric (hidden included) in the Prometheus text
+    /// exposition format, under the `fopim_` namespace.
+    pub fn prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for e in self.entries.lock().unwrap().iter() {
+            let name = format!("fopim_{}", e.name);
+            let _ = writeln!(out, "# HELP {name} {}", e.help);
+            let _ = writeln!(out, "# TYPE {name} {}", e.handle.kind());
+            match &e.handle {
+                Handle::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Handle::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Handle::Histogram(h) => {
+                    let mut cumulative = 0u64;
+                    for (i, &bound) in LATENCY_BUCKETS_US.iter().enumerate() {
+                        cumulative += h.inner.buckets[i].load(Ordering::Relaxed);
+                        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cumulative}");
+                    }
+                    cumulative += h.inner.buckets[LATENCY_BUCKETS_US.len()]
+                        .load(Ordering::Relaxed);
+                    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+                    let _ = writeln!(out, "{name}_sum {}", h.sum());
+                    let _ = writeln!(out, "{name}_count {}", h.count());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_handles_share_state() {
+        let reg = Registry::new();
+        let a = reg.counter("requests", "requests served");
+        let b = reg.counter("requests", "requests served");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.json_fields(), vec![("requests".to_string(), 3)]);
+    }
+
+    #[test]
+    fn json_fields_keep_registration_order_and_skip_hidden() {
+        let reg = Registry::new();
+        reg.counter("first", "a").inc();
+        reg.hidden_gauge("secret", "b").set(9);
+        reg.gauge("second", "c").set(5);
+        reg.histogram("lat_us", "d").observe(10);
+        let fields = reg.json_fields();
+        assert_eq!(
+            fields,
+            vec![("first".to_string(), 1), ("second".to_string(), 5)]
+        );
+    }
+
+    #[test]
+    fn gauge_backs_admission_counting() {
+        let g = Gauge::default();
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.inc(), 2);
+        g.dec();
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_exposition() {
+        let reg = Registry::new();
+        let h = reg.histogram("search_us", "search latency");
+        h.observe(1); // le=1
+        h.observe(3); // le=4
+        h.observe(100); // le=256
+        h.observe(u64::MAX); // +Inf overflow
+        assert_eq!(h.count(), 4);
+        let text = reg.prometheus();
+        assert!(text.contains("# TYPE fopim_search_us histogram"));
+        assert!(text.contains("fopim_search_us_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("fopim_search_us_bucket{le=\"4\"} 2\n"));
+        assert!(text.contains("fopim_search_us_bucket{le=\"256\"} 3\n"));
+        assert!(text.contains("fopim_search_us_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("fopim_search_us_count 4\n"));
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let reg = Registry::new();
+        reg.counter("plan_cache_misses", "plan cache misses").add(7);
+        reg.gauge("threads", "configured worker threads").set(4);
+        let text = reg.prometheus();
+        assert!(text.contains("# HELP fopim_plan_cache_misses plan cache misses\n"));
+        assert!(text.contains("# TYPE fopim_plan_cache_misses counter\n"));
+        assert!(text.contains("fopim_plan_cache_misses 7\n"));
+        assert!(text.contains("# TYPE fopim_threads gauge\n"));
+        assert!(text.contains("fopim_threads 4\n"));
+        assert!(text.ends_with('\n'));
+    }
+}

@@ -1,0 +1,34 @@
+//! Unified observability: search-phase span tracing, a crate-wide
+//! metrics registry, and the Chrome/Perfetto trace serializer.
+//!
+//! Three parts, one contract:
+//!
+//! * [`trace`] — the [`Trace`] serializer (Chrome trace event format),
+//!   generalized out of `sim/` so the simulator's hardware schedules and
+//!   the search profiler's span trees share one emitter
+//!   ([`crate::sim`] re-exports it; `repro simulate --trace` is
+//!   unchanged).
+//! * [`span`] — the [`Recorder`]/[`Span`] API instrumented through the
+//!   search hot path and surfaced as `repro search --profile out.json`
+//!   and the `profile` field on [`crate::api::SearchRequest`].
+//! * [`metrics`] — [`Registry`] with [`Counter`]s, [`Gauge`]s and
+//!   fixed-bucket latency [`Histogram`]s, rendered identically to the
+//!   JSON stats surfaces and to `GET /v1/metrics` Prometheus text
+//!   exposition.
+//!
+//! The contract carried throughout: **observability is observationally
+//! transparent**. Plans are bit-identical with tracing/metrics on or
+//! off, at any thread count, and nothing timestamp-derived ever enters
+//! the deterministic `plan` response section or [`crate::api::plan_key`]
+//! — see the [`span`] module docs for the span-site determinism rules.
+
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, Registry};
+pub use span::{
+    Recorder, Span, TRACK_ANALYSIS, TRACK_ENGINE, TRACK_ENUM, TRACK_SCORE, TRACK_SEARCH,
+    TRACK_SERVE,
+};
+pub use trace::{Trace, TraceEvent};

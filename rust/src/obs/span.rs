@@ -1,0 +1,217 @@
+//! Search-phase span tracing.
+//!
+//! A [`Recorder`] collects hierarchical wall-clock spans from the search
+//! hot path and renders them as a Chrome/Perfetto trace
+//! ([`Recorder::finish`]). The design constraint is the crate-wide one:
+//! **observational transparency**. A disabled recorder (the default
+//! everywhere) is a single `Option` check — no allocation, no lock, not
+//! even the span name is formatted — and an enabled recorder only ever
+//! *observes* the search: nothing it records can flow back into a plan.
+//!
+//! # Determinism contract
+//!
+//! Spans are recorded only at *deterministically scheduled* sites: the
+//! per-call sweep/refine steps, the serial chunk drain inside
+//! [`crate::search::ParallelMapper::run`], engine generations, shared
+//! enumeration fetches (once per consumer, not per computing thread),
+//! and the final per-edge analysis pass. Racy sites — detached
+//! look-ahead tasks, the candidate-store compute closure whose executor
+//! is a race — record nothing. Consequently two runs of the same search
+//! produce the same span *multiset* `(pid, tid, name)` at any thread
+//! count; only timestamps and durations differ. Track rows (`tid`) are
+//! metric ordinals or fixed constants, never thread ids.
+//!
+//! # Track taxonomy (pid)
+//!
+//! * [`TRACK_SEARCH`] `search` — per-layer sweep and refinement steps.
+//! * [`TRACK_ENUM`] `enumerate` — shared candidate-enumeration fetches.
+//! * [`TRACK_SCORE`] `score` — candidate-scoring chunks.
+//! * [`TRACK_ENGINE`] `engine` — guided-engine generations.
+//! * [`TRACK_ANALYSIS`] `analysis` — chosen-pair overlap/transform
+//!   analyses (incumbent re-scores, the final per-edge pass).
+//! * [`TRACK_SERVE`] `serve` — server-side phases (plan-cache lookup).
+
+use crate::obs::trace::{Trace, TraceEvent};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Span track: per-layer sweep and refinement steps.
+pub const TRACK_SEARCH: u64 = 0;
+/// Span track: shared candidate-enumeration fetches.
+pub const TRACK_ENUM: u64 = 1;
+/// Span track: candidate-scoring chunks.
+pub const TRACK_SCORE: u64 = 2;
+/// Span track: guided-engine generations.
+pub const TRACK_ENGINE: u64 = 3;
+/// Span track: chosen-pair overlap/transform analyses.
+pub const TRACK_ANALYSIS: u64 = 4;
+/// Span track: server-side phases.
+pub const TRACK_SERVE: u64 = 5;
+
+/// Track-group names, indexed by the `TRACK_*` pids.
+const SPAN_TRACKS: [&str; 6] =
+    ["search", "enumerate", "score", "engine", "analysis", "serve"];
+
+struct RecorderInner {
+    start: Instant,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// A shared span sink. Cloning is cheap (an `Arc` bump) and every clone
+/// feeds the same trace; the default-constructed recorder is disabled
+/// and records nothing.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<RecorderInner>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl Recorder {
+    /// A recorder that records nothing — the default everywhere.
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// A live recorder; its epoch (trace time zero) is now.
+    pub fn enabled() -> Recorder {
+        Recorder {
+            inner: Some(Arc::new(RecorderInner {
+                start: Instant::now(),
+                events: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span on track `pid`, row `tid`. The span records itself
+    /// when dropped. `name` is a closure so a disabled recorder never
+    /// pays the formatting cost — the hot path's only overhead is this
+    /// `Option` check.
+    pub fn span(&self, pid: u64, tid: u64, name: impl FnOnce() -> String) -> Span {
+        match &self.inner {
+            None => Span { inner: None },
+            Some(rec) => Span {
+                inner: Some(SpanData {
+                    recorder: Arc::clone(rec),
+                    pid,
+                    tid,
+                    name: name(),
+                    started: Instant::now(),
+                }),
+            },
+        }
+    }
+
+    /// Number of spans recorded so far.
+    pub fn span_count(&self) -> usize {
+        self.inner.as_ref().map_or(0, |r| r.events.lock().unwrap().len())
+    }
+
+    /// The `(pid, tid, name)` multiset of every recorded span, sorted —
+    /// the structural identity two runs of the same search must agree
+    /// on (timestamps and durations deliberately dropped).
+    pub fn span_shape(&self) -> Vec<(u64, u64, String)> {
+        let mut shape: Vec<(u64, u64, String)> = match &self.inner {
+            None => Vec::new(),
+            Some(r) => r
+                .events
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|e| (e.pid, e.tid, e.name.clone()))
+                .collect(),
+        };
+        shape.sort();
+        shape
+    }
+
+    /// Drain the recorded spans into a Chrome/Perfetto [`Trace`] over
+    /// the search track taxonomy. `network` labels the trace metadata.
+    pub fn finish(&self, network: &str) -> Trace {
+        let mut trace = Trace::with_tracks(network, "search", &SPAN_TRACKS);
+        if let Some(r) = &self.inner {
+            trace.events = r.events.lock().unwrap().clone();
+        }
+        trace
+    }
+}
+
+struct SpanData {
+    recorder: Arc<RecorderInner>,
+    pid: u64,
+    tid: u64,
+    name: String,
+    started: Instant,
+}
+
+/// An open span; records a complete-duration slice when dropped. A span
+/// from a disabled recorder is inert.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    inner: Option<SpanData>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(data) = self.inner.take() else { return };
+        let ts = data.started.duration_since(data.recorder.start).as_micros() as u64;
+        let dur = data.started.elapsed().as_micros() as u64;
+        data.recorder.events.lock().unwrap().push(TraceEvent {
+            name: data.name,
+            pid: data.pid,
+            tid: data.tid,
+            ts,
+            dur,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_formats_names() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        let span = rec.span(TRACK_SEARCH, 0, || panic!("name closure must not run"));
+        drop(span);
+        assert_eq!(rec.span_count(), 0);
+        assert!(rec.span_shape().is_empty());
+        assert!(rec.finish("n").events.is_empty());
+    }
+
+    #[test]
+    fn enabled_recorder_collects_spans_across_clones() {
+        let rec = Recorder::enabled();
+        let clone = rec.clone();
+        drop(rec.span(TRACK_SEARCH, 0, || "a".into()));
+        drop(clone.span(TRACK_SCORE, 2, || "b".into()));
+        assert_eq!(rec.span_count(), 2);
+        let shape = rec.span_shape();
+        assert_eq!(shape[0], (TRACK_SEARCH, 0, "a".to_string()));
+        assert_eq!(shape[1], (TRACK_SCORE, 2, "b".to_string()));
+        let trace = rec.finish("net");
+        assert_eq!(trace.events.len(), 2);
+        assert!(trace.chrome_json().contains("\"name\":\"enumerate\""));
+    }
+
+    #[test]
+    fn span_shape_is_order_independent() {
+        let a = Recorder::enabled();
+        drop(a.span(1, 0, || "x".into()));
+        drop(a.span(0, 0, || "y".into()));
+        let b = Recorder::enabled();
+        drop(b.span(0, 0, || "y".into()));
+        drop(b.span(1, 0, || "x".into()));
+        assert_eq!(a.span_shape(), b.span_shape());
+    }
+}

@@ -242,6 +242,10 @@ where
                 break;
             }
         }
+        // One span per generation (a deterministic count under an
+        // evaluation budget); nothing inside the loop records, so the
+        // span shape is independent of pool scheduling.
+        let _span = pmap.recorder().span(crate::obs::TRACK_ENGINE, 0, || format!("gen[{gen}]"));
         let want = batch.min(budget - draws);
         let mut proposals = engine.propose(ms, gen, want);
         proposals.truncate(want);

@@ -716,6 +716,22 @@ impl CacheStats {
     pub fn misses(&self) -> u64 {
         self.ready_misses + self.transform_misses
     }
+
+    /// The counters as stable `(name, value)` pairs — the one naming
+    /// authority every stats surface (JSON, `--stats`, the metrics
+    /// registry) renders from.
+    pub fn fields(&self) -> [(&'static str, u64); 8] {
+        [
+            ("ready_hits", self.ready_hits),
+            ("ready_misses", self.ready_misses),
+            ("transform_hits", self.transform_hits),
+            ("transform_misses", self.transform_misses),
+            ("genome_hits", self.genome_hits),
+            ("genome_misses", self.genome_misses),
+            ("delta_hits", self.delta_hits),
+            ("delta_misses", self.delta_misses),
+        ]
+    }
 }
 
 const CACHE_SHARDS: usize = 16;

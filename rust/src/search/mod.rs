@@ -77,6 +77,7 @@
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::mapspace::{MapSpace, MapSpaceConfig, MappingConstraint};
+use crate::obs::{self, Recorder};
 use crate::optimize::{self, OptimizeConfig, SearchAlgo};
 use crate::overlap::{
     merge_ready_times, merged_pair_cache_key, merged_transform_cache_key, overlapped_latency,
@@ -110,6 +111,18 @@ pub enum Metric {
     Overlap,
     /// Transformed overlapped latency — "Best Transform" (Fast-OverlaPIM).
     Transform,
+}
+
+/// Stable trace-row id for a metric: concurrent pipelined metric jobs
+/// record onto one shared [`Recorder`], and keying their spans by metric
+/// keeps each job on its own row (and the recorded span shape a pure
+/// function of the request, not of job interleaving).
+fn metric_tid(metric: Metric) -> u64 {
+    match metric {
+        Metric::Sequential => 0,
+        Metric::Overlap => 1,
+        Metric::Transform => 2,
+    }
 }
 
 /// The paper's reported algorithm variants (§V-A2). Each resolves to a
@@ -651,6 +664,13 @@ pub struct ParallelMapper {
     /// off the hot path.
     pub chunk: u64,
     pool: Arc<WorkerPool>,
+    /// Span recorder for `--profile` runs. Disabled by default: a span on
+    /// a disabled recorder never formats its name and records nothing, so
+    /// the un-profiled hot path stays untouched. The chunk-claim multiset
+    /// is a pure function of `(budget, chunk)`, so the recorded span
+    /// *shape* is deterministic even though which worker claims which
+    /// chunk is not.
+    recorder: Recorder,
 }
 
 impl ParallelMapper {
@@ -663,7 +683,22 @@ impl ParallelMapper {
 
     /// A mapper fanning out over an existing persistent pool.
     pub fn with_pool(pool: Arc<WorkerPool>) -> ParallelMapper {
-        ParallelMapper { threads: pool.threads(), chunk: 8, pool }
+        ParallelMapper { threads: pool.threads(), chunk: 8, pool, recorder: Recorder::default() }
+    }
+
+    /// Attach a span recorder (builder-style); scoring chunks then emit
+    /// `score[lo..hi)` spans, and [`crate::optimize::run_search`] emits
+    /// per-generation spans through [`ParallelMapper::recorder`].
+    #[must_use]
+    pub fn with_recorder(mut self, recorder: Recorder) -> ParallelMapper {
+        self.recorder = recorder;
+        self
+    }
+
+    /// The attached span recorder (disabled unless
+    /// [`ParallelMapper::with_recorder`] was called).
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
     }
 
     /// Evaluate candidates `0..budget` through `eval`, returning the
@@ -681,7 +716,8 @@ impl ParallelMapper {
         let chunk = self.chunk.max(1);
         if self.threads == 1 {
             let queue = AtomicU64::new(0);
-            let (best, evaluated) = search_worker(&queue, budget, chunk, deadline, eval);
+            let (best, evaluated) =
+                search_worker(&queue, budget, chunk, deadline, &self.recorder, eval);
             return (best.map(|(_, _, em)| em), evaluated);
         }
         let best: Mutex<BestCandidate> = Mutex::new(None);
@@ -704,6 +740,7 @@ impl ParallelMapper {
             }
         };
         self.pool.scope_chunks(budget, chunk, &|lo, hi| {
+            let _span = self.recorder.span(obs::TRACK_SCORE, 0, || format!("score[{lo}..{hi})"));
             let mut local: BestCandidate = None;
             let mut n = 0usize;
             for i in lo..hi {
@@ -767,35 +804,16 @@ impl ParallelMapper {
     }
 }
 
-/// Drain the (inline, single-thread) chunk queue over `0..n`, invoking
-/// `body` for each claimed index; stops early when `body` returns `false`
-/// (deadline expiry).
-fn drain_chunks<F>(queue: &AtomicU64, n: u64, chunk: u64, mut body: F)
-where
-    F: FnMut(u64) -> bool,
-{
-    loop {
-        let start = queue.fetch_add(chunk, Ordering::Relaxed);
-        if start >= n {
-            return;
-        }
-        let end = start.saturating_add(chunk).min(n);
-        for i in start..end {
-            if !body(i) {
-                return;
-            }
-        }
-    }
-}
-
 /// The single-thread fast path of [`ParallelMapper::run`]: drain chunks
 /// until the range (or the deadline) is exhausted, tracking the local
-/// `(score, index)` minimum.
+/// `(score, index)` minimum. Each claimed chunk gets one `score[lo..hi)`
+/// span — the same shape the pooled path records.
 fn search_worker<F>(
     queue: &AtomicU64,
     budget: u64,
     chunk: u64,
     deadline: Option<Instant>,
+    recorder: &Recorder,
     eval: &F,
 ) -> (BestCandidate, usize)
 where
@@ -803,25 +821,31 @@ where
 {
     let mut best: BestCandidate = None;
     let mut evaluated = 0usize;
-    drain_chunks(queue, budget, chunk, |i| {
-        if let Some(d) = deadline {
-            if Instant::now() >= d {
-                return false;
+    loop {
+        let start = queue.fetch_add(chunk, Ordering::Relaxed);
+        if start >= budget {
+            return (best, evaluated);
+        }
+        let end = start.saturating_add(chunk).min(budget);
+        let _span = recorder.span(obs::TRACK_SCORE, 0, || format!("score[{start}..{end})"));
+        for i in start..end {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return (best, evaluated);
+                }
+            }
+            if let Some(em) = eval(i) {
+                evaluated += 1;
+                let better = match &best {
+                    None => true,
+                    Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
+                };
+                if better {
+                    best = Some((em.score, i, em));
+                }
             }
         }
-        if let Some(em) = eval(i) {
-            evaluated += 1;
-            let better = match &best {
-                None => true,
-                Some((bs, bi, _)) => (em.score, i) < (*bs, *bi),
-            };
-            if better {
-                best = Some((em.score, i, em));
-            }
-        }
-        true
-    });
-    (best, evaluated)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1050,6 +1074,9 @@ pub struct Mapper<'a> {
     pool: Arc<WorkerPool>,
     /// Valid mappings evaluated by the last `search_layer` call.
     pub last_evaluated: usize,
+    /// Span recorder threaded down from the owning [`NetworkSearch`]
+    /// (disabled — zero-cost — for standalone mappers).
+    recorder: Recorder,
     /// Resolved draw count of a [`Budget::Calibrated`] config, memoized
     /// after the first search call's probe so every call of this mapper
     /// uses one consistent budget. (The whole-network engine resolves
@@ -1087,7 +1114,16 @@ impl<'a> Mapper<'a> {
         pool: Arc<WorkerPool>,
     ) -> Mapper<'a> {
         let rng = SplitMix64::new(config.seed);
-        Mapper { arch, config, rng, cache, pool, last_evaluated: 0, calibrated: None }
+        Mapper {
+            arch,
+            config,
+            rng,
+            cache,
+            pool,
+            last_evaluated: 0,
+            recorder: Recorder::default(),
+            calibrated: None,
+        }
     }
 
     /// `(hits, misses)` of the analysis memoizer, totalled across the
@@ -1510,7 +1546,8 @@ impl<'a> Mapper<'a> {
                 memo.insert(fp, score);
                 score
             };
-            let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool));
+            let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool))
+                .with_recorder(self.recorder.clone());
             optimize::run_search(
                 engine.as_mut(),
                 &ms,
@@ -1565,22 +1602,33 @@ impl<'a> Mapper<'a> {
             return self.search_layer_engine(metric, layer, ctxs, base_seed);
         }
         let (budget, deadline) = self.budget_and_deadline(metric, layer, ctxs);
-        let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool));
+        let pmap = ParallelMapper::with_pool(Arc::clone(&self.pool))
+            .with_recorder(self.recorder.clone());
 
         if let Some((store, consumers)) = share {
             if self.config.sharing_active() {
                 let key = CandKey { seed: base_seed, layer: layer.fingerprint() };
-                let set = store.fetch(key, consumers, || {
-                    enumerate_candidates(
-                        self.arch,
-                        layer,
-                        &self.config.constraint,
-                        &self.config.mapspace,
-                        budget,
-                        base_seed,
-                        &pmap,
-                    )
-                });
+                // One fetch span per consumer of the shared set — a
+                // deterministic count. The *compute* closure may instead
+                // run in a detached look-ahead task (recorder-less by
+                // construction), so enumeration work only ever surfaces
+                // here, as fetch wait time.
+                let set = {
+                    let _span = self.recorder.span(obs::TRACK_ENUM, metric_tid(metric), || {
+                        format!("fetch {}", layer.name)
+                    });
+                    store.fetch(key, consumers, || {
+                        enumerate_candidates(
+                            self.arch,
+                            layer,
+                            &self.config.constraint,
+                            &self.config.mapspace,
+                            budget,
+                            base_seed,
+                            &pmap,
+                        )
+                    })
+                };
                 if set.infeasible {
                     self.last_evaluated = 0;
                     return None;
@@ -1778,13 +1826,21 @@ pub struct NetworkSearch<'a> {
     /// capped at exactly [`MapperConfig::threads`] and thread spawn is
     /// paid once per searcher, not once per parallel section.
     pool: Arc<WorkerPool>,
+    /// Span recorder for the search profiler (`repro search --profile`,
+    /// the API's `profile` flag). Disabled by default — spans on a
+    /// disabled recorder never format their names and record nothing.
+    /// Every span site is deterministically scheduled (sweep/refine
+    /// calls, shared-set fetches, chunk claims, engine generations,
+    /// final-pass edges), so profiling is observationally transparent:
+    /// plans are bit-identical with it on or off, at any thread count.
+    recorder: Recorder,
 }
 
 impl<'a> NetworkSearch<'a> {
     pub fn new(arch: &'a Arch, config: MapperConfig, strategy: SearchStrategy) -> Self {
         let cache = config.cache.then(|| Arc::new(OverlapCache::new()));
         let pool = WorkerPool::new(config.threads);
-        Self { arch, config, strategy, cache, pool }
+        Self { arch, config, strategy, cache, pool, recorder: Recorder::default() }
     }
 
     /// Build a searcher over *externally owned* warm state: a live
@@ -1804,7 +1860,17 @@ impl<'a> NetworkSearch<'a> {
         cache: Option<Arc<OverlapCache>>,
         pool: Arc<WorkerPool>,
     ) -> Self {
-        Self { arch, config, strategy, cache, pool }
+        Self { arch, config, strategy, cache, pool, recorder: Recorder::default() }
+    }
+
+    /// Attach a span recorder (builder-style): every subsequent run of
+    /// this searcher records its search phases into `recorder`, to be
+    /// drained with [`Recorder::finish`]. Pass [`Recorder::enabled`] to
+    /// profile, or leave the default disabled recorder for zero cost.
+    #[must_use]
+    pub fn with_recorder(mut self, recorder: Recorder) -> Self {
+        self.recorder = recorder;
+        self
     }
 
     /// OS worker threads owned by this searcher's persistent pool
@@ -1927,6 +1993,7 @@ impl<'a> NetworkSearch<'a> {
             self.cache.clone(),
             Arc::clone(&self.pool),
         );
+        mapper.recorder = self.recorder.clone();
         let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; chain.len()];
 
         // Determine the sweep order: a list of (position, role of the
@@ -2026,6 +2093,9 @@ impl<'a> NetworkSearch<'a> {
         for (call, &(pos, neighbor)) in order.iter().enumerate() {
             prefetch_next(call);
             let layer = &net.layers[chain[pos]];
+            let _span = self.recorder.span(obs::TRACK_SEARCH, metric_tid(metric), || {
+                format!("sweep {}", layer.name)
+            });
             let share = shared.map(|sh| (&*sh.store, sh.sweep_consumers));
             let best = {
                 let mut ctxs = Vec::new();
@@ -2062,6 +2132,9 @@ impl<'a> NetworkSearch<'a> {
             for pos in 0..chain.len() {
                 prefetch_next(call);
                 let layer = &net.layers[chain[pos]];
+                let _span = self.recorder.span(obs::TRACK_SEARCH, metric_tid(metric), || {
+                    format!("refine {}", layer.name)
+                });
                 let mut ctxs = Vec::new();
                 if pos > 0 {
                     let n = plans[pos - 1].as_ref().unwrap();
@@ -2123,6 +2196,9 @@ impl<'a> NetworkSearch<'a> {
             let (overlap, transform) = if pos == 0 {
                 (None, None)
             } else {
+                let _span = self.recorder.span(obs::TRACK_ANALYSIS, metric_tid(metric), || {
+                    format!("edge {}->{}", pos - 1, pos)
+                });
                 let prev = &chosen[pos - 1];
                 let prev_layer = &net.layers[chain[pos - 1]];
                 let pair = LayerPair::new(
@@ -2367,6 +2443,7 @@ impl<'a> NetworkSearch<'a> {
             self.cache.clone(),
             Arc::clone(&self.pool),
         );
+        mapper.recorder = self.recorder.clone();
         let mut plans: Vec<Option<EvaluatedMapping>> = vec![None; n];
 
         // Sweep order: (position, fixed neighbors as (position, role)).
@@ -2463,6 +2540,9 @@ impl<'a> NetworkSearch<'a> {
         for (call, (pos, neighbors)) in order.iter().enumerate() {
             prefetch_next(call);
             let layer = &g.layers[topo[*pos]];
+            let _span = self.recorder.span(obs::TRACK_SEARCH, metric_tid(metric), || {
+                format!("sweep {}", layer.name)
+            });
             let share = shared.map(|sh| (&*sh.store, sh.sweep_consumers));
             let best = {
                 let ctxs: Vec<PairContext<'_>> = neighbors
@@ -2499,6 +2579,9 @@ impl<'a> NetworkSearch<'a> {
                 prefetch_next(call);
                 let v = topo[pos];
                 let layer = &g.layers[v];
+                let _span = self.recorder.span(obs::TRACK_SEARCH, metric_tid(metric), || {
+                    format!("refine {}", layer.name)
+                });
                 let mut ctxs = Vec::new();
                 for &p in g.preds(v) {
                     let nb = plans[pos_of[p]].as_ref().unwrap();
@@ -2581,6 +2664,9 @@ impl<'a> NetworkSearch<'a> {
                 // the exact numbers the finish times advance by). Chosen
                 // pairs recur across metric jobs' final passes: store.
                 for (ppos, pair) in &pairs {
+                    let _span = self.recorder.span(obs::TRACK_ANALYSIS, metric_tid(metric), || {
+                        format!("edge {ppos}->{pos}")
+                    });
                     let ready = mapper.ready_times(pair, true);
                     let ov =
                         overlapped_latency(pair.producer_stats, pair.consumer_stats, &ready);
@@ -2598,6 +2684,9 @@ impl<'a> NetworkSearch<'a> {
                     finish_tr[pos] = finish_tr[pairs[0].0] + e.transform.added_latency;
                     (Some(e.overlap), Some(e.transform))
                 } else {
+                    let _span = self.recorder.span(obs::TRACK_ANALYSIS, metric_tid(metric), || {
+                        format!("join->{pos}")
+                    });
                     let producer_end_ov =
                         pairs.iter().map(|&(p, _)| finish_ov[p]).max().expect("non-empty");
                     let parts_ov: Vec<(u64, &LayerPair<'_>)> = pairs
@@ -2726,6 +2815,7 @@ impl<'a> NetworkSearch<'a> {
             strategy: self.strategy,
             cache: self.cache.clone(),
             pool: Arc::clone(&self.pool),
+            recorder: self.recorder.clone(),
         }
     }
 
@@ -2734,6 +2824,24 @@ impl<'a> NetworkSearch<'a> {
     /// the cache is disabled).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.as_ref().map_or_else(CacheStats::default, |c| c.stats())
+    }
+
+    /// Snapshot this searcher's counters into a fresh [`obs::Registry`]:
+    /// the eight analysis-cache counters ([`CacheStats::fields`]) plus
+    /// the pool gauges. One naming authority backs `--stats`, the JSON
+    /// stats surfaces and Prometheus exposition alike, so the surfaces
+    /// cannot drift.
+    pub fn stats_registry(&self) -> obs::Registry {
+        let reg = obs::Registry::new();
+        for (name, value) in self.cache_stats().fields() {
+            reg.counter(name, cache_counter_help(name)).set(value);
+        }
+        reg.gauge("pool_workers", "OS worker threads owned by the persistent pool")
+            .set(self.pool_worker_count() as u64);
+        reg.counter("pool_jobs_dispatched", "chunk jobs dispatched through the worker pool")
+            .set(self.pool_jobs_dispatched());
+        reg.gauge("threads", "configured worker threads").set(self.config.threads as u64);
+        reg
     }
 
     /// A searcher with this one's [`Budget::Calibrated`] resolved to a
@@ -2751,6 +2859,7 @@ impl<'a> NetworkSearch<'a> {
             strategy: self.strategy,
             cache: self.cache.clone(),
             pool: Arc::clone(&self.pool),
+            recorder: self.recorder.clone(),
         }
     }
 }
@@ -2883,6 +2992,22 @@ struct SharedCandidates {
     sweep_consumers: u32,
     /// Jobs consuming each refinement-pass entry (the pair-aware ones).
     refine_consumers: u32,
+}
+
+/// Help text for one of the [`CacheStats::fields`] counter names (used
+/// by every registry that mirrors the analysis-cache counters).
+pub(crate) fn cache_counter_help(name: &str) -> &'static str {
+    match name {
+        "ready_hits" => "ready-times table hits",
+        "ready_misses" => "ready-times table misses",
+        "transform_hits" => "transform job-query table hits",
+        "transform_misses" => "transform job-query table misses",
+        "genome_hits" => "duplicate guided-engine offspring skipped",
+        "genome_misses" => "guided-engine genomes priced",
+        "delta_hits" => "per-nest delta-state evaluation hits",
+        "delta_misses" => "per-nest delta-state evaluation misses",
+        _ => "analysis-cache counter",
+    }
 }
 
 /// Resolve an [`Algorithm`]'s reported total from the three metric plans.

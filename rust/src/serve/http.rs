@@ -59,18 +59,39 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, String> {
     Ok(HttpRequest { method, path, body })
 }
 
-/// Write a complete response and flush. The body is always JSON here.
+/// Write a complete JSON response and flush.
 pub fn write_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
     body: &str,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+    write_response_with(stream, status, reason, "application/json", &[], body)
+}
+
+/// Write a complete response with an explicit content type and any extra
+/// headers (e.g. `Retry-After` on 429, the Prometheus text content type
+/// on `GET /v1/metrics`), then flush.
+pub fn write_response_with(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()

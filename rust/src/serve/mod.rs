@@ -26,7 +26,12 @@
 //! | `POST /v1/search` | [`crate::api::SearchRequest`] | [`crate::api::SearchResponse`] |
 //! | `GET /v1/health`  | —                   | `{"v":1,"ok":true,...}`          |
 //! | `GET /v1/stats`   | —                   | cache/pool counters              |
+//! | `GET /v1/metrics` | —                   | Prometheus text exposition       |
 //! | `POST /v1/shutdown` | —                 | `{"v":1,"ok":true}`, then exits  |
+//!
+//! Every counter behind `/v1/stats`, each response's `server` section and
+//! `GET /v1/metrics` lives in one [`crate::obs::Registry`], so the three
+//! surfaces can never drift apart.
 //!
 //! Determinism is the contract: the same plan key returns bit-identical
 //! plan bytes whether computed cold, served warm from memory, served
@@ -39,12 +44,13 @@ pub mod plan_cache;
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::api::{self, ApiError, SearchRequest, SearchResponse};
 use crate::arch::Arch;
+use crate::obs::{self, Counter, Gauge, Histogram, Recorder, Registry};
 use crate::overlap::OverlapCache;
 use crate::report::Json;
 use crate::search::{NetworkSearch, WorkerPool};
@@ -68,6 +74,9 @@ pub struct ServeConfig {
     pub max_inflight: u64,
     /// Share per-architecture analysis caches across requests.
     pub analysis_cache: bool,
+    /// Emit a one-line JSON access log per connection on stdout
+    /// (`repro serve --log-json`).
+    pub log_json: bool,
 }
 
 impl Default for ServeConfig {
@@ -79,6 +88,76 @@ impl Default for ServeConfig {
             cache_dir: None,
             max_inflight: 16,
             analysis_cache: true,
+            log_json: false,
+        }
+    }
+}
+
+/// The server's metric handles, all registered on one [`Registry`].
+///
+/// Visible counters and gauges are registered in the exact order the
+/// pinned `/v1/stats` field set expects, so [`Registry::json_fields`]
+/// reproduces the pre-registry JSON byte-for-byte. The admission gauge
+/// and the latency histograms are Prometheus-only.
+struct Metrics {
+    registry: Registry,
+    // Mirrors of externally owned counters, written by `sync` before
+    // every render.
+    plan_cache_entries: Gauge,
+    plan_cache_memory_hits: Counter,
+    plan_cache_disk_hits: Counter,
+    plan_cache_misses: Counter,
+    plan_cache_loaded: Gauge,
+    pool_workers: Gauge,
+    pool_jobs_dispatched: Counter,
+    threads: Gauge,
+    // Owned by the server: incremented directly at the event site.
+    searches_run: Counter,
+    requests: Counter,
+    inflight: Gauge,
+    request_us: Histogram,
+    search_us: Histogram,
+}
+
+impl Metrics {
+    fn new() -> Metrics {
+        let registry = Registry::new();
+        let plan_cache_entries =
+            registry.gauge("plan_cache_entries", "plans held in the in-memory plan cache");
+        let plan_cache_memory_hits =
+            registry.counter("plan_cache_memory_hits", "plan-cache hits served from memory");
+        let plan_cache_disk_hits =
+            registry.counter("plan_cache_disk_hits", "plan-cache hits loaded from the disk store");
+        let plan_cache_misses =
+            registry.counter("plan_cache_misses", "plan-cache misses (plans computed fresh)");
+        let plan_cache_loaded =
+            registry.gauge("plan_cache_loaded", "plan-cache entries loaded from disk at startup");
+        let searches_run =
+            registry.counter("searches_run", "searches executed rather than served from cache");
+        let requests = registry.counter("requests", "connections accepted");
+        let pool_workers =
+            registry.gauge("pool_workers", "OS worker threads owned by the persistent pool");
+        let pool_jobs_dispatched =
+            registry.counter("pool_jobs_dispatched", "jobs dispatched through the worker pool");
+        let threads = registry.gauge("threads", "configured worker threads");
+        let inflight = registry.hidden_gauge("inflight_searches", "searches currently admitted");
+        let request_us = registry.histogram("request_us", "connection wall time in microseconds");
+        let search_us = registry.histogram("search_us", "search wall time in microseconds");
+        Metrics {
+            registry,
+            plan_cache_entries,
+            plan_cache_memory_hits,
+            plan_cache_disk_hits,
+            plan_cache_misses,
+            plan_cache_loaded,
+            pool_workers,
+            pool_jobs_dispatched,
+            threads,
+            searches_run,
+            requests,
+            inflight,
+            request_us,
+            search_us,
         }
     }
 }
@@ -88,15 +167,14 @@ struct ServerState {
     pool: Arc<WorkerPool>,
     threads: usize,
     use_analysis_cache: bool,
+    log_json: bool,
     /// One analysis memoizer per architecture fingerprint: overlap-cache
     /// keys hash mappings and layers but not the architecture, so one
     /// shared table across different arches would alias.
     analysis_caches: Mutex<HashMap<u64, Arc<OverlapCache>>>,
     plans: PlanCache,
-    inflight: AtomicU64,
     max_inflight: u64,
-    searches_run: AtomicU64,
-    requests: AtomicU64,
+    metrics: Metrics,
     started: Instant,
     shutdown: AtomicBool,
     addr: SocketAddr,
@@ -107,6 +185,22 @@ impl ServerState {
         let mut map = self.analysis_caches.lock().unwrap();
         Arc::clone(map.entry(arch.fingerprint()).or_insert_with(|| Arc::new(OverlapCache::new())))
     }
+}
+
+/// Mirror the externally owned counters (plan cache, worker pool) into
+/// the registry, so a render sees current values. The owned metrics
+/// (`requests`, `searches_run`, `inflight_searches`, the histograms)
+/// are live and need no sync.
+fn sync_metrics(state: &ServerState) {
+    let m = &state.metrics;
+    m.plan_cache_entries.set(state.plans.len() as u64);
+    m.plan_cache_memory_hits.set(state.plans.memory_hits());
+    m.plan_cache_disk_hits.set(state.plans.disk_hits());
+    m.plan_cache_misses.set(state.plans.misses());
+    m.plan_cache_loaded.set(state.plans.loaded_from_disk());
+    m.pool_workers.set(state.pool.worker_count() as u64);
+    m.pool_jobs_dispatched.set(state.pool.jobs_dispatched());
+    m.threads.set(state.threads as u64);
 }
 
 /// A bound, not-yet-running server. [`Server::bind`] then [`Server::run`];
@@ -131,12 +225,11 @@ impl Server {
             pool: WorkerPool::new(threads),
             threads,
             use_analysis_cache: config.analysis_cache,
+            log_json: config.log_json,
             analysis_caches: Mutex::new(HashMap::new()),
             plans,
-            inflight: AtomicU64::new(0),
             max_inflight: config.max_inflight.max(1),
-            searches_run: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
+            metrics: Metrics::new(),
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
             addr,
@@ -179,17 +272,24 @@ impl Server {
 }
 
 fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    state.requests.fetch_add(1, Ordering::Relaxed);
+    let started = Instant::now();
+    state.metrics.requests.inc();
     let req = match http::read_request(&mut stream) {
         Ok(r) => r,
         Err(e) => {
-            respond_error(&mut stream, &ApiError::bad_request(format!("malformed HTTP: {e}")));
+            let status =
+                respond_error(&mut stream, &ApiError::bad_request(format!("malformed HTTP: {e}")));
+            state.metrics.request_us.observe(started.elapsed().as_micros() as u64);
+            log_access(state, "-", "-", status, started);
             return;
         }
     };
-    match (req.method.as_str(), req.path.as_str()) {
+    let status = match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/v1/search") => match handle_search(state, &req.body) {
-            Ok(body) => respond_json(&mut stream, 200, "OK", &body),
+            Ok(body) => {
+                respond_json(&mut stream, 200, "OK", &body);
+                200
+            }
             Err(err) => respond_error(&mut stream, &err),
         },
         ("GET", "/v1/health") => {
@@ -199,9 +299,23 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
                 ("uptime_us".into(), Json::Num(state.started.elapsed().as_micros() as f64)),
             ]);
             respond_json(&mut stream, 200, "OK", &body.render());
+            200
         }
         ("GET", "/v1/stats") => {
             respond_json(&mut stream, 200, "OK", &stats_json(state).render());
+            200
+        }
+        ("GET", "/v1/metrics") => {
+            sync_metrics(state);
+            let _ = http::write_response_with(
+                &mut stream,
+                200,
+                "OK",
+                "text/plain; version=0.0.4",
+                &[],
+                &state.metrics.registry.prometheus(),
+            );
+            200
         }
         ("POST", "/v1/shutdown") => {
             state.shutdown.store(true, Ordering::SeqCst);
@@ -213,28 +327,45 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState) {
             // The accept loop blocks in `incoming()`; poke it so it
             // observes the flag and drains.
             let _ = TcpStream::connect(state.addr);
+            200
         }
-        (method, path) => {
-            respond_error(
-                &mut stream,
-                &ApiError::bad_request(format!("no such endpoint: {method} {path}")),
-            );
-        }
+        (method, path) => respond_error(
+            &mut stream,
+            &ApiError::bad_request(format!("no such endpoint: {method} {path}")),
+        ),
+    };
+    state.metrics.request_us.observe(started.elapsed().as_micros() as u64);
+    log_access(state, &req.method, &req.path, status, started);
+}
+
+/// One-line JSON access log on stdout, opt-in via `--log-json`. Written
+/// after the response has been flushed so logging latency never sits on
+/// the client's critical path.
+fn log_access(state: &ServerState, method: &str, path: &str, status: u16, started: Instant) {
+    if !state.log_json {
+        return;
     }
+    let line = Json::Obj(vec![
+        ("method".into(), Json::str(method)),
+        ("path".into(), Json::str(path)),
+        ("status".into(), Json::num(u32::from(status))),
+        ("elapsed_us".into(), Json::Num(started.elapsed().as_micros() as f64)),
+    ]);
+    println!("{}", line.render());
 }
 
 /// Decrements the in-flight gauge when a search handler exits any way.
-struct InflightGuard<'a>(&'a AtomicU64);
+struct InflightGuard<'a>(&'a Gauge);
 
 impl Drop for InflightGuard<'_> {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        self.0.dec();
     }
 }
 
 fn handle_search(state: &ServerState, body: &str) -> Result<String, ApiError> {
-    let inflight = state.inflight.fetch_add(1, Ordering::SeqCst) + 1;
-    let _guard = InflightGuard(&state.inflight);
+    let inflight = state.metrics.inflight.inc();
+    let _guard = InflightGuard(&state.metrics.inflight);
     if inflight > state.max_inflight {
         return Err(ApiError::busy(format!(
             "{inflight} searches in flight (cap {}); retry shortly",
@@ -243,21 +374,32 @@ fn handle_search(state: &ServerState, body: &str) -> Result<String, ApiError> {
     }
     let started = Instant::now();
     let req = SearchRequest::parse(body)?;
+    let parse_us = started.elapsed().as_micros() as u64;
+    let resolve_started = Instant::now();
     let arch = req.resolve_arch()?;
     let workload = req.resolve_workload()?;
     let cfg = req.mapper_config(state.threads)?;
     let key = api::plan_key(&req, &arch, &workload);
     let analysis_cache = state.use_analysis_cache.then(|| state.analysis_cache_for(&arch));
+    let resolve_us = resolve_started.elapsed().as_micros() as u64;
 
-    let (plan_raw, outcome) = state.plans.get_or_compute(key, || {
-        state.searches_run.fetch_add(1, Ordering::Relaxed);
+    // With `profile` set, spans from this request's search (if one runs —
+    // a cache hit records only the lookup) come back in the `server`
+    // section. The recorder only observes; plan bytes are bit-identical
+    // with profiling on or off.
+    let recorder = if req.profile { Recorder::enabled() } else { Recorder::disabled() };
+    let search_started = Instant::now();
+    let lookup_span = recorder.span(obs::TRACK_SERVE, 0, || format!("plan_cache[{key:016x}]"));
+    let result = state.plans.get_or_compute(key, || {
+        state.metrics.searches_run.inc();
         let search = NetworkSearch::with_shared(
             &arch,
             cfg,
             req.strategy,
             analysis_cache.clone(),
             Arc::clone(&state.pool),
-        );
+        )
+        .with_recorder(recorder.clone());
         // A search that cannot find a valid mapping within budget panics;
         // inside the server that is an `internal` error on this request,
         // never a crashed process. Nothing is cached on failure.
@@ -271,13 +413,23 @@ fn handle_search(state: &ServerState, body: &str) -> Result<String, ApiError> {
                 panic_message(payload.as_ref())
             ))),
         }
-    })?;
+    });
+    drop(lookup_span);
+    let (plan_raw, outcome) = result?;
+    let search_us = search_started.elapsed().as_micros() as u64;
+    state.metrics.search_us.observe(search_us);
 
     let mut server = vec![
         ("elapsed_us".into(), Json::Num(started.elapsed().as_micros() as f64)),
+        ("parse_us".into(), Json::Num(parse_us as f64)),
+        ("resolve_us".into(), Json::Num(resolve_us as f64)),
+        ("search_us".into(), Json::Num(search_us as f64)),
         ("plan_cache".into(), Json::str(outcome.tag())),
         ("plan_key".into(), Json::str(format!("{key:016x}"))),
     ];
+    if req.profile {
+        server.push(("profile".into(), recorder.finish(workload.name()).to_json()));
+    }
     if let Some(cache) = &analysis_cache {
         server.push(("analysis_cache".into(), api::cache_stats_json(&cache.stats())));
     }
@@ -296,20 +448,17 @@ fn panic_message(payload: &dyn std::any::Any) -> &str {
 }
 
 /// The counters shared by `/v1/stats` and every response's `server`
-/// section.
+/// section — rendered from the one registry `GET /v1/metrics` also
+/// exposes.
 fn stats_fields(state: &ServerState) -> Vec<(String, Json)> {
-    vec![
-        ("plan_cache_entries".into(), Json::Num(state.plans.len() as f64)),
-        ("plan_cache_memory_hits".into(), Json::Num(state.plans.memory_hits() as f64)),
-        ("plan_cache_disk_hits".into(), Json::Num(state.plans.disk_hits() as f64)),
-        ("plan_cache_misses".into(), Json::Num(state.plans.misses() as f64)),
-        ("plan_cache_loaded".into(), Json::Num(state.plans.loaded_from_disk() as f64)),
-        ("searches_run".into(), Json::Num(state.searches_run.load(Ordering::Relaxed) as f64)),
-        ("requests".into(), Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
-        ("pool_workers".into(), Json::Num(state.pool.worker_count() as f64)),
-        ("pool_jobs_dispatched".into(), Json::Num(state.pool.jobs_dispatched() as f64)),
-        ("threads".into(), Json::Num(state.threads as f64)),
-    ]
+    sync_metrics(state);
+    state
+        .metrics
+        .registry
+        .json_fields()
+        .into_iter()
+        .map(|(name, value)| (name, Json::Num(value as f64)))
+        .collect()
 }
 
 fn stats_json(state: &ServerState) -> Json {
@@ -334,7 +483,23 @@ fn respond_json(stream: &mut TcpStream, status: u16, reason: &str, body: &str) {
     let _ = http::write_response(stream, status, reason, body);
 }
 
-fn respond_error(stream: &mut TcpStream, err: &ApiError) {
+/// Write an [`ApiError`] response and return the status sent. A 429
+/// carries `Retry-After` so well-behaved clients back off without
+/// parsing the error detail.
+fn respond_error(stream: &mut TcpStream, err: &ApiError) -> u16 {
     let (status, reason) = err.kind.http_status();
-    respond_json(stream, status, reason, &err.render());
+    let extra: Vec<(&str, String)> = if status == 429 {
+        vec![("Retry-After", "1".to_string())]
+    } else {
+        Vec::new()
+    };
+    let _ = http::write_response_with(
+        stream,
+        status,
+        reason,
+        "application/json",
+        &extra,
+        &err.render(),
+    );
+    status
 }

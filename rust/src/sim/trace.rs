@@ -1,134 +1,9 @@
-//! Chrome/Perfetto trace emission for the validation simulator.
+//! Chrome/Perfetto trace emission — re-exported from [`crate::obs`].
 //!
-//! The simulator records every replayed activity as a complete-duration
-//! slice; [`Trace::chrome_json`] serializes them to the Chrome trace
-//! event format (the `traceEvents` array of `ph: "X"` events that
-//! `chrome://tracing` and [Perfetto](https://ui.perfetto.dev) load
-//! directly). Timestamps and durations are in PIM clock cycles, reported
-//! through the format's microsecond field — the absolute unit does not
-//! matter for visualization, only the shared scale.
-//!
-//! Track layout (one trace "process" per execution model, one "thread"
-//! per row):
-//!
-//! * pid 0 `sequential` — the strictly serial baseline on a single row.
-//! * pid 1 `overlapped` — per-node rows; each node shows its step window
-//!   and its trailing data movement.
-//! * pid 2 `transformed` — per-node rows; each node shows its bank-job
-//!   window and its trailing movement + relocation penalty.
-//! * pid 3 `transform banks` — per-bank rows (capped by
-//!   [`crate::sim::SimConfig::max_trace_banks`]) showing each node's
-//!   busy span on each consumer bank under the transformed schedule.
+//! The serializer was generalized into [`crate::obs::trace`] so the
+//! search profiler and the simulator share one emitter; the simulator's
+//! fixed track layout (sequential / overlapped / transformed /
+//! transform banks) lives in [`Trace::new`]. This module keeps the
+//! historical `sim::trace` paths working.
 
-use crate::report::Json;
-use crate::sim::queue::EventQueue;
-
-/// One complete-duration slice (`ph: "X"`).
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct TraceEvent {
-    pub name: String,
-    /// Track group (see the module docs for the pid layout).
-    pub pid: u64,
-    /// Row within the group.
-    pub tid: u64,
-    /// Start, in cycles.
-    pub ts: u64,
-    /// Duration, in cycles.
-    pub dur: u64,
-}
-
-/// Track-group names, indexed by pid.
-const TRACKS: [&str; 4] = ["sequential", "overlapped", "transformed", "transform banks"];
-
-/// An ordered collection of simulator slices for one replayed plan.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Trace {
-    /// Network the trace replays (recorded in the JSON metadata).
-    pub network: String,
-    pub events: Vec<TraceEvent>,
-}
-
-impl Trace {
-    pub fn new(network: &str) -> Trace {
-        Trace { network: network.into(), events: Vec::new() }
-    }
-
-    /// Record one slice.
-    pub fn slice(&mut self, pid: u64, tid: u64, name: &str, ts: u64, dur: u64) {
-        self.events.push(TraceEvent { name: name.into(), pid, tid, ts, dur });
-    }
-
-    /// Serialize to Chrome trace JSON. Slices are drained through an
-    /// [`EventQueue`] so the emitted array is time-ordered (ties resolve
-    /// in recording order) — a deterministic function of the recorded
-    /// events, which is what makes trace bit-identity a meaningful
-    /// cross-thread-count assertion.
-    pub fn chrome_json(&self) -> String {
-        let mut queue = EventQueue::new();
-        for e in &self.events {
-            queue.push(e.ts, e);
-        }
-        let mut events: Vec<Json> = Vec::with_capacity(self.events.len() + TRACKS.len());
-        for (pid, track) in TRACKS.iter().enumerate() {
-            events.push(Json::Obj(vec![
-                ("name".into(), Json::str("process_name")),
-                ("ph".into(), Json::str("M")),
-                ("pid".into(), Json::num(pid as u32)),
-                ("tid".into(), Json::num(0u32)),
-                (
-                    "args".into(),
-                    Json::Obj(vec![("name".into(), Json::str(*track))]),
-                ),
-            ]));
-        }
-        while let Some((_, e)) = queue.pop() {
-            events.push(Json::Obj(vec![
-                ("name".into(), Json::str(e.name.as_str())),
-                ("cat".into(), Json::str("sim")),
-                ("ph".into(), Json::str("X")),
-                ("ts".into(), Json::num(e.ts as f64)),
-                ("dur".into(), Json::num(e.dur as f64)),
-                ("pid".into(), Json::num(e.pid as f64)),
-                ("tid".into(), Json::num(e.tid as f64)),
-            ]));
-        }
-        Json::Obj(vec![
-            ("traceEvents".into(), Json::Arr(events)),
-            ("displayTimeUnit".into(), Json::str("ms")),
-            (
-                "otherData".into(),
-                Json::Obj(vec![
-                    ("network".into(), Json::str(self.network.as_str())),
-                    ("clock".into(), Json::str("cycles")),
-                ]),
-            ),
-        ])
-        .render()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn chrome_json_is_time_ordered_and_well_formed() {
-        let mut t = Trace::new("demo");
-        t.slice(1, 0, "late", 50, 10);
-        t.slice(0, 0, "early", 0, 25);
-        let json = t.chrome_json();
-        assert!(json.starts_with("{\"traceEvents\":["));
-        assert!(json.contains("\"ph\":\"X\""));
-        assert!(json.contains("\"name\":\"sequential\""));
-        assert!(json.contains("\"network\":\"demo\""));
-        // Time-ordered: `early` (ts 0) precedes `late` (ts 50).
-        let early = json.find("\"early\"").expect("early slice present");
-        let late = json.find("\"late\"").expect("late slice present");
-        assert!(early < late, "slices must drain in event-time order");
-        // Balanced braces — a crude but dependency-free well-formedness
-        // check (the format has no braces inside strings here).
-        let opens = json.matches('{').count();
-        let closes = json.matches('}').count();
-        assert_eq!(opens, closes);
-    }
-}
+pub use crate::obs::trace::{Trace, TraceEvent};

@@ -1,0 +1,135 @@
+//! Observational transparency of the unified observability layer.
+//!
+//! The contract under test (`rust/ARCHITECTURE.md` §12): attaching an
+//! enabled span [`Recorder`] to a search must not change a single plan
+//! bit — at any thread count, for every search engine, on chains and on
+//! graph workloads — and the recorded spans themselves must be
+//! *structurally* deterministic: two runs of the same search record the
+//! same `(track, row, name)` multiset, with only timestamps and
+//! durations differing between runs or thread counts.
+
+use fastoverlapim::api;
+use fastoverlapim::prelude::*;
+use fastoverlapim::workload::zoo;
+
+fn cfg(budget: usize, seed: u64, threads: usize) -> MapperConfig {
+    MapperConfig::builder()
+        .budget_evals(budget)
+        .seed(seed)
+        .threads(threads)
+        .cache(true)
+        .refine_passes(1)
+        .build()
+        .expect("valid test config")
+}
+
+/// The deterministic plan document — the exact bytes the server caches
+/// and `tests/serve_roundtrip.rs` pins.
+fn plan_bytes(plan: &NetworkPlan, arch: &Arch) -> String {
+    api::plan_to_json(plan, arch).render()
+}
+
+const ALGOS: [SearchAlgo; 4] =
+    [SearchAlgo::Random, SearchAlgo::Genetic, SearchAlgo::Annealing, SearchAlgo::HillClimb];
+
+#[test]
+fn profiling_leaves_chain_plans_bit_identical_for_every_engine() {
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    for algo in ALGOS {
+        for metric in [Metric::Sequential, Metric::Overlap, Metric::Transform] {
+            for threads in [1usize, 4] {
+                let mut c = cfg(18, 11, threads);
+                c.algo = algo;
+                c.optimize.population = 6;
+                let plain =
+                    NetworkSearch::new(&arch, c.clone(), SearchStrategy::Forward).run(&net, metric);
+                let recorder = Recorder::enabled();
+                let profiled = NetworkSearch::new(&arch, c, SearchStrategy::Forward)
+                    .with_recorder(recorder.clone())
+                    .run(&net, metric);
+                assert_eq!(
+                    plan_bytes(&plain, &arch),
+                    plan_bytes(&profiled, &arch),
+                    "{algo:?}/{metric:?} @ {threads} threads: profiling must not change plan bytes"
+                );
+                assert!(
+                    recorder.span_count() > 0,
+                    "{algo:?}/{metric:?} @ {threads} threads: an enabled recorder must see spans"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn profiling_leaves_graph_plans_bit_identical() {
+    let arch = Arch::dram_pim_small();
+    let g = zoo::resnet18_graph();
+    for algo in [SearchAlgo::Random, SearchAlgo::Genetic] {
+        for threads in [1usize, 4] {
+            let mut c = cfg(6, 7, threads);
+            c.algo = algo;
+            c.optimize.population = 4;
+            c.refine_passes = 0;
+            let plain = NetworkSearch::new(&arch, c.clone(), SearchStrategy::Forward)
+                .run_graph(&g, Metric::Transform);
+            let recorder = Recorder::enabled();
+            let profiled = NetworkSearch::new(&arch, c, SearchStrategy::Forward)
+                .with_recorder(recorder.clone())
+                .run_graph(&g, Metric::Transform);
+            assert_eq!(
+                plan_bytes(&plain, &arch),
+                plan_bytes(&profiled, &arch),
+                "{algo:?} graph @ {threads} threads: profiling must not change plan bytes"
+            );
+            assert!(
+                recorder.span_count() > 0,
+                "{algo:?} graph @ {threads} threads: an enabled recorder must see spans"
+            );
+        }
+    }
+}
+
+#[test]
+fn span_shape_is_deterministic_across_runs_and_thread_counts() {
+    // Structural trace identity: spans are recorded only at
+    // deterministically scheduled sites, so the `(track, row, name)`
+    // multiset is a pure function of the search inputs — racing chunk
+    // claims and pipelined jobs move spans in time, never in shape.
+    let arch = Arch::dram_pim_small();
+    let net = zoo::tiny_cnn();
+    let shape_at = |threads: usize| {
+        let c = cfg(18, 11, threads);
+        let recorder = Recorder::enabled();
+        NetworkSearch::new(&arch, c, SearchStrategy::Forward)
+            .with_recorder(recorder.clone())
+            .run(&net, Metric::Transform);
+        recorder.span_shape()
+    };
+    let first = shape_at(4);
+    assert!(!first.is_empty(), "a profiled search records spans");
+    let second = shape_at(4);
+    assert_eq!(first, second, "two runs of one search must record the same span multiset");
+    let serial = shape_at(1);
+    assert_eq!(first, serial, "the span multiset must not depend on the thread count");
+}
+
+#[test]
+fn graph_span_shape_is_deterministic() {
+    let arch = Arch::dram_pim_small();
+    let g = zoo::resnet18_graph();
+    let shape = || {
+        let mut c = cfg(6, 7, 4);
+        c.refine_passes = 0;
+        let recorder = Recorder::enabled();
+        NetworkSearch::new(&arch, c, SearchStrategy::Forward)
+            .with_recorder(recorder.clone())
+            .run_graph(&g, Metric::Transform);
+        recorder.span_shape()
+    };
+    let a = shape();
+    let b = shape();
+    assert!(!a.is_empty(), "a profiled graph search records spans");
+    assert_eq!(a, b, "graph searches must record the same span multiset every run");
+}

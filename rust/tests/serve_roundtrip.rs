@@ -43,6 +43,7 @@ fn start_server(
         cache_dir,
         max_inflight: 64,
         analysis_cache: true,
+        log_json: false,
     };
     let server = Server::bind(&config).expect("bind server on an ephemeral port");
     let addr = server.local_addr().to_string();

@@ -32,6 +32,10 @@ import sys
 
 REL_TOLERANCE = 1.2  # fresh budget fraction may exceed baseline by <= 20%
 
+# Baselines found to be provisional placeholders this run; named in the
+# final verdict line so CI logs show at a glance which bars are unarmed.
+PROVISIONAL = []
+
 
 def load(path, required):
     try:
@@ -50,12 +54,14 @@ def load(path, required):
 
 def is_provisional(baseline, path):
     if baseline is not None and baseline.get("provisional"):
+        PROVISIONAL.append(path)
         print(
             f"note: baseline `{path}` is provisional (placeholder numbers); "
             "skipping relative checks.\n"
             "      To promote real numbers: run the bench with "
-            "FOPIM_BENCH_JSON=<fresh>.json, then copy the fresh record over "
-            "the committed baseline and drop its `provisional` field."
+            "FOPIM_BENCH_JSON=<fresh>.json, then "
+            "`python3 scripts/promote_bench.py` (strips the `provisional` "
+            "marker and rewrites the committed baseline)."
         )
         return True
     return False
@@ -135,6 +141,14 @@ def main():
     failures = []
     failures += check_fig14(args.fig14, args.fig14_baseline or "")
     failures += check_convergence(args.convergence, args.convergence_baseline or "")
+    if PROVISIONAL:
+        print(
+            "verdict: still provisional (no armed bar): "
+            + ", ".join(PROVISIONAL)
+            + " — promote with scripts/promote_bench.py"
+        )
+    else:
+        print("verdict: all baselines armed (real numbers committed)")
     if failures:
         print("\nperf-regression guard FAILED:", file=sys.stderr)
         for f in failures:

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Promote fresh figure-bench records over committed provisional baselines.
+
+The committed baselines (``rust/BENCH_fig14.json``,
+``rust/BENCH_convergence.json``) start life as ``"provisional": 1``
+placeholders: they hold the record *shape* so ``check_bench.py`` can run,
+but no real hardware numbers. After a bench run on the machine that
+should define the bar::
+
+    cd rust
+    FOPIM_BENCH_JSON=BENCH_fig14.fresh.json cargo bench --bench fig14
+    FOPIM_BENCH_JSON=BENCH_convergence.fresh.json cargo bench --bench convergence
+    python3 ../scripts/promote_bench.py --dir .
+
+this script finds every ``BENCH_*.fresh.json``, strips the fresh record's
+``provisional`` marker (if any) and writes it over the matching committed
+baseline — turning the placeholder into an armed perf-regression bar.
+Commit the rewritten baselines to make the promotion stick.
+
+Safety rails:
+
+* a baseline that is **not** provisional is real data; overwriting it
+  needs an explicit ``--force`` (otherwise the file is skipped loudly),
+* ``--dry-run`` prints what would happen without touching anything,
+* a fresh record that is not valid JSON aborts before any write.
+
+Stdlib only — no pip installs.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+FRESH_SUFFIX = ".fresh.json"
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"error: `{path}` is not valid JSON: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def promote(fresh_path, force, dry_run):
+    """Promote one fresh record. Returns (promoted, skipped_real)."""
+    baseline_path = fresh_path[: -len(FRESH_SUFFIX)] + ".json"
+    fresh = load(fresh_path)
+    if fresh is None:
+        print(f"error: fresh record `{fresh_path}` not found", file=sys.stderr)
+        sys.exit(2)
+    fresh.pop("provisional", None)
+
+    baseline = load(baseline_path)
+    if baseline is not None and not baseline.get("provisional") and not force:
+        print(
+            f"skip: `{baseline_path}` already holds real (non-provisional) "
+            "numbers; rerun with --force to overwrite"
+        )
+        return (False, True)
+
+    if baseline is None:
+        state = "missing baseline"
+    elif baseline.get("provisional"):
+        state = "provisional placeholder"
+    else:
+        state = "real baseline (--force)"
+    if dry_run:
+        print(f"would promote: {fresh_path} -> {baseline_path} ({state})")
+        return (True, False)
+    with open(baseline_path, "w", encoding="utf-8") as f:
+        json.dump(fresh, f)
+        f.write("\n")
+    print(f"promoted: {fresh_path} -> {baseline_path} ({state})")
+    return (True, False)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--dir",
+        default="rust",
+        help="directory holding BENCH_*.fresh.json records (default: rust)",
+    )
+    ap.add_argument(
+        "--force",
+        action="store_true",
+        help="overwrite baselines that already hold real numbers",
+    )
+    ap.add_argument(
+        "--dry-run", action="store_true", help="print actions without writing"
+    )
+    args = ap.parse_args()
+
+    pattern = os.path.join(args.dir, "BENCH_*" + FRESH_SUFFIX)
+    fresh_paths = sorted(glob.glob(pattern))
+    if not fresh_paths:
+        print(f"error: no records matching `{pattern}`; run the benches with "
+              "FOPIM_BENCH_JSON=<name>.fresh.json first", file=sys.stderr)
+        return 2
+
+    promoted = skipped = 0
+    for fresh_path in fresh_paths:
+        did, skip = promote(fresh_path, args.force, args.dry_run)
+        promoted += did
+        skipped += skip
+    verb = "would promote" if args.dry_run else "promoted"
+    print(f"done: {verb} {promoted} baseline(s), skipped {skipped} real baseline(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
